@@ -1,0 +1,68 @@
+"""Paper Fig. 4(b)/5(b): communication-to-computation ratio.
+
+Claim (§4): at τ=2, Overlap-Local-SGD reduces the ratio from 34.6% (fully-
+sync) to 1.5%. We reproduce it with the calibrated runtime model, then
+re-derive the same quantity for the LLM workloads from the dry-run's
+collective bytes (the beyond-paper part: the paper's comm constants replaced
+by roofline terms from the compiled artifacts)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+from repro.core.runtime_model import RuntimeConfig, epoch_summary
+
+STEPS_PER_EPOCH = 24
+RT = RuntimeConfig(m=16, t_step=4.6 / STEPS_PER_EPOCH, t_comm=1.5 / STEPS_PER_EPOCH, t_handshake=0.02)
+
+
+def run(quick: bool = False):
+    rows = []
+    for algo, tau in (("sync_sgd", 1), ("powersgd", 1), ("local_sgd", 2), ("local_sgd", 8), ("overlap_local_sgd", 2), ("overlap_local_sgd", 8), ("cocod", 2)):
+        s = epoch_summary(algo, tau, STEPS_PER_EPOCH, RT)
+        rows.append(dict(kind="paper_calibrated", **s))
+    # dry-run-derived: exposed-comm ratio for the train_4k pairs
+    for path in sorted(glob.glob("experiments/dryrun/*train_4k*16-16.json")):
+        d = json.load(open(path))
+        roof = d["roofline"]
+        compute = max(roof["compute_s"], roof["memory_s"])  # per-round critical path proxy
+        comm = roof["collective_s"]
+        boundary_coll = d.get("composed", {}).get("parts", {}).get("boundary", {}).get("coll", 0)
+        rows.append(
+            dict(
+                kind="dryrun",
+                algo=d.get("algorithm", "overlap_local_sgd"),
+                arch=d["arch"],
+                comm_ratio=comm / max(compute, 1e-12),
+                anchor_bytes=boundary_coll,
+                epoch_time=None,
+            )
+        )
+    return rows
+
+
+def main(emit):
+    rows = run()
+    for r in rows:
+        if r["kind"] == "paper_calibrated":
+            emit(
+                csv_row(
+                    f"fig4/{r['algo']}/tau{r['tau']}",
+                    r["epoch_time"] * 1e6,
+                    f"comm_ratio={r['comm_ratio']:.4f};exposed_comm_s={r['exposed_comm']:.3f}",
+                )
+            )
+        else:
+            emit(csv_row(f"fig4/dryrun/{r['arch']}", 0.0, f"collective_vs_dominant={r['comm_ratio']:.4f};anchor_coll_bytes={r['anchor_bytes']:.3e}"))
+    sync = next(r for r in rows if r.get("algo") == "sync_sgd")
+    ours = next(r for r in rows if r.get("algo") == "overlap_local_sgd" and r.get("tau") == 2)
+    emit(
+        csv_row(
+            "fig4/check/headline",
+            0.0,
+            f"sync_ratio={sync['comm_ratio']:.3f}(paper 0.346);overlap_tau2_ratio={ours['comm_ratio']:.3f}(paper 0.015)",
+        )
+    )
+    return rows

@@ -1,0 +1,82 @@
+"""Kernel microbenchmarks.
+
+On this CPU-only container the Pallas kernels execute in interpret mode
+(orders of magnitude slower than compiled; correctness only), so the timed
+numbers are the jnp reference paths under jit — the same code the dry-run
+lowers — plus derived arithmetic throughput. The Pallas variants are timed
+once in interpret mode purely to prove the harness runs them end-to-end.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels.anchor_mix import ref as am_ref
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rmsnorm import ref as rms_ref
+from repro.kernels.rwkv6_wkv import ref as wkv_ref
+from repro.kernels.ssd_scan import ref as ssd_ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    b, s, h, d = 2, 512, 8, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, 2, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, 2, d)).astype(np.float32))
+    f = jax.jit(lambda q, k, v: fa_ref.chunked_mha(q, k, v, block_q=128, block_k=128))
+    us = _time(f, q, k, v)
+    flops = 4 * b * h * s * s * d
+    rows.append(("kernel/flash_attention_chunked_512", us, f"gflops={flops/us/1e3:.1f}"))
+
+    x = jnp.asarray(rng.normal(size=(4096, 2048)).astype(np.float32))
+    sc = jnp.asarray(rng.normal(size=(2048,)).astype(np.float32))
+    us = _time(jax.jit(rms_ref.rmsnorm), x, sc)
+    rows.append(("kernel/rmsnorm_4096x2048", us, f"gbps={(x.size*2*4)/us/1e3:.1f}"))
+
+    xs = jnp.asarray(rng.normal(size=(2, 256, 8, 32)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(2, 256, 8))).astype(np.float32))
+    A = jnp.asarray(-np.abs(rng.normal(size=(8,))).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(2, 256, 1, 16)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(2, 256, 1, 16)).astype(np.float32))
+    Dp = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    f = jax.jit(lambda *a: ssd_ref.ssd_chunked(*a, chunk=64)[0])
+    us = _time(f, xs, dt, A, B, C, Dp)
+    rows.append(("kernel/ssd_scan_256", us, "chunk=64"))
+
+    r = jnp.asarray(rng.normal(size=(2, 256, 4, 32)).astype(np.float32))
+    kk = jnp.asarray(rng.normal(size=(2, 256, 4, 32)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(2, 256, 4, 32)).astype(np.float32))
+    w = jnp.asarray(0.3 + 0.69 * rng.random((2, 256, 4, 32)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    f = jax.jit(lambda *a: wkv_ref.wkv_chunked(*a, chunk=32)[0])
+    us = _time(f, r, kk, vv, w, u)
+    rows.append(("kernel/rwkv6_wkv_256", us, "chunk=32"))
+
+    xa = jnp.asarray(rng.normal(size=(1 << 20,)).astype(np.float32))
+    za = jnp.asarray(rng.normal(size=(1 << 20,)).astype(np.float32))
+    f = jax.jit(lambda x, z: am_ref.anchor_mix(x, z, 0.6))
+    us = _time(f, xa, za)
+    rows.append(("kernel/anchor_mix_1M", us, f"gbps={(3*xa.size*4)/us/1e3:.1f}"))
+    return rows
+
+
+def main(emit):
+    for name, us, derived in run():
+        emit(csv_row(name, us, derived))

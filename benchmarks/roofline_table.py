@@ -1,0 +1,68 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+BOTTLENECK_HINTS = {
+    "compute": "increase per-chip work (bigger microbatch) or quantize",
+    "memory": "fuse elementwise chains / wider microbatch to raise arithmetic intensity",
+    "collective": "shrink anchor payload (reduce-scatter sharding) or raise tau",
+}
+
+
+def rows(dirpath="experiments/dryrun"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        d = json.load(open(path))
+        r = d["roofline"]
+        out.append(
+            dict(
+                arch=d["arch"],
+                shape=d["shape"],
+                mesh=d["mesh"],
+                variant=d.get("variant", "faithful"),
+                algorithm=d.get("algorithm", "-"),
+                compute_s=r["compute_s"],
+                memory_s=r["memory_s"],
+                collective_s=r["collective_s"],
+                dominant=r["dominant"],
+                useful=d.get("useful_flops_ratio"),
+                peak_gb=d["memory"]["peak_per_device"] / 1e9,
+                fits=d["memory"].get("fits_hbm_16g"),
+            )
+        )
+    return out
+
+
+def main(emit):
+    for r in rows():
+        emit(
+            csv_row(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                r[r["dominant"] + "_s"] * 1e6,
+                (
+                    f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+                    f"collective_s={r['collective_s']:.4f};dominant={r['dominant']};"
+                    f"useful_flops_ratio={r['useful'] if r['useful'] is None else round(r['useful'],3)};"
+                    f"peak_gb={r['peak_gb']:.1f};variant={r['variant']}"
+                ),
+            )
+        )
+
+
+def markdown_table(dirpath="experiments/dryrun") -> str:
+    lines = [
+        "| arch | shape | mesh | variant | compute (s) | memory (s) | collective (s) | dominant | MODEL/HLO flops | peak GB/dev | one-line action |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(dirpath):
+        useful = f"{r['useful']:.2f}" if r["useful"] else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['variant']} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['dominant']}** | {useful} | {r['peak_gb']:.1f} | {BOTTLENECK_HINTS[r['dominant']]} |"
+        )
+    return "\n".join(lines)

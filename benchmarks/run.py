@@ -1,0 +1,28 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import fig1_error_runtime, fig4_comm_ratio, kernel_bench, roofline_table, table1_iid, table2_noniid, theorem1_rate
+
+    def emit(line: str) -> None:
+        print(line, flush=True)
+
+    emit("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in (kernel_bench, theorem1_rate, fig4_comm_ratio, roofline_table, table1_iid, table2_noniid, fig1_error_runtime):
+        name = mod.__name__.split(".")[-1]
+        t = time.time()
+        try:
+            mod.main(emit)
+            emit(f"bench/{name}/elapsed,{(time.time()-t)*1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            emit(f"bench/{name}/elapsed,{(time.time()-t)*1e6:.0f},FAILED:{type(e).__name__}:{e}")
+    emit(f"bench/total_elapsed,{(time.time()-t0)*1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 1: Local-SGD-variant comparison, IID partitions.
+
+Grid: {CoCoD-SGD, EAMSGD, Overlap-Local-SGD} × τ ∈ {1,2,8,24}, plus the
+fully-synchronous SGD reference. The paper's claims to validate:
+  (a) Ours ≥ CoCoD ≥ EAMSGD at every τ;
+  (b) accuracy degrades as τ grows (error–communication tradeoff);
+  (c) Ours at τ∈{1,2} matches or beats fully-sync SGD.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, train_run
+
+TAUS = (1, 2, 8, 24)
+ALGOS = (("cocod", {}), ("easgd", {"alpha": 0.043}), ("overlap_local_sgd", {}))
+# EASGD's stability requires alpha ~ O(1/m) for its symmetric update ([19]
+# uses beta/m with beta<1); 0.043 ≈ 0.7/16 mirrors the original tuning.
+
+
+def run(quick: bool = False):
+    rows = []
+    sync = train_run("sync_sgd", 1)
+    rows.append(dict(algo="sync_sgd", tau=1, acc=sync.test_acc, wall_s=sync.wall_s))
+    for algo, kw in ALGOS:
+        for tau in TAUS:
+            r = train_run(algo, tau, **kw)
+            rows.append(dict(algo=algo, tau=tau, acc=r.test_acc, wall_s=r.wall_s))
+    return rows
+
+
+def main(emit):
+    rows = run()
+    by = {(r["algo"], r["tau"]): r["acc"] for r in rows}
+    for r in rows:
+        emit(csv_row(f"table1/{r['algo']}/tau{r['tau']}", r["wall_s"] * 1e6, f"test_acc={r['acc']:.4f}"))
+    # headline checks
+    for tau in TAUS:
+        ours, cocod, eam = by[("overlap_local_sgd", tau)], by[("cocod", tau)], by[("easgd", tau)]
+        emit(csv_row(f"table1/check/tau{tau}", 0.0, f"ours={ours:.4f};cocod={cocod:.4f};eamsgd={eam:.4f};ours_best={ours >= max(cocod, eam) - 0.005}"))
+    emit(csv_row("table1/check/sync_ref", 0.0, f"sync={by[('sync_sgd', 1)]:.4f};ours_tau2={by[('overlap_local_sgd', 2)]:.4f}"))
+    return rows

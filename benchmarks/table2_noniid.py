@@ -1,0 +1,49 @@
+"""Paper Table 2: the same grid under NON-IID partitions (64% single-class
+per worker, the paper's construction). Claims to validate:
+  (a) Overlap-Local-SGD stays stable at large τ where CoCoD degrades/diverges;
+  (b) Local-SGD variants can beat fully-sync SGD here (paper: 91.5% vs 85.9%).
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import csv_row, train_run
+
+TAUS = (1, 2, 8, 24)
+ALGOS = (("cocod", {}), ("easgd", {"alpha": 0.043}), ("overlap_local_sgd", {}))
+
+
+def run(quick: bool = False):
+    rows = []
+    sync = train_run("sync_sgd", 1, noniid=True)
+    rows.append(dict(algo="sync_sgd", tau=1, acc=sync.test_acc, diverged=False, wall_s=sync.wall_s))
+    for algo, kw in ALGOS:
+        for tau in TAUS:
+            r = train_run(algo, tau, noniid=True, **kw)
+            diverged = not math.isfinite(r.losses[-1]) or r.losses[-1] > 2 * r.losses[0]
+            rows.append(dict(algo=algo, tau=tau, acc=r.test_acc, diverged=diverged, wall_s=r.wall_s))
+    return rows
+
+
+def main(emit):
+    rows = run()
+    by = {(r["algo"], r["tau"]): r for r in rows}
+    for r in rows:
+        emit(
+            csv_row(
+                f"table2/{r['algo']}/tau{r['tau']}",
+                r["wall_s"] * 1e6,
+                f"test_acc={r['acc']:.4f};diverged={r['diverged']}",
+            )
+        )
+    for tau in (8, 24):
+        ours = by[("overlap_local_sgd", tau)]
+        cocod = by[("cocod", tau)]
+        emit(
+            csv_row(
+                f"table2/check/tau{tau}",
+                0.0,
+                f"ours_stable={not ours['diverged']};ours={ours['acc']:.4f};cocod={cocod['acc']:.4f}",
+            )
+        )
+    return rows

@@ -1,0 +1,92 @@
+"""End-to-end LM pretraining driver with Overlap-Local-SGD.
+
+Trains a decoder-only transformer (reduced Qwen2-family block structure) on
+the synthetic bigram-structured token stream for a few hundred rounds, with
+checkpointing. Presets:
+
+    --preset tiny   ~3M params,  m=4,  runs in ~2 min on CPU (default)
+    --preset 100m   ~100M params, m=8 — the "real" config for a TPU slice
+                    (runs on CPU too, just slowly; same code path)
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.config import AlgoConfig, AttentionConfig, ModelConfig, OptimizerConfig
+from repro.core import make_algorithm
+from repro.data import lm_batch_stream, stack_lm_batches
+from repro.models import transformer as T
+from repro.optim import from_config as opt_from_config, schedules
+from repro.training import make_round_step, make_train_state
+
+PRESETS = dict(
+    tiny=dict(layers=4, d_model=128, d_ff=512, heads=4, kv=2, vocab=512, m=4, batch=8, seq=128),
+    m100=dict(layers=12, d_model=768, d_ff=3072, heads=12, kv=4, vocab=32000, m=8, batch=8, seq=512),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--alpha", type=float, default=0.6)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt.npz")
+    args = ap.parse_args()
+    p = PRESETS[args.preset if args.preset != "100m" else "m100"]
+
+    cfg = ModelConfig(
+        name=f"lm-{args.preset}",
+        family="dense",
+        num_layers=p["layers"],
+        d_model=p["d_model"],
+        d_ff=p["d_ff"],
+        vocab_size=p["vocab"],
+        attention=AttentionConfig(num_heads=p["heads"], num_kv_heads=p["kv"], head_dim=p["d_model"] // p["heads"], qkv_bias=True),
+        dtype="float32",
+    )
+    params, axes = T.init_model(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params, {p['m']} Overlap-Local-SGD workers, tau={args.tau}")
+
+    algo = make_algorithm(AlgoConfig(name="overlap_local_sgd", tau=args.tau, alpha=args.alpha, anchor_beta=0.7))
+    opt = opt_from_config(OptimizerConfig(name="adamw", lr=3e-3, weight_decay=0.01))
+    state = make_train_state(params, p["m"], opt, algo, axes)
+    sched = schedules.cosine(3e-3, warmup_steps=20, total_steps=args.steps)
+
+    def loss_fn(prm, batch):
+        return T.lm_loss(cfg, prm, batch)
+
+    step = jax.jit(make_round_step(loss_fn, opt, algo, sched, axes))
+    streams = [lm_batch_stream(p["batch"], p["seq"], p["vocab"], seed=i) for i in range(p["m"])]
+    stream = stack_lm_batches(streams, p["m"])
+
+    t0 = time.time()
+    for r in range(args.steps // args.tau):
+        micro = []
+        for _ in range(args.tau):
+            toks, tgts = next(stream)
+            micro.append(dict(tokens=jnp.asarray(toks), targets=jnp.asarray(tgts)))
+        rb = jax.tree.map(lambda *xs: jnp.stack(xs), *micro)
+        state, ms = step(state, rb)
+        if r % 10 == 0:
+            loss = float(np.asarray(ms["loss"]).mean())
+            print(f"round {r:4d}  loss {loss:.4f}  ({(time.time()-t0):.0f}s)")
+    checkpoint.save(args.ckpt, state)
+    print(f"done: final loss {float(np.asarray(ms['loss']).mean()):.4f} "
+          f"(vs ln(V)={np.log(p['vocab']):.2f} random); checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

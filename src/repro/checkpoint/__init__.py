@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import restore, save
+
+__all__ = ["restore", "save"]

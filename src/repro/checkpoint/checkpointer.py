@@ -1,0 +1,64 @@
+"""Pytree checkpointing to .npz (path-keyed, dtype/shape-preserving).
+
+Handles the full TrainState (stacked params, optimizer state, anchor,
+counters). NamedTuples are stored with their field path; restore rebuilds
+into a caller-provided template tree so custom containers round-trip.
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no bf16: widen losslessly
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def restore(path: str, template: Any) -> Any:
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(_path_str(pp) for pp in p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = arrays[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    _, tdef = jax.tree_util.tree_flatten(template)
+    return jax.tree_util.tree_unflatten(tdef, leaves)

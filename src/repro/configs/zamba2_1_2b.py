@@ -1,0 +1,45 @@
+"""Zamba2-1.2B [arXiv:2411.15242] — Mamba2 backbone with a weight-shared
+attention block interleaved (every 7th position here; the released model
+shares one transformer block invoked periodically — we keep the shared-
+weights property, dropping only the per-invocation LoRA deltas, noted in
+DESIGN.md)."""
+from repro.config import (
+    ArchConfig,
+    AttentionConfig,
+    ModelConfig,
+    ParallelPlan,
+    SSMConfig,
+    register,
+)
+
+_PATTERN = tuple("shared_attn" if i % 7 == 6 else "mamba2" for i in range(38))
+
+MODEL = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    d_ff=8192,
+    vocab_size=32000,
+    attention=AttentionConfig(
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        sliding_window=4096,  # keeps long_500k serveable; full attn within 4k
+        rope_theta=10000.0,
+    ),
+    ssm=SSMConfig(kind="mamba2", state_dim=64, num_heads=64, head_dim=64, expand=2, conv_width=4, chunk_size=128),
+    layer_pattern=_PATTERN,
+    shared_attn_every=7,
+    tie_embeddings=True,
+    source="arXiv:2411.15242",
+)
+
+ARCH = register(
+    ArchConfig(
+        model=MODEL,
+        plans={"default": ParallelPlan(workers=16, fsdp=1, tensor=16)},
+        train_microbatch=8,
+        long_context_policy="native",  # SSM state + windowed shared-attn
+    )
+)

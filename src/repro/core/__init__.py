@@ -1,0 +1,24 @@
+from repro.core.algorithms import (
+    Algorithm,
+    AlgoVars,
+    CoCoDSGD,
+    EASGD,
+    LocalSGD,
+    OverlapLocalSGD,
+    SyncSGD,
+    make_algorithm,
+)
+from repro.core import mixing, runtime_model
+
+__all__ = [
+    "Algorithm",
+    "AlgoVars",
+    "CoCoDSGD",
+    "EASGD",
+    "LocalSGD",
+    "OverlapLocalSGD",
+    "SyncSGD",
+    "make_algorithm",
+    "mixing",
+    "runtime_model",
+]

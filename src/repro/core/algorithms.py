@@ -1,0 +1,252 @@
+"""Distributed-optimization algorithms: Overlap-Local-SGD and all baselines
+the paper compares against.
+
+State layout (matches DESIGN.md §3): per-worker quantities carry a leading
+worker axis m; the anchor z (and its momentum v) are *unstacked* — they are
+identical across workers by construction, so on a mesh they are stored fully
+sharded (worker+fsdp axes) and materialize only inside the pullback.
+
+Each algorithm is a small set of pure hooks consumed by the round engine in
+``repro.training.train_loop``:
+
+    transform_grads(g_stacked)     per local step (sync-SGD/PowerSGD live here)
+    boundary(x, opt, vars, cfg)    every τ steps (pullback / averaging / anchor sync)
+
+The overlap property is *structural*: ``boundary`` for Overlap-Local-SGD
+first applies the pullback using the anchor computed at the PREVIOUS
+boundary (paper eq. (4) with z_k), then computes the new anchor mean (eq.
+(5)) whose only consumer is the NEXT round's pullback — τ local steps of
+compute sit between the reduce-scatter and its consumer, which is exactly
+the window XLA's latency-hiding scheduler uses to run the collective in the
+background (the paper's "communication thread").
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AlgoConfig
+from repro.kernels.anchor_mix import ops as anchor_ops
+from repro.parallel import anchor_axes, constrain, current_mesh, sharding_for, spec_for
+from repro.utils.tree import tree_lerp
+
+
+class AlgoVars(NamedTuple):
+    """Algorithm-specific slots (unused slots are empty dicts/None)."""
+
+    z: Any = None  # anchor model (overlap, easgd) — unstacked
+    v: Any = None  # anchor momentum (overlap momentum variant)
+    extra: Any = None  # powersgd (Q, error) / cocod pending average
+
+
+def _worker_mean(x_stacked):
+    """Average over the worker axis; on a mesh this is the paper's model
+    all-reduce (lowered as reduce-scatter when the consumer is sharded)."""
+    return jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0).astype(t.dtype), x_stacked)
+
+
+def _broadcast_like(z, x_stacked):
+    return jax.tree.map(lambda zi, xi: jnp.broadcast_to(zi[None], xi.shape), z, x_stacked)
+
+
+def _constrain_anchor(z, axes_tree):
+    """Pin the anchor to its fully-sharded layout (reduce-scatter target)."""
+    mesh = current_mesh()
+    if mesh is None or axes_tree is None:
+        return z
+    from repro.parallel.sharding import fit_spec, spec_for
+    from jax.sharding import NamedSharding
+
+    a_axes = anchor_axes(axes_tree)
+
+    def one(t, ax):
+        spec = fit_spec(spec_for(ax), t.shape, mesh)
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        one,
+        z,
+        a_axes,
+        is_leaf=lambda t: isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t),
+    )
+
+
+def _pullback(x_stacked, z, alpha: float):
+    """Paper eq. (4): x_i ← (1−α)·x_i + α·z, for every worker i (fused
+    anchor-mix kernel on TPU)."""
+    return jax.vmap(lambda xi: anchor_ops.pullback_tree(xi, z, alpha))(x_stacked)
+
+
+class Algorithm:
+    """Base: plain Local SGD behaviour is 'do nothing' hooks."""
+
+    name = "base"
+    needs_anchor = False
+
+    def __init__(self, cfg: AlgoConfig):
+        self.cfg = cfg
+        self.tau = cfg.tau
+
+    # ---- state ----
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        return AlgoVars()
+
+    # ---- per-step hook ----
+    def transform_grads(self, grads_stacked, vars: AlgoVars):
+        return grads_stacked, vars
+
+    # ---- per-round hook ----
+    def boundary(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        return x_stacked, vars
+
+    def metrics(self, x_stacked, vars: AlgoVars) -> dict:
+        mean = _worker_mean(x_stacked)
+        dev = jax.tree.map(lambda xi, mi: jnp.sum(jnp.square(xi.astype(jnp.float32) - mi[None].astype(jnp.float32))), x_stacked, mean)
+        total = sum(jax.tree.leaves(dev)) / max(x_stacked_leading(x_stacked), 1)
+        return {"consensus_dist": total}
+
+
+def x_stacked_leading(x_stacked) -> int:
+    leaves = jax.tree.leaves(x_stacked)
+    return int(leaves[0].shape[0]) if leaves else 1
+
+
+# ---------------------------------------------------------------------------
+
+
+class SyncSGD(Algorithm):
+    """Fully synchronous SGD: gradients averaged across workers every step."""
+
+    name = "sync_sgd"
+
+    def __init__(self, cfg: AlgoConfig):
+        super().__init__(cfg)
+        self.tau = 1
+
+    def transform_grads(self, grads_stacked, vars):
+        g = _worker_mean(grads_stacked)
+        return _broadcast_like(g, grads_stacked), vars
+
+
+class LocalSGD(Algorithm):
+    """Periodic model averaging (blocking) — eq. (2) of the paper."""
+
+    name = "local_sgd"
+
+    def boundary(self, x_stacked, vars, axes_tree=None):
+        avg = _worker_mean(x_stacked)
+        return _broadcast_like(avg, x_stacked), vars
+
+
+class OverlapLocalSGD(Algorithm):
+    """The paper's algorithm (+ momentum variant when anchor_beta > 0).
+
+    boundary order (one jitted program per round, or a scan of rounds):
+      1. pullback with the anchor from the PREVIOUS boundary   (eq. 4, no comm)
+      2. new anchor = mean over workers of pulled-back models  (eq. 5)
+         — momentum variant: v ← β·v + (mean − z); z ← z + v   (eqs. 10–11)
+      3. the new anchor's first consumer is next round's pullback
+         ⇒ the collective overlaps the next τ local steps.
+    """
+
+    name = "overlap_local_sgd"
+    needs_anchor = True
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        z = jax.tree.map(lambda t: t[0], x_stacked)  # all workers initialized equal
+        z = _constrain_anchor(z, axes_tree)
+        v = None
+        if self.cfg.anchor_beta > 0:
+            v = jax.tree.map(jnp.zeros_like, z)
+        return AlgoVars(z=z, v=v)
+
+    def boundary(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        alpha = self.cfg.alpha
+        z_stale = vars.z
+        # (1) pullback toward the stale anchor — local, no communication
+        x_new = _pullback(x_stacked, z_stale, alpha)
+        # (2) anchor sync (overlapped): consumed only at the next boundary
+        mean_x = _worker_mean(x_new)
+        if vars.v is not None:
+            beta = self.cfg.anchor_beta
+            v_new = jax.tree.map(
+                lambda v, m, z: (beta * v.astype(jnp.float32) + (m.astype(jnp.float32) - z.astype(jnp.float32))).astype(v.dtype),
+                vars.v,
+                mean_x,
+                z_stale,
+            )
+            z_new = jax.tree.map(lambda z, v: (z.astype(jnp.float32) + v.astype(jnp.float32)).astype(z.dtype), z_stale, v_new)
+        else:
+            v_new = None
+            z_new = mean_x
+        z_new = _constrain_anchor(z_new, axes_tree)
+        return x_new, AlgoVars(z=z_new, v=v_new, extra=vars.extra)
+
+
+class EASGD(Algorithm):
+    """Elastic-averaging SGD [19] (EAMSGD when the local optimizer has
+    momentum): symmetric doubly-stochastic mixing between local models and
+    the anchor, z updated with moving rate — communication is blocking in
+    the original formulation."""
+
+    name = "easgd"
+    needs_anchor = True
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        z = jax.tree.map(lambda t: t[0], x_stacked)
+        return AlgoVars(z=_constrain_anchor(z, axes_tree))
+
+    def boundary(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        alpha = self.cfg.alpha
+        z = vars.z
+        x_new = _pullback(x_stacked, z, alpha)
+        # symmetric update: z ← z + α·Σ_i (x_i − z) = (1−mα)z + mα·mean(x)
+        m = x_stacked_leading(x_stacked)
+        rate = min(alpha * m, 1.0)
+        mean_x = _worker_mean(x_stacked)  # pre-pullback models (symmetric W)
+        z_new = tree_lerp(z, mean_x, rate)
+        z_new = _constrain_anchor(z_new, axes_tree)
+        return x_new, AlgoVars(z=z_new, v=None, extra=vars.extra)
+
+
+class CoCoDSGD(Algorithm):
+    """CoCoD-SGD [20]: at each boundary, relaunch an average of the round's
+    *starting* models while local deltas accumulate; apply
+    x_i ← avg(x_start) + (x_i − x_start_i). Decoupled like Overlap-Local-SGD
+    but without the pullback contraction."""
+
+    name = "cocod"
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        # extra = x at the start of the current round (consumed at boundary)
+        return AlgoVars(extra=jax.tree.map(jnp.copy, x_stacked))
+
+    def boundary(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        x_start = vars.extra
+        avg_start = _worker_mean(x_start)  # the overlapped collective
+        x_new = jax.tree.map(
+            lambda xi, xs, av: (av[None].astype(jnp.float32) + xi.astype(jnp.float32) - xs.astype(jnp.float32)).astype(xi.dtype),
+            x_stacked,
+            x_start,
+            avg_start,
+        )
+        return x_new, AlgoVars(extra=jax.tree.map(jnp.copy, x_new))
+
+
+def make_algorithm(cfg: AlgoConfig) -> Algorithm:
+    table = {
+        "overlap_local_sgd": OverlapLocalSGD,
+        "local_sgd": LocalSGD,
+        "sync_sgd": SyncSGD,
+        "easgd": EASGD,
+        "cocod": CoCoDSGD,
+    }
+    if cfg.name == "powersgd":
+        from repro.core.powersgd import PowerSGD
+
+        return PowerSGD(cfg)
+    if cfg.name not in table:
+        raise ValueError(f"unknown algorithm {cfg.name!r}; known: {sorted(table) + ['powersgd']}")
+    return table[cfg.name](cfg)

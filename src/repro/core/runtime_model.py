@@ -1,0 +1,137 @@
+"""Wall-clock runtime model for the error–runtime tradeoff (paper Figs. 1/4/5).
+
+Simulates per-worker clocks under a straggler model and a communication
+model, for every algorithm in the comparison. This is how the paper's
+runtime claims are validated quantitatively on CPU-only hardware: the
+*convergence* curves come from real training runs; the *time axis* comes
+from this model, calibrated with the paper's own measured constants
+(ResNet-18/CIFAR-10 on 16 × Titan X over 40 Gbps Ethernet):
+
+    compute ≈ 4.6 s/epoch  (24-25 steps/epoch ⇒ ~0.19 s/step)
+    fully-sync all-reduce ≈ 1.5 s/epoch (comm/compute ≈ 34.6% incl. overhead)
+    PowerSGD rank-1 compresses 243× but keeps the handshake latency.
+
+Blocking semantics per algorithm:
+    sync_sgd   — barrier + blocking all-reduce every step
+    powersgd   — barrier + blocking compressed all-reduce every step
+    local_sgd  — barrier + blocking all-reduce every τ steps
+    easgd      — same barrier structure as local_sgd (z update is synchronous
+                 in [19] when run without its (rare) async variant)
+    overlap_local_sgd / cocod — NON-blocking: collective launched at a
+                 boundary is consumed at the next one; a worker only waits if
+                 the collective is still in flight when it arrives there.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+BLOCKING = {"sync_sgd": 1, "powersgd": 1, "local_sgd": None, "easgd": None}
+OVERLAPPED = ("overlap_local_sgd", "cocod")
+
+
+@dataclass
+class RuntimeConfig:
+    m: int = 16
+    t_step: float = 0.19  # mean compute time per local step (s)
+    t_comm: float = 0.065  # full model all-reduce incl. handshake (s)
+    t_handshake: float = 0.02  # fixed latency part of any collective
+    straggle_std: float = 0.0  # lognormal sigma on per-step compute
+    straggle_prob: float = 0.0  # probability of a step slowing by straggle_factor
+    straggle_factor: float = 4.0
+    powersgd_compression: float = 243.0  # rank-1 payload reduction
+    powersgd_codec: float = 0.01  # encode+decode time per step (s)
+    seed: int = 0
+
+
+@dataclass
+class RuntimeResult:
+    total_time: float
+    compute_time: float
+    exposed_comm: float  # communication NOT hidden behind compute
+    idle_time: float  # straggler-induced waiting
+    steps: int
+
+    @property
+    def comm_ratio(self) -> float:
+        return self.exposed_comm / max(self.compute_time, 1e-12)
+
+
+def _step_times(cfg: RuntimeConfig, rng, steps: int) -> np.ndarray:
+    t = np.full((steps, cfg.m), cfg.t_step)
+    if cfg.straggle_std > 0:
+        t *= rng.lognormal(mean=0.0, sigma=cfg.straggle_std, size=(steps, cfg.m))
+    if cfg.straggle_prob > 0:
+        slow = rng.random((steps, cfg.m)) < cfg.straggle_prob
+        t = np.where(slow, t * cfg.straggle_factor, t)
+    return t
+
+
+def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig) -> RuntimeResult:
+    rng = np.random.default_rng(cfg.seed)
+    t = _step_times(cfg, rng, steps)
+    m = cfg.m
+
+    comm = cfg.t_comm
+    if algo == "powersgd":
+        comm = cfg.t_handshake + (cfg.t_comm - cfg.t_handshake) / cfg.powersgd_compression + cfg.powersgd_codec
+    if algo == "sync_sgd" or algo == "powersgd":
+        tau = 1
+
+    compute_total = float(t.sum(axis=0).max())  # critical-path compute
+    mean_compute = float(t.sum(axis=0).mean())
+
+    if algo in ("sync_sgd", "powersgd", "local_sgd", "easgd"):
+        # barrier every tau steps, then blocking collective
+        clock = 0.0
+        exposed = 0.0
+        idle = 0.0
+        worker_clock = np.zeros(m)
+        for r in range(steps // tau):
+            seg = t[r * tau : (r + 1) * tau].sum(axis=0)
+            arrive = worker_clock + seg
+            barrier = arrive.max()
+            idle += float((barrier - arrive).sum()) / m
+            clock = barrier + comm
+            exposed += comm
+            worker_clock = np.full(m, clock)
+        return RuntimeResult(clock, mean_compute, exposed, idle, steps)
+
+    if algo in OVERLAPPED:
+        # non-blocking: collective for boundary r completes at
+        # max_i(arrival_r) + comm; worker i blocks at boundary r+1 only if
+        # that completion is later than its own arrival.
+        worker_clock = np.zeros(m)
+        ready = 0.0  # completion time of the in-flight collective
+        exposed = 0.0
+        idle = 0.0
+        rounds = steps // tau
+        for r in range(rounds):
+            seg = t[r * tau : (r + 1) * tau].sum(axis=0)
+            arrive = worker_clock + seg
+            # wait (only) for the previous round's collective
+            stall = np.maximum(ready - arrive, 0.0)
+            exposed += float(stall.max())
+            idle += float(stall.mean())
+            worker_clock = arrive + stall
+            # launch this round's collective once all contributions exist
+            ready = float(worker_clock.max()) + comm
+        total = float(worker_clock.max())
+        return RuntimeResult(total, mean_compute, exposed, idle, steps)
+
+    raise ValueError(algo)
+
+
+def epoch_summary(algo: str, tau: int, steps_per_epoch: int, cfg: RuntimeConfig) -> Dict[str, float]:
+    r = simulate(algo, tau, steps_per_epoch, cfg)
+    return dict(
+        algo=algo,
+        tau=tau,
+        epoch_time=r.total_time,
+        compute=r.compute_time,
+        exposed_comm=r.exposed_comm,
+        comm_ratio=r.comm_ratio,
+        idle=r.idle_time,
+    )

@@ -1,0 +1,14 @@
+from repro.data.partition import partition_iid, partition_noniid, skewness
+from repro.data.pipeline import WorkerBatcher, stack_lm_batches
+from repro.data.synthetic import ClassificationData, lm_batch_stream, make_classification
+
+__all__ = [
+    "ClassificationData",
+    "WorkerBatcher",
+    "lm_batch_stream",
+    "make_classification",
+    "partition_iid",
+    "partition_noniid",
+    "skewness",
+    "stack_lm_batches",
+]

@@ -1,0 +1,65 @@
+"""Sharded host data pipeline.
+
+Produces worker-stacked batches: arrays with leading axis m (one slice per
+Local-SGD worker), matching the worker-stacked training state. On a real
+multi-host deployment each host builds only its local slice and
+``jax.make_array_from_process_local_data`` assembles the global array; on a
+single host we build the full stacked batch and let the sharding place it.
+
+Sampling is *sequential without shuffling within an epoch* to match the
+paper's setup ("evenly partitioned across all nodes and not shuffled").
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.data.synthetic import ClassificationData
+
+
+class WorkerBatcher:
+    """Iterates worker-stacked (x, y) minibatches from per-worker index sets."""
+
+    def __init__(
+        self,
+        data: ClassificationData,
+        parts: List[np.ndarray],
+        batch_per_worker: int,
+        seed: int = 0,
+        reshuffle_each_epoch: bool = False,
+    ):
+        self.data = data
+        self.parts = [np.asarray(p) for p in parts]
+        self.b = batch_per_worker
+        self.m = len(parts)
+        self.rng = np.random.default_rng(seed)
+        self.reshuffle = reshuffle_each_epoch
+        self._pos = [0] * self.m
+
+    def steps_per_epoch(self) -> int:
+        return min(len(p) for p in self.parts) // self.b
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        xs, ys = [], []
+        for i in range(self.m):
+            part = self.parts[i]
+            if self._pos[i] + self.b > len(part):
+                self._pos[i] = 0
+                if self.reshuffle:
+                    self.rng.shuffle(part)
+            sl = part[self._pos[i] : self._pos[i] + self.b]
+            self._pos[i] += self.b
+            xs.append(self.data.x[sl])
+            ys.append(self.data.y[sl])
+        return np.stack(xs), np.stack(ys)
+
+
+def stack_lm_batches(streams, m: int):
+    """Zip m per-worker LM token streams into worker-stacked batches."""
+    while True:
+        toks, tgts = zip(*[next(s) for s in streams])
+        yield np.stack(toks), np.stack(tgts)

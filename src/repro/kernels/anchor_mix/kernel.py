@@ -1,0 +1,44 @@
+"""Fused anchor-pullback Pallas TPU kernel — the paper's core update, eq. (4):
+
+    x ← (1 − α)·x + α·z
+
+applied to every parameter shard at a round boundary. XLA would emit two
+elementwise passes (scale + add) over HBM for naive code, or one fused pass
+if it fuses — we make the single pass *structural*: one read of x, one read
+of z, one write, tiled through VMEM in (8·128)-aligned blocks. The op is
+purely memory-bound (arithmetic intensity 3 flops / 6 bytes in bf16), so the
+kernel's value is guaranteeing exactly 3·bytes traffic at the round boundary
+(the pullback sits on the critical path between rounds — see §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(x_ref, z_ref, o_ref, *, alpha: float):
+    x = x_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    o_ref[...] = ((1.0 - alpha) * x + alpha * z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block", "interpret"))
+def anchor_mix_flat(x, z, *, alpha: float, block: int = 1 << 16, interpret: bool = False):
+    """x, z: flat (n,) arrays (n % 128 == 0 after ops-side padding)."""
+    (n,) = x.shape
+    block = min(block, n)
+    grid = (pl.cdiv(n, block),)
+    return pl.pallas_call(
+        functools.partial(_mix_kernel, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x, z)

@@ -1,0 +1,35 @@
+"""Public wrapper for the anchor-mix kernel: pytree-level pullback.
+
+``pullback_tree(x_tree, z_tree, alpha)`` applies the paper's eq. (4) to every
+leaf. On TPU each leaf is flattened, padded to the 128-lane boundary and run
+through the fused kernel; elsewhere the jnp oracle is used (and XLA fuses it
+into the surrounding round program — important for the dry-run, where the
+pullback must stay fusable with the anchor all-gather).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flags
+from repro.kernels.anchor_mix import kernel as _k
+from repro.kernels.anchor_mix import ref as _ref
+
+
+def anchor_mix(x, z, alpha: float):
+    if not flags.use_pallas():
+        return _ref.anchor_mix(x, z, alpha)
+    shape = x.shape
+    n = x.size
+    pad = (-n) % 128
+    xf = jnp.pad(x.reshape(-1), (0, pad))
+    zf = jnp.pad(z.reshape(-1), (0, pad))
+    out = _k.anchor_mix_flat(xf, zf, alpha=float(alpha), interpret=flags.interpret_mode())
+    return out[:n].reshape(shape)
+
+
+def pullback_tree(x_tree, z_tree, alpha: float):
+    return jax.tree.map(lambda x, z: anchor_mix(x, z, alpha), x_tree, z_tree)
+
+
+reference = _ref.anchor_mix

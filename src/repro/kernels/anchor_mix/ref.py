@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the anchor-pullback mix (paper eq. (4)):
+    out = (1 - alpha) * x + alpha * z
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def anchor_mix(x: jnp.ndarray, z: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    zf = z.astype(jnp.float32)
+    return ((1.0 - alpha) * xf + alpha * zf).astype(x.dtype)

@@ -1,0 +1,148 @@
+"""Pure-jnp oracles for the flash-attention kernel.
+
+* :func:`mha_reference` — exact masked softmax (materializes S×S scores).
+  Used for correctness tests and short-sequence CPU paths.
+* :func:`chunked_mha` — Q/KV block-tiled online softmax in plain jnp (the
+  flash-attention *algorithm* without Pallas). This is what the dry-run
+  lowers for long sequences so the compiled HLO has flash-like memory
+  behaviour instead of an S² materialization. Masked blocks are still
+  multiplied (≈2× causal-attention FLOPs in HLO cost analysis); the Pallas
+  kernel on a real TPU skips nothing either in this simple form — accounted
+  for in §Roofline.
+
+All functions take q:(B,Sq,H,D), k/v:(B,Sk,Hkv,D) with H a multiple of Hkv
+(GQA), optional causal/sliding-window masking, and ``q_offset`` giving the
+absolute position of q[0] (for cached decode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: Optional[int] = None, q_offset: int = 0):
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_mha(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 1024,
+    block_k: int = 1024,
+):
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    dv = v.shape[-1]
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+    qb = qp.reshape(b, nq, block_q, hkv, g, d).astype(jnp.float32)
+    kb = kp.reshape(b, nk, block_k, hkv, d).astype(jnp.float32)
+    vb = vp.reshape(b, nk, block_k, hkv, dv).astype(jnp.float32)
+
+    def q_block_fn(qi, q_blk, kb_b, vb_b):
+        # q_blk: (block_q, hkv, g, d); kb_b/vb_b: (nk, block_k, hkv, d)
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            k_blk, v_blk, ki = inp
+            k_pos = ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("qhgd,khd->hgqk", q_blk, k_blk)
+            mask = (k_pos < sk)[None, :]
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            else:
+                mask = jnp.broadcast_to(mask, (block_q, block_k))
+            if window is not None:
+                mask = mask & (k_pos[None, :] > (q_pos[:, None] - window))
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - safe_m[..., None])
+            corr = jnp.exp(m - safe_m)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("hgqk,khd->hgqd", p, v_blk)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((hkv, g, block_q, dv), jnp.float32)
+        m0 = jnp.full((hkv, g, block_q), -jnp.inf)
+        l0 = jnp.zeros((hkv, g, block_q))
+        (acc, _, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kb_b, vb_b, jnp.arange(nk)))
+        return acc / jnp.maximum(l[..., None], 1e-30)  # (hkv, g, block_q, d)
+
+    from repro.kernels import flags as _flags
+
+    if _flags.cost_unroll():
+        # python-loop version: identical math, every block matmul visible to
+        # HLO cost analysis (lax.scan bodies are counted once by XLA).
+        def q_block_unrolled(qi, q_blk, kb_b, vb_b):
+            q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+            acc = jnp.zeros((hkv, g, block_q, dv), jnp.float32)
+            m = jnp.full((hkv, g, block_q), -jnp.inf)
+            l = jnp.zeros((hkv, g, block_q))
+            for ki in range(nk):
+                k_blk, v_blk = kb_b[ki], vb_b[ki]
+                k_pos = ki * block_k + jnp.arange(block_k)
+                s = jnp.einsum("qhgd,khd->hgqk", q_blk, k_blk)
+                mask = (k_pos < sk)[None, :]
+                if causal:
+                    mask = mask & (k_pos[None, :] <= q_pos[:, None])
+                else:
+                    mask = jnp.broadcast_to(mask, (block_q, block_k))
+                if window is not None:
+                    mask = mask & (k_pos[None, :] > (q_pos[:, None] - window))
+                s = jnp.where(mask[None, None], s, -jnp.inf)
+                m_new = jnp.maximum(m, s.max(-1))
+                safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+                p = jnp.exp(s - safe_m[..., None])
+                corr = jnp.exp(m - safe_m)
+                l = l * corr + p.sum(-1)
+                acc = acc * corr[..., None] + jnp.einsum("hgqk,khd->hgqd", p, v_blk)
+                m = m_new
+            return acc / jnp.maximum(l[..., None], 1e-30)
+
+        rows = []
+        for bi in range(b):
+            rows.append(jnp.stack([q_block_unrolled(qi, qb[bi, qi], kb[bi], vb[bi]) for qi in range(nq)]))
+        out = jnp.stack(rows)
+    else:
+        # remat each q-block: the backward pass recomputes the online-softmax
+        # instead of storing per-KV-step residuals (flash-style O(block) memory)
+        q_block_ckpt = jax.checkpoint(q_block_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def batch_fn(args):
+            qb_b, kb_b, vb_b = args
+            return jax.lax.map(lambda qi: q_block_ckpt(qi, qb_b[qi], kb_b, vb_b), jnp.arange(nq))
+
+        out = jax.lax.map(batch_fn, (qb, kb, vb))  # (b, nq, hkv, g, block_q, d)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5)).reshape(b, nq * block_q, hkv * g, dv)
+    return out[:, :sq].astype(q.dtype)

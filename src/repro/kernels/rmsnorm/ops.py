@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the RMSNorm kernel (arbitrary leading dims)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import flags
+from repro.kernels.rmsnorm import kernel as _k
+from repro.kernels.rmsnorm import ref as _ref
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, block_rows: int = 128):
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    if rows == 0:
+        return x
+    x2 = x.reshape(rows, d)
+    out = _k.rmsnorm_2d(x2, scale, eps=eps, block_rows=block_rows, interpret=flags.interpret_mode())
+    return out.reshape(*lead, d)
+
+
+reference = _ref.rmsnorm

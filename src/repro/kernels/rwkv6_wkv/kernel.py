@@ -1,0 +1,91 @@
+"""RWKV-6 chunked WKV Pallas TPU kernel.
+
+Same chunking strategy as the SSD kernel: grid = (B·H, n_chunks), running
+(N×P, f32) state in VMEM scratch across the sequential chunk axis. Unlike
+SSD, the decay is a per-*channel* vector w_t ∈ (0,1)^N, so the intra-chunk
+score needs a 3-D masked contraction (L,L,N); with L=32..64 and N=64 this is
+≤1 MB in VMEM and the remaining contractions are MXU matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, st_ref, state, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    r = r_ref[0].astype(jnp.float32)  # (L, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (L, P)
+    w = w_ref[0].astype(jnp.float32)  # (L, N)
+    u = u_ref[0].astype(jnp.float32)  # (N,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    cum = jnp.cumsum(logw, axis=0)  # (L, N) inclusive
+    cum_excl = cum - logw
+    total = cum[-1]  # (N,)
+
+    # strict lower-triangular decayed scores A_lm = sum_n r_ln e^{cum_excl_l - cum_m} k_mn
+    li = cum_excl[:, None, :]  # (L,1,N)
+    lj = cum[None, :, :]  # (1,L,N)
+    strict = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > jax.lax.broadcasted_iota(
+        jnp.int32, (chunk, chunk), 1
+    )
+    decay = jnp.exp(jnp.where(strict[:, :, None], li - lj, -1e9))  # (L,L,N)
+    A = jnp.einsum("ln,lmn,mn->lm", r, decay, k)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)  # (L,)
+    y = jax.lax.dot(A, v) + diag[:, None] * v
+
+    s_prev = state[...]  # (N, P)
+    y += jax.lax.dot(r * jnp.exp(cum_excl), s_prev)
+
+    dte = jnp.exp(total[None, :] - cum)  # (L, N)
+    s_c = jax.lax.dot_general(k * dte, v, (((0,), (0,)), ((), ())))  # (N, P)
+    state[...] = jnp.exp(total)[:, None] * s_prev + s_c
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _final():
+        st_ref[0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_bh(r, k, v, w, u, *, chunk: int = 32, interpret: bool = False):
+    """r/k/w: (BH,S,N); v: (BH,S,P); u: (BH,N). S % chunk == 0."""
+    bh, s, n = r.shape
+    p = v.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (bh, nc)
+    y, st = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, n), lambda i, ci: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, n, p), lambda i, ci: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), r.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, st

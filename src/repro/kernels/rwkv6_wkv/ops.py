@@ -1,0 +1,65 @@
+"""Public wrapper for the RWKV-6 WKV kernel (+ chunked-jnp custom VJP)."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flags
+from repro.kernels.rwkv6_wkv import kernel as _k
+from repro.kernels.rwkv6_wkv import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def wkv(r, k, v, w, u, chunk: int = 32):
+    """r/k/w (B,S,H,N); v (B,S,H,P); u (H,N) -> (y (B,S,H,P), state (B,H,N,P))."""
+    return _forward(r, k, v, w, u, chunk)
+
+
+def _forward(r, k, v, w, u, chunk) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, n = r.shape
+    p = v.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        zr = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zr)
+        k = jnp.pad(k, zr)
+        v = jnp.pad(v, zr)
+        w = jnp.pad(w, zr, constant_values=1.0)
+    sp = s + pad
+    flat = lambda t: jnp.transpose(t, (0, 2, 1, 3)).reshape(b * h, sp, t.shape[-1])
+    uf = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, n)
+    y, st = _k.wkv_bh(flat(r), flat(k), flat(v), flat(w), uf, chunk=min(chunk, sp), interpret=flags.interpret_mode())
+    y = jnp.transpose(y.reshape(b, h, sp, p), (0, 2, 1, 3))[:, :s]
+    return y, st.reshape(b, h, n, p)
+
+
+def _fwd(r, k, v, w, u, chunk):
+    return _forward(r, k, v, w, u, chunk), (r, k, v, w, u)
+
+
+def _bwd(chunk, res, cts):
+    r, k, v, w, u = res
+
+    def f(r, k, v, w, u):
+        return _ref.wkv_chunked(r, k, v, w, u, chunk=chunk)
+
+    _, vjp = jax.vjp(f, r, k, v, w, u)
+    return vjp(cts)
+
+
+wkv.defvjp(_fwd, _bwd)
+
+reference = _ref.wkv_reference
+chunked = _ref.wkv_chunked
+
+
+def wkv_decode_step(state, r_t, k_t, v_t, w_t, u):
+    """Single-token recurrence: state (B,H,N,P); r/k/w (B,H,N); v (B,H,P)."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r_t, k_t, v_t, w_t))
+    kv = jnp.einsum("bhn,bhp->bhnp", kf, vf)
+    y = jnp.einsum("bhn,bhnp->bhp", rf, u.astype(jnp.float32)[None, :, :, None] * kv + state)
+    state = wf[..., None] * state + kv
+    return y.astype(r_t.dtype), state

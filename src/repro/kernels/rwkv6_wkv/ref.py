@@ -1,0 +1,115 @@
+"""Pure-jnp oracle for the RWKV-6 "Finch" WKV recurrence [arXiv:2404.05892].
+
+Per head with key-dim n and value-dim p, data-dependent per-channel decay
+w_t ∈ (0,1)^n and bonus u ∈ R^n:
+
+    y_t = r_t · (diag(u) k_tᵀ v_t + S_{t-1})
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+
+Shapes: r,k,w (B,S,H,N); v (B,S,H,P); u (H,N). Returns (y (B,S,H,P),
+final_state (B,H,N,P)).
+
+* :func:`wkv_reference` — lax.scan over time (ground truth).
+* :func:`wkv_chunked` — chunked form mirroring the Pallas kernel: cumulative
+  log-decay products inside a chunk turn the recurrence into dense matmuls,
+  with an inter-chunk state carried by a scan.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_reference(r, k, v, w, u) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, n = r.shape
+    p = v.shape[-1]
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # (B,H,N),(B,H,N),(B,H,P),(B,H,N)
+        kv = jnp.einsum("bhn,bhp->bhnp", kt, vt)
+        y = jnp.einsum("bhn,bhnp->bhp", rt, uf[None, :, :, None] * kv + state)
+        state = wt[..., None] * state + kv
+        return state, y
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final
+
+
+def wkv_chunked(r, k, v, w, u, chunk: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, n = r.shape
+    p = v.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        zr = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zr)
+        k = jnp.pad(k, zr)
+        v = jnp.pad(v, zr)
+        w = jnp.pad(w, zr, constant_values=1.0)  # identity decay in padding
+    sp = r.shape[1]
+    nc = sp // chunk
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    rc = rf.reshape(b, nc, chunk, h, n)
+    kc = kf.reshape(b, nc, chunk, h, n)
+    vc = vf.reshape(b, nc, chunk, h, p)
+    wc = wf.reshape(b, nc, chunk, h, n)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    cum = jnp.cumsum(logw, axis=2)  # (B,nc,L,H,N) inclusive
+    total = cum[:, :, -1]  # (B,nc,H,N)
+
+    # Contribution of token j<i to y_i: decay prod_{t=j+1..i-1} w_t? Careful:
+    # y_i reads S_{i-1} = sum_{j<i} (prod_{t=j+1}^{i-1} w_t) k_j^T v_j.
+    # In cum terms: prod_{t=j+1}^{i-1} w = exp(cum_{i-1} - cum_j).
+    # Define cum_excl_i = cum_{i} - logw_i (exclusive-of-i cumsum).
+    cum_excl = cum - logw
+    li = cum_excl[:, :, :, None]  # (B,nc,L,1,H,N)
+    lj = cum[:, :, None, :, :]  # (B,nc,1,L,H,N)
+    strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    # mask the exponent BEFORE exp: masked entries would overflow to +inf and
+    # poison the backward pass (inf * 0 cotangent = NaN)
+    diff = jnp.where(strict[None, None, :, :, None, None], li - lj, -1e9)
+    decay = jnp.exp(diff)
+    # scores: A_ij = sum_n r_in * decay_ijn * k_jn  (strictly lower tri)
+    A = jnp.einsum("bclhn,bclmhn,bcmhn->bclmh", rc, decay, kc)
+    # bonus diagonal: y_i += (r_i ⊙ u ⊙ k_i) · v_i
+    diag = jnp.einsum("bclhn,hn,bclhn->bclh", rc, uf, kc)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", A, vc) + diag[..., None] * vc
+
+    # chunk summary: S_chunk = sum_j exp(total - cum_j) k_j^T v_j
+    dte = jnp.exp(total[:, :, None] - cum)  # (B,nc,L,H,N)
+    S_c = jnp.einsum("bclhn,bclhn,bclhp->bchnp", dte, kc, vc)
+
+    from repro.kernels import flags as _flags
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    if False:  # state-scan flops are negligible; unroll only bloats probe HLO (see costprobe.py)
+        state = s0
+        prevs = []
+        for ci in range(nc):
+            prevs.append(state)
+            state = jnp.exp(total[:, ci])[..., None] * state + S_c[:, ci]
+        final = state
+        prev = jnp.stack(prevs, axis=1)
+    else:
+
+        def step(state, inp):
+            s_c, tot = inp
+            new = jnp.exp(tot)[..., None] * state + s_c
+            return new, state
+
+        final, prev_states = jax.lax.scan(step, s0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(total, 1, 0)))
+        prev = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,N,P)
+
+    # inter-chunk: y_i += r_i · diag(exp(cum_excl_i)) S_prev
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp", rc * jnp.exp(cum_excl), prev)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p)
+    return y[:, :s].astype(r.dtype), final

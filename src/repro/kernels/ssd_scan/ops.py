@@ -1,0 +1,82 @@
+"""Public wrapper for the SSD scan kernel: layout, padding, group expansion,
+D-skip term, and a chunked-jnp custom VJP (recompute, no (L,L) residuals)."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flags
+from repro.kernels.ssd_scan import kernel as _k
+from repro.kernels.ssd_scan import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def ssd_scan(x, dt, A, B, C, D, chunk: int = 64):
+    """x (B,S,H,P); dt (B,S,H); A (H,); B/C (B,S,G,N); D (H,) -> (y, final)."""
+    return _forward(x, dt, A, B, C, D, chunk)
+
+
+def _forward(x, dt, A, B, C, D, chunk) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    g = B.shape[2]
+    pad = (-s) % chunk
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Bp = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Cp = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    rep = h // g
+    Bh = jnp.repeat(Bp, rep, axis=2)
+    Ch = jnp.repeat(Cp, rep, axis=2)
+    # (B,S,H,·) -> (B*H, S, ·)
+    xf = jnp.transpose(xp, (0, 2, 1, 3)).reshape(b * h, sp, p)
+    dtf = jnp.transpose(dtp, (0, 2, 1)).reshape(b * h, sp)
+    bf = jnp.transpose(Bh, (0, 2, 1, 3)).reshape(b * h, sp, n)
+    cf = jnp.transpose(Ch, (0, 2, 1, 3)).reshape(b * h, sp, n)
+    af = jnp.tile(A[None, :], (b, 1)).reshape(b * h, 1)
+    y, st = _k.ssd_scan_bh(af, xf, dtf, bf, cf, chunk=min(chunk, sp), interpret=flags.interpret_mode())
+    y = jnp.transpose(y.reshape(b, h, sp, p), (0, 2, 1, 3))[:, :s]
+    y = y + x.astype(y.dtype) * D[None, None, :, None]
+    return y.astype(x.dtype), st.reshape(b, h, p, n)
+
+
+def _fwd(x, dt, A, B, C, D, chunk):
+    out = _forward(x, dt, A, B, C, D, chunk)
+    return out, (x, dt, A, B, C, D)
+
+
+def _bwd(chunk, res, cts):
+    x, dt, A, B, C, D = res
+
+    def f(x, dt, A, B, C, D):
+        return _ref.ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, A, B, C, D)
+    return vjp(cts)
+
+
+ssd_scan.defvjp(_fwd, _bwd)
+
+reference = _ref.ssd_reference
+chunked = _ref.ssd_chunked
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D):
+    """Single-token recurrent update for serving.
+
+    state (B,H,P,N); x_t (B,H,P); dt_t (B,H); B_t/C_t (B,G,N) -> (y, state).
+    """
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    Bh = jnp.repeat(B_t, h // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C_t, h // g, axis=1).astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)[..., None, None]
+    upd = jnp.einsum("bhp,bhn->bhpn", x_t.astype(jnp.float32) * dtf[..., None], Bh)
+    state = decay * state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + x_t.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x_t.dtype), state

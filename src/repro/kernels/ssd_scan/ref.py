@@ -1,0 +1,121 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan [arXiv:2405.21060 as used
+by Zamba2, arXiv:2411.15242].
+
+Semantics (per batch b, head h, head_dim p, state n):
+    s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * B_t k-outer x_t
+    y_t = C_t · s_t + D_h * x_t
+
+Two implementations:
+* :func:`ssd_reference` — step-by-step lax.scan over time (ground truth).
+* :func:`ssd_chunked`   — the chunked SSD algorithm (intra-chunk dense
+  matmuls + inter-chunk state recurrence) the Pallas kernel mirrors.
+
+Shapes: x (B,S,H,P); dt (B,S,H); A (H,) with A<0; B/C (B,S,G,N) with
+G | H (grouped B/C like Mamba2's n_groups); D (H,). Returns (y, final_state)
+with final_state (B,H,P,N).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(mat, h):
+    g = mat.shape[2]
+    return jnp.repeat(mat, h // g, axis=2)  # (B,S,H,N)
+
+
+def ssd_reference(x, dt, A, B, C, D) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Bh = _expand_groups(B, h).astype(jnp.float32)
+    Ch = _expand_groups(C, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * A)[..., None, None]  # (B,H,1,1)
+        upd = jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        state = decay * state + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0), jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+    Bh = _expand_groups(B, h).astype(jnp.float32)
+    Ch = _expand_groups(C, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    # reshape to chunks: (B, nc, L, H, ...)
+    xc = xf.reshape(b, nc, chunk, h, p)
+    dtc = dtf.reshape(b, nc, chunk, h)
+    Bc = Bh.reshape(b, nc, chunk, h, n)
+    Cc = Ch.reshape(b, nc, chunk, h, n)
+
+    dA = dtc * A  # (B,nc,L,H)
+    cum = jnp.cumsum(dA, axis=2)  # inclusive cumsum along chunk
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    # intra-chunk: M_ij = exp(cum_i - cum_j) for i>=j  (1-step-lag form:
+    # contribution of x_j (scaled dt_j) to y_i includes decay exp(sum_{j+1..i} dA) =
+    # exp(cum_i - cum_j))
+    li = cum[:, :, :, None, :]  # (B,nc,L,1,H)
+    lj = cum[:, :, None, :, :]  # (B,nc,1,L,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask exponent before exp (masked entries can overflow; inf would NaN the vjp)
+    M = jnp.exp(jnp.where(mask[None, None, :, :, None], li - lj, -1e9))  # (B,nc,L,L,H)
+    CB = jnp.einsum("bclhn,bcmhn->bclmh", Cc, Bc)  # (B,nc,L,L,H)
+    xbar = xc * dtc[..., None]
+    y_intra = jnp.einsum("bclmh,bclmh,bcmhp->bclhp", CB, M, xbar)
+
+    # chunk summary state: S_c = sum_j exp(total - cum_j) B_j^T xbar_j -> (B,nc,H,P,N)
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # (B,nc,L,H)
+    S_c = jnp.einsum("bclh,bclhn,bclhp->bchpn", decay_to_end, Bc, xbar)
+
+    # inter-chunk recurrence over chunk states
+    from repro.kernels import flags as _flags
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    if False:  # state-scan flops are negligible; unroll only bloats probe HLO (see costprobe.py)
+        state = s0
+        prevs = []
+        for ci in range(nc):
+            prevs.append(state)
+            state = jnp.exp(total[:, ci])[..., None, None] * state + S_c[:, ci]
+        final = state
+        prev = jnp.stack(prevs, axis=1)
+    else:
+
+        def step(state, inp):
+            s_c, tot = inp  # (B,H,P,N), (B,H)
+            new = jnp.exp(tot)[..., None, None] * state + s_c
+            return new, state  # emit state BEFORE this chunk
+
+        final, prev_states = jax.lax.scan(step, s0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(total, 1, 0)))
+        prev = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    # inter-chunk contribution: y_i += exp(cum_i) * C_i · S_prev
+    y_inter = jnp.einsum("bclh,bclhn,bchpn->bclhp", jnp.exp(cum), Cc, prev)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p) + xf * D[None, None, :, None]
+    return y[:, :s].astype(x.dtype), final

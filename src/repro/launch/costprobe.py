@@ -1,0 +1,286 @@
+"""Scan-corrected HLO cost accounting for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so the
+production round program (layers/τ/microbatch scans) under-reports FLOPs,
+bytes and collective bytes by the trip-count product. Instead of unrolling
+the 61-layer program (compile blow-up), we lower *component probes* with all
+inner recurrences unrolled (``kernels.flags.unrolled_costs``) and compose:
+
+    train:   Σ_kind n_layers · τ · n_micro · C(block fwd+bwd)
+           + τ · n_micro · C(embed+head+CE fwd+bwd)
+           + τ · C(optimizer step)
+           + 1 · C(algorithm boundary)          ← the paper's pullback+anchor
+    prefill: Σ_kind n_layers · C(block fwd) + C(embed+head fwd)
+    decode:  same as prefill with 1-token inputs against the full cache
+
+Each probe uses the exact production shapes and shardings, so per-device
+numbers compose exactly (loop bodies are literally identical across
+iterations). Memory analysis still comes from the full program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ArchConfig, InputShape, ModelConfig, ParallelPlan
+from repro.core.algorithms import Algorithm
+from repro.kernels import flags as kflags
+from repro.launch import roofline as rl
+from repro.launch import specs
+from repro.models import params as PB
+from repro.models import transformer as T
+from repro.models.layers import rope as rope_mod
+from repro.models.layers.norms import rmsnorm
+from repro.parallel import sharding as sh
+from repro.optim import optimizers as opt_mod
+
+
+def _block_abstract(cfg: ModelConfig, kind: str):
+    prm, axes = PB.build(T._init_block, jax.random.PRNGKey(0), cfg.param_dtype, cfg, kind, abstract=True)
+    return prm, axes
+
+
+def _shard_tree(mesh, rules, axes, sds, prefix=()):
+    is_axes_leaf = lambda t: isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t)
+    return jax.tree.map(
+        lambda ax, s: NamedSharding(mesh, sh.fit_spec(sh.spec_for(tuple(prefix) + tuple(ax), rules), s.shape, mesh)),
+        axes,
+        sds,
+        is_leaf=is_axes_leaf,
+    )
+
+
+def _cost(lowered) -> Dict[str, float]:
+    compiled = lowered.compile()
+    roof = rl.analyze(compiled)
+    return dict(flops=roof.flops, bytes=roof.bytes_accessed, coll=roof.collective_bytes, collectives=roof.collectives)
+
+
+def _rope_args(cfg: ModelConfig, b, s):
+    a = cfg.attention
+    if a is None or a.rope == "none":
+        return None, None
+    dim = a.qk_rope_head_dim if a.kind == "mla" else a.head_dim
+    if a.rope == "mrope":
+        return rope_mod.mrope_cos_sin(rope_mod.text_mrope_positions(b, s), dim, a.rope_theta, a.mrope_sections)
+    return rope_mod.rope_cos_sin(rope_mod.text_positions(b, s), dim, a.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# probes
+# ---------------------------------------------------------------------------
+
+
+def probe_block_train(cfg: ModelConfig, kind: str, plan: ParallelPlan, mesh: Mesh, rules: dict, mb: int, s: int):
+    m = plan.workers
+    prm_sds, axes = _block_abstract(cfg, kind)
+    prm_m = jax.tree.map(lambda t: jax.ShapeDtypeStruct((m,) + tuple(t.shape), t.dtype), prm_sds)
+    prm_sh = _shard_tree(mesh, rules, axes, prm_m, prefix=("worker",))
+    x_sds = jax.ShapeDtypeStruct((m, mb, s, cfg.d_model), cfg.param_dtype)
+    x_sh = NamedSharding(mesh, sh.fit_spec(P("worker", "fsdp", None, None), x_sds.shape, mesh))
+
+    def f(prm, x):
+        def one(prm_i, x_i):
+            cos, sin = _rope_args(cfg, mb, s)
+            out, _, stats = T._apply_block(cfg, kind, prm_i, x_i, cos, sin, mode="train", cache=None, eps=cfg.norm_eps)
+            l = jnp.sum(out.astype(jnp.float32) ** 2)
+            if stats is not None:
+                l = l + stats["aux_loss"]
+            return l
+
+        return jnp.sum(jax.vmap(one)(prm, x))
+
+    g = jax.grad(f, argnums=(0, 1))
+    with kflags.unrolled_costs():
+        lowered = jax.jit(g, in_shardings=(prm_sh, x_sh)).lower(prm_m, x_sds)
+    return _cost(lowered)
+
+
+def probe_embed_head_train(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh, rules: dict, shape: InputShape, mb: int):
+    m = plan.workers
+    batch_sds = specs.train_batch_specs(cfg, shape, plan, tau=1)
+    # (1, m, b, ...) -> (m, mb, ...)
+    batch_sds = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct((m, mb) + tuple(t.shape[3:]), t.dtype), batch_sds
+    )
+    batch_sh = jax.tree.map(
+        lambda t: NamedSharding(mesh, sh.fit_spec(P("worker", "fsdp", *(None,) * (len(t.shape) - 2)), t.shape, mesh)),
+        batch_sds,
+    )
+    full_sds, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+    keep = [k for k in full_sds if not k.startswith("seg") and k not in ("shared_block", "mtp")]
+    prm_sds = {k: full_sds[k] for k in keep}
+    prm_axes = {k: axes[k] for k in keep}
+    prm_m = jax.tree.map(lambda t: jax.ShapeDtypeStruct((m,) + tuple(t.shape), t.dtype), prm_sds)
+    prm_sh = _shard_tree(mesh, rules, prm_axes, prm_m, prefix=("worker",))
+
+    def f(prm, batch):
+        def one(prm_i, b_i):
+            x, mask = T._embed(cfg, prm_i, b_i)
+            hidden = rmsnorm(prm_i["final_norm"], x, cfg.norm_eps)
+            logits = T._head(cfg, prm_i, hidden)
+            tgt = b_i["targets"]
+            fe = cfg.frontend
+            if fe is not None and fe.kind == "vision":
+                return T.softmax_xent(logits[:, -tgt.shape[1]:], tgt)
+            return T.softmax_xent(logits, tgt)
+
+        return jnp.sum(jax.vmap(one)(prm, batch))
+
+    g = jax.grad(f)
+    with kflags.unrolled_costs():
+        lowered = jax.jit(g, in_shardings=(prm_sh, batch_sh)).lower(prm_m, batch_sds)
+    return _cost(lowered)
+
+
+def probe_optimizer(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh, rules: dict, optimizer):
+    state_sds, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+    m = plan.workers
+    x_m = jax.tree.map(lambda t: jax.ShapeDtypeStruct((m,) + tuple(t.shape), t.dtype), state_sds)
+    x_sh = _shard_tree(mesh, rules, axes, x_m, prefix=("worker",))
+    opt_sds = opt_mod.SGDState(momentum=x_m)
+    opt_sh = opt_mod.SGDState(momentum=x_sh)
+
+    def f(opt, x, g):
+        return jax.vmap(lambda o, xi, gi: optimizer.step(o, xi, gi, 0.1))(opt, x, g)
+
+    lowered = jax.jit(f, in_shardings=(opt_sh, x_sh, x_sh)).lower(opt_sds, x_m, x_m)
+    return _cost(lowered)
+
+
+def probe_boundary(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh, rules: dict, algo: Algorithm, axes):
+    state_sds, _ = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+    m = plan.workers
+    x_m = jax.tree.map(lambda t: jax.ShapeDtypeStruct((m,) + tuple(t.shape), t.dtype), state_sds)
+    x_sh = _shard_tree(mesh, rules, axes, x_m, prefix=("worker",))
+    anchor_sh = _shard_tree(mesh, rules, sh.anchor_axes(axes), state_sds)
+    from repro.core.algorithms import AlgoVars
+
+    if algo.needs_anchor:
+        vars_sds = AlgoVars(z=state_sds, v=state_sds if algo.name == "overlap_local_sgd" and algo.cfg.anchor_beta > 0 else None)
+        vars_sh = AlgoVars(z=anchor_sh, v=anchor_sh if vars_sds.v is not None else None)
+    elif algo.name == "cocod":
+        vars_sds = AlgoVars(extra=x_m)
+        vars_sh = AlgoVars(extra=x_sh)
+    else:
+        vars_sds = AlgoVars()
+        vars_sh = AlgoVars()
+
+    def f(x, vars):
+        from repro.parallel import mesh_context
+
+        return algo.boundary(x, vars, axes)
+
+    from repro.parallel import mesh_context
+
+    with mesh_context(mesh, rules):
+        lowered = jax.jit(f, in_shardings=(x_sh, vars_sh)).lower(x_m, vars_sds)
+    return _cost(lowered)
+
+
+def probe_block_serve(cfg: ModelConfig, kind: str, mesh: Mesh, rules: dict, shape: InputShape, mode: str):
+    prm_sds, axes = _block_abstract(cfg, kind)
+    prm_sh = _shard_tree(mesh, rules, axes, prm_sds)
+    b = shape.global_batch
+    s = 1 if mode == "decode" else shape.seq_len
+    if cfg.frontend is not None and cfg.frontend.kind == "vision" and mode != "decode":
+        s = shape.seq_len  # total positions incl. image tokens
+    batch_axes = rules["batch"]
+    b_ax = tuple(batch_axes) if batch_axes else None
+    x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.param_dtype)
+    x_sh = NamedSharding(mesh, sh.fit_spec(P(b_ax, None, None), x_sds.shape, mesh))
+
+    cache_sds = cache_sh = None
+    if mode == "decode":
+        one = jax.eval_shape(lambda: T._init_block_cache(cfg, kind, b, shape.seq_len, cfg.param_dtype))
+        cache_sds, cache_sh = specs.cache_tree_shardings(one, mesh, rules)
+
+    def f(prm, x, cache):
+        cos, sin = _rope_args(cfg, b, s) if mode != "decode" else _rope_args(cfg, b, 1)
+        out, nc, _ = T._apply_block(cfg, kind, prm, x, cos, sin, mode=mode, cache=cache, eps=cfg.norm_eps)
+        return out
+
+    with kflags.unrolled_costs():
+        lowered = jax.jit(f, in_shardings=(prm_sh, x_sh, cache_sh)).lower(prm_sds, x_sds, cache_sds)
+    return _cost(lowered)
+
+
+def probe_embed_head_serve(cfg: ModelConfig, mesh: Mesh, rules: dict, shape: InputShape, mode: str):
+    full_sds, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+    keep = [k for k in full_sds if not k.startswith("seg") and k not in ("shared_block", "mtp")]
+    prm_sds = {k: full_sds[k] for k in keep}
+    prm_axes = {k: axes[k] for k in keep}
+    prm_sh = _shard_tree(mesh, rules, prm_axes, prm_sds)
+    if mode == "decode":
+        in_sds, tok_sh = specs.decode_token_specs(cfg, shape, mesh, rules)
+        in_sds = dict(tokens=in_sds)
+        in_sh = dict(tokens=tok_sh)
+    else:
+        in_sds = specs.prefill_input_specs(cfg, shape)
+        in_sh = specs.prefill_input_shardings(in_sds, mesh, rules)
+
+    def f(prm, inputs):
+        x, _ = T._embed(cfg, prm, inputs)
+        hidden = rmsnorm(prm["final_norm"], x, cfg.norm_eps)
+        return T._head(cfg, prm, hidden)
+
+    with kflags.unrolled_costs():
+        lowered = jax.jit(f, in_shardings=(prm_sh, in_sh)).lower(prm_sds, in_sds)
+    return _cost(lowered)
+
+
+# ---------------------------------------------------------------------------
+# composition
+# ---------------------------------------------------------------------------
+
+
+def _acc(total: dict, c: dict, mult: float, label: str):
+    total["flops"] += mult * c["flops"]
+    total["bytes"] += mult * c["bytes"]
+    total["coll"] += mult * c["coll"]
+    total["parts"][label] = dict(mult=mult, **{k: c[k] for k in ("flops", "bytes", "coll")})
+
+
+def composed_cost(arch: ArchConfig, shape: InputShape, mesh: Mesh, plan: ParallelPlan, rules: dict, tau: int = 2) -> dict:
+    from repro.config.base import AlgoConfig
+    from repro.core import make_algorithm
+    from repro.optim import sgd
+    from repro.parallel import mesh_context
+
+    cfg, _variant = specs.model_for(arch, shape)
+    total = dict(flops=0.0, bytes=0.0, coll=0.0, parts={})
+    segs = T.segments(cfg)
+    kind_counts: Dict[str, int] = {}
+    for kind, n in segs:
+        kind_counts[kind] = kind_counts.get(kind, 0) + n
+
+    with mesh_context(mesh, rules):
+        if shape.mode == "train":
+            b_worker = shape.global_batch // plan.workers
+            mb = min(arch.train_microbatch or b_worker, b_worker)
+            n_micro = b_worker // mb
+            for kind, n in kind_counts.items():
+                c = probe_block_train(cfg, kind, plan, mesh, rules, mb, shape.seq_len if cfg.frontend is None or cfg.frontend.kind != "vision" else shape.seq_len)
+                _acc(total, c, n * tau * n_micro, f"block:{kind}")
+            c = probe_embed_head_train(cfg, plan, mesh, rules, shape, mb)
+            _acc(total, c, tau * n_micro, "embed_head")
+            c = probe_optimizer(cfg, plan, mesh, rules, sgd(0.9, True, 1e-4))
+            _acc(total, c, tau, "optimizer")
+            algo_name = "overlap_local_sgd" if plan.workers > 1 else "local_sgd"
+            algo = make_algorithm(AlgoConfig(name=algo_name, tau=tau, alpha=0.6, anchor_beta=0.7))
+            _, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+            c = probe_boundary(cfg, plan, mesh, rules, algo, axes)
+            _acc(total, c, 1, "boundary")
+        else:
+            mode = "decode" if shape.mode == "decode" else "prefill"
+            for kind, n in kind_counts.items():
+                c = probe_block_serve(cfg, kind, mesh, rules, shape, mode)
+                _acc(total, c, n, f"block:{kind}")
+            c = probe_embed_head_serve(cfg, mesh, rules, shape, mode)
+            _acc(total, c, 1, "embed_head")
+    return total

@@ -1,0 +1,272 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, print memory/cost analysis, and dump roofline terms.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM, or unsupported collective
+fails here. The 512 placeholder host devices exist ONLY in this process
+(the XLA flag above must precede every other import).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.config import AlgoConfig, INPUT_SHAPES, get_arch, list_archs  # noqa: E402
+from repro.core import make_algorithm  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.optim import schedules, sgd  # noqa: E402
+from repro.parallel import logical_mesh, mesh_context  # noqa: E402
+from repro.serving.engine import decode_step  # noqa: E402
+from repro.training.train_loop import make_round_step  # noqa: E402
+
+
+def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False):
+    """Returns (lowered, meta) for one (arch × shape × mesh)."""
+    arch = get_arch(arch_name)
+    shape = INPUT_SHAPES[shape_name]
+    if not arch.supports(shape):
+        raise ValueError(f"{arch_name} skips {shape_name} (policy {arch.long_context_policy})")
+    prod_mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = prod_mesh.devices.size
+    plan = arch.plan_for(shape.name, n_dev)
+    lmesh = logical_mesh(prod_mesh, plan)
+    rules = specs.optimized_rules(shape) if opt else specs.rules_for(shape)
+    cfg, variant = specs.model_for(arch, shape)
+    if opt:
+        variant = variant + "+opt"
+
+    meta = dict(
+        arch=arch_name,
+        shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16",
+        plan=dict(workers=plan.workers, fsdp=plan.fsdp, tensor=plan.tensor),
+        variant=variant,
+    )
+
+    with mesh_context(lmesh, rules):
+        if shape.mode == "train":
+            # w=1 (arctic/deepseek single-pod): Overlap-Local-SGD degenerates —
+            # no second replica to average with, so the honest program is the
+            # round WITHOUT anchor state (see DESIGN.md §Arch-applicability).
+            algo_name = "overlap_local_sgd" if plan.workers > 1 else "local_sgd"
+            meta["algorithm"] = algo_name
+            algo = make_algorithm(AlgoConfig(name=algo_name, tau=tau, alpha=0.6, anchor_beta=0.7))
+            optimizer = sgd(momentum=0.9, nesterov=True, weight_decay=1e-4)
+            sched = schedules.constant(0.1)
+            state_sds, state_sh, axes = specs.train_state_specs(cfg, plan, algo, optimizer, lmesh, rules)
+            batch_sds = specs.train_batch_specs(cfg, shape, plan, tau)
+            batch_sh = specs.batch_shardings(batch_sds, lmesh, rules)
+
+            def loss_fn(p, b):
+                return T.lm_loss(cfg, p, b, remat=True)
+
+            round_step = make_round_step(
+                loss_fn, optimizer, algo, sched, axes, microbatch=arch.train_microbatch
+            )
+            lowered = jax.jit(
+                round_step, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
+            ).lower(state_sds, batch_sds)
+            meta["tokens_per_program"] = tau * shape.global_batch * shape.seq_len
+            meta["mode"] = "train"
+        elif shape.mode == "prefill":
+            params_sds, params_sh, _ = specs.serve_param_specs(cfg, lmesh, rules)
+            in_sds = specs.prefill_input_specs(cfg, shape)
+            in_sh = specs.prefill_input_shardings(in_sds, lmesh, rules)
+
+            def prefill_fn(p, inputs):
+                logits, aux = T.apply_model(cfg, p, inputs, mode="prefill")
+                return logits, aux["caches"]
+
+            lowered = jax.jit(prefill_fn, in_shardings=(params_sh, in_sh)).lower(params_sds, in_sds)
+            meta["tokens_per_program"] = shape.global_batch * shape.seq_len
+            meta["mode"] = "prefill"
+        else:  # decode
+            params_sds, params_sh, _ = specs.serve_param_specs(cfg, lmesh, rules)
+            cache_sds, cache_sh = specs.decode_cache_specs(cfg, shape, lmesh, rules)
+            tok_sds, tok_sh = specs.decode_token_specs(cfg, shape, lmesh, rules)
+            pos_sds = jax.ShapeDtypeStruct((), np.int32)
+
+            def serve_fn(p, toks, caches, pos):
+                return decode_step(cfg, p, toks, caches, pos)
+
+            lowered = jax.jit(
+                serve_fn,
+                in_shardings=(params_sh, tok_sh, cache_sh, None),
+            ).lower(params_sds, tok_sds, cache_sds, pos_sds)
+            meta["tokens_per_program"] = shape.global_batch
+            meta["mode"] = "decode"
+    return lowered, meta, cfg
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token (MoE expert weights scaled by top_k/E)."""
+    sds, _ = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+    segs = T.segments(cfg)
+    total = 0
+    for key, sub in sds.items():
+        frac = 1.0
+        if key.startswith("seg"):
+            si = int(key[3:])
+            kind = segs[si][0]
+            if kind == "moe" and cfg.moe is not None:
+                # scale only the routed-expert weights
+                moe_total = 0
+                routed = 0
+                for path, leaf in jax.tree_util.tree_flatten_with_path(sub)[0]:
+                    n = int(np.prod(leaf.shape))
+                    moe_total += n
+                    keys = [str(getattr(p, "key", "")) for p in path]
+                    if "ffn" in keys and any(k in ("wi_gate", "wi_up", "wo") for k in keys) and "shared" not in keys and "dense_residual" not in keys:
+                        routed += n
+                total += (moe_total - routed) + int(routed * cfg.moe.top_k / cfg.moe.num_experts)
+                continue
+        total += int(sum(np.prod(l.shape) for l in jax.tree.leaves(sub)) * frac)
+    return total
+
+
+def run_pair(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    out_dir: str = None,
+    verbose: bool = True,
+    with_probes: bool = True,
+    opt: bool = False,
+):
+    t0 = time.time()
+    lowered, meta, cfg = lower_pair(arch_name, shape_name, multi_pod, opt=opt)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof_sched = rl.analyze(compiled, hlo)
+
+    n_params_sds, _ = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+    n_params = int(sum(np.prod(s.shape) for s in jax.tree.leaves(n_params_sds)))
+
+    # scan-corrected per-device cost via component probes (see costprobe.py)
+    composed = None
+    roof = roof_sched
+    if with_probes:
+        from repro.launch import costprobe
+        from repro.parallel import logical_mesh as _lm
+
+        arch = get_arch(arch_name)
+        shape = INPUT_SHAPES[shape_name]
+        prod_mesh = make_production_mesh(multi_pod=multi_pod)
+        plan = arch.plan_for(shape.name, prod_mesh.devices.size)
+        lmesh = _lm(prod_mesh, plan)
+        rules = specs.optimized_rules(shape) if opt else specs.rules_for(shape)
+        t0 = time.time()
+        composed = costprobe.composed_cost(arch, shape, lmesh, plan, rules)
+        composed["probe_s"] = round(time.time() - t0, 1)
+        roof = rl.Roofline(
+            flops=composed["flops"],
+            bytes_accessed=composed["bytes"],
+            collective_bytes=composed["coll"],
+            collectives=roof_sched.collectives,
+        )
+
+    n_active = active_params(cfg)
+    mode = meta["mode"]
+    mflops = rl.model_flops(n_active, meta["tokens_per_program"], "train" if mode == "train" else "serve")
+    n_dev = 512 if multi_pod else 256
+    mflops_per_dev = mflops / n_dev
+
+    result = dict(
+        meta,
+        ok=True,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        n_params=n_params,
+        n_active_params=n_active,
+        model_flops_per_device=mflops_per_dev,
+        useful_flops_ratio=(mflops_per_dev / roof.flops) if roof.flops else None,
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            peak_per_device=mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+            fits_hbm_16g=bool(mem.argument_size_in_bytes + mem.temp_size_in_bytes <= 16e9),
+        ),
+        roofline=roof.as_dict(),
+        schedule_view=roof_sched.as_dict(),
+        composed=composed,
+    )
+    if verbose:
+        print(f"== {meta['arch']} × {meta['shape']} × {meta['mesh']} (plan {meta['plan']}, {meta['variant']})")
+        print(f"   memory_analysis: {mem}")
+        print(
+            f"   cost/device: flops={roof.flops:.3e} bytes={roof.bytes_accessed:.3e} "
+            f"collective_bytes={roof.collective_bytes:.3e} (scan-corrected={composed is not None})"
+        )
+        print(
+            f"   roofline: compute={roof.compute_s*1e3:.2f}ms memory={roof.memory_s*1e3:.2f}ms "
+            f"collective={roof.collective_s*1e3:.2f}ms -> dominant: {roof.dominant}"
+        )
+        ratio = result["useful_flops_ratio"]
+        print(f"   MODEL_FLOPS/HLO_FLOPS = {ratio:.3f}" if ratio else "   MODEL_FLOPS ratio n/a")
+        print(f"   collective schedule: {roof_sched.collectives}")
+        print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s probes {composed['probe_s'] if composed else 0}s")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{meta['arch']}_{meta['shape']}_{meta['mesh'].replace('x','-')}"
+        if opt:
+            tag += "_opt"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", action="store_true", help="lower the beyond-paper optimized sharding variant (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    args = ap.parse_args()
+
+    pairs = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    failures = []
+    for a, s in pairs:
+        try:
+            run_pair(a, s, multi_pod=args.multi_pod, out_dir=args.out, opt=args.opt)
+        except Exception as e:  # noqa: BLE001
+            failures.append((a, s, repr(e)))
+            print(f"!! FAIL {a} × {s}: {e}")
+            traceback.print_exc()
+    print(f"\n{len(pairs) - len(failures)}/{len(pairs)} pairs OK on "
+          f"{'2x16x16' if args.multi_pod else '16x16'}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

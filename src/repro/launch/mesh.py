@@ -1,0 +1,40 @@
+"""Production meshes.
+
+``make_production_mesh`` is the assignment's fixed physical mesh: a v5e pod
+is 16×16 = 256 chips with axes ("data", "model"); the multi-pod variant adds
+a leading "pod" axis (2×16×16 = 512 chips, inter-pod links are the slow DCN
+hop that Overlap-Local-SGD's anchor traffic hides).
+
+Architectures reinterpret those devices through
+``repro.parallel.logical_mesh`` as (worker, fsdp, tensor) — same devices,
+same order (worker axis = slowest = pods first), different logical split per
+ParallelPlan.
+
+Functions, not module-level constants: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def device_count(*, multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_smoke_mesh(workers: int = 2, fsdp: int = 2, tensor: int = 2):
+    """Small host-device mesh for CI-scale sharding tests (8 devices)."""
+    return jax.make_mesh((workers, fsdp, tensor), ("worker", "fsdp", "tensor"), axis_types=(AxisType.Auto,) * 3)

@@ -1,0 +1,157 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (v5e constants from
+launch/mesh.py; cost_analysis numbers are per-partition, i.e. per chip):
+
+    compute    = HLO_FLOPs / peak_FLOP/s
+    memory     = HLO_bytes_accessed / HBM_bw
+    collective = Σ collective operand bytes / ICI_bw   (per chip)
+
+collective bytes are parsed from the compiled HLO text: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+op's operand shapes are summed (start/done async pairs counted once).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+# e.g. "bf16[16,128]{1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|ragged-all-to-all)"
+    r"(?:-start)?\("
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_operand_bytes(line: str, op_start: int) -> int:
+    """Sum the result-side shapes of a collective op line (the bytes that hit
+    the interconnect, per participating device). The result shape(s) —
+    possibly a tuple — sit between '=' and the op name:
+    ``%x = (bf16[4,8]{1,0}, f32[2]) all-reduce(...)``."""
+    eq = line.find("=")
+    if eq < 0 or op_start <= eq:
+        return 0
+    head = line[eq + 1 : op_start]
+    total = 0
+    for m in _SHAPE_RE.finditer(head):
+        dtype, dims = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from compiled HLO text."""
+    stats: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: counted at -start
+        m = _COLLECTIVE_RE.search(line)
+        if not m or "=" not in line[: m.start()]:
+            continue
+        kind = m.group(1)
+        b = _line_operand_bytes(line, m.start())
+        s = stats.setdefault(kind, {"count": 0, "bytes": 0})
+        s["count"] += 1
+        s["bytes"] += b
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collectives: dict
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s, "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return dict(
+            flops=self.flops,
+            bytes_accessed=self.bytes_accessed,
+            collective_bytes=self.collective_bytes,
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            collectives=self.collectives,
+        )
+
+
+def analyze(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = collective_stats(text)
+    cbytes = sum(v["bytes"] for v in colls.values())
+    return Roofline(flops=flops, bytes_accessed=bytes_acc, collective_bytes=cbytes, collectives=colls)
+
+
+def model_flops(n_params_active: int, tokens: int, mode: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D for a train step (2·N·D for inference forward)."""
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * n_params_active * tokens

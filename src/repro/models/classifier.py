@@ -1,0 +1,58 @@
+"""Small MLP classifier — the CIFAR-10/ResNet-18 stand-in for the paper-
+reproduction benchmarks (Tables 1–2, Figs. 1/4/5).
+
+The paper's phenomena (error–τ tradeoff, non-IID drift, pullback
+stabilization) are optimizer-level; a 2-hidden-layer MLP on the synthetic
+classification task exhibits all of them at CPU scale while keeping the
+300-epoch algorithm grid tractable.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P
+
+
+def init_mlp(key, dim: int, num_classes: int, hidden: Tuple[int, ...] = (128, 64), dtype=jnp.float32):
+    def body(b):
+        last = dim
+        for i, h in enumerate(hidden):
+            b.param(f"w{i}", (last, h), ("embed", "ff"))
+            b.param(f"b{i}", (h,), ("ff",), init="zeros")
+            last = h
+        b.param("w_out", (last, num_classes), ("ff", None))
+        b.param("b_out", (num_classes,), (None,), init="zeros")
+
+    return P.build(body, key, dtype)
+
+
+def mlp_apply(params, x):
+    h = x
+    i = 0
+    while f"w{i}" in params:
+        h = jnp.tanh(h @ params[f"w{i}"] + params[f"b{i}"])
+        i += 1
+    return h @ params["w_out"] + params["b_out"]
+
+
+def mlp_loss(params, batch):
+    """batch: (x (b,dim), y (b,)) -> (loss, metrics)."""
+    x, y = batch
+    logits = mlp_apply(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, dict(loss=loss, acc=acc)
+
+
+def accuracy(params, x, y, batch: int = 4096) -> float:
+    n = x.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        logits = mlp_apply(params, x[i : i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
+    return correct / n

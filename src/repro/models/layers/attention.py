@@ -1,0 +1,321 @@
+"""Attention layers: GQA (with bias / QK-norm / sliding-window options) and
+DeepSeek-V3 MLA (multi-head latent attention), each with train / prefill /
+decode paths.
+
+Compute dispatch:
+* TPU runtime (or forced) → Pallas flash-attention kernel (VMEM-tiled
+  online softmax, causal + sliding window + GQA).
+* otherwise → pure-jnp paths: exact masked softmax for short sequences,
+  KV-chunked online softmax (`chunked` in kernels/flash_attention/ref.py)
+  for long ones, so the dry-run HLO has flash-like memory behaviour instead
+  of an S×S materialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AttentionConfig
+from repro.kernels import flags as kflags
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.models.layers import rope as rope_mod
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.parallel import constrain
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(b, name: str, d_model: int, cfg: AttentionConfig):
+    """Projections are stored FUSED over (heads × head_dim) so the tensor-
+    parallel axis always divides the sharded dim (28 heads × tp=16 would not
+    divide; 28·128 = 3584 does). Activations are reshaped to heads after the
+    matmul and GSPMD propagates the sharding through the reshape."""
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    with b.scope(name):
+        b.param("wq", (d_model, h * hd), ("embed", "ff"))
+        b.param("wk", (d_model, kv * hd), ("embed", "ff"))
+        b.param("wv", (d_model, kv * hd), ("embed", "ff"))
+        b.param("wo", (h * hd, d_model), ("ff", "embed"))
+        if cfg.qkv_bias:
+            b.param("bq", (h * hd,), ("ff",), init="zeros")
+            b.param("bk", (kv * hd,), ("ff",), init="zeros")
+            b.param("bv", (kv * hd,), ("ff",), init="zeros")
+        if cfg.out_bias:
+            b.param("bo", (d_model,), (None,), init="zeros")
+
+
+def init_qk_norm(b, name: str, cfg: AttentionConfig):
+    with b.scope(name):
+        init_rmsnorm(b, "q_norm", cfg.head_dim)
+        init_rmsnorm(b, "k_norm", cfg.head_dim)
+
+
+def _project_qkv(params, cfg: AttentionConfig, x):
+    b_, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = constrain(q, ("batch", "seq", "act_ff"))
+    k = constrain(k, ("batch", "seq", "act_ff"))
+    v = constrain(v, ("batch", "seq", "act_ff"))
+    return (
+        q.reshape(b_, s, h, hd),
+        k.reshape(b_, s, kv, hd),
+        v.reshape(b_, s, kv, hd),
+    )
+
+
+def _sdpa(q, k, v, *, causal: bool, window: Optional[int], q_offset) -> jnp.ndarray:
+    """Dispatch: Pallas flash kernel / jnp reference. q:(B,Sq,H,D) k,v:(B,Sk,Hkv,D)."""
+    if kflags.use_pallas():
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return fa_ref.mha_reference(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def gqa_apply(
+    params,
+    cfg: AttentionConfig,
+    x,  # (B, S, d_model)
+    cos,
+    sin,
+    *,
+    mode: str = "train",  # train | prefill | decode
+    cache: Optional[dict] = None,
+    eps: float = 1e-5,
+    qk_norm_params=None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    q, k, v = _project_qkv(params, cfg, x)
+    if qk_norm_params is not None:
+        q = rmsnorm(qk_norm_params["q_norm"], q, eps)
+        k = rmsnorm(qk_norm_params["k_norm"], k, eps)
+    if cfg.rope != "none" and cos is not None:
+        q = rope_mod.apply_rope(q, cos, sin)
+        k = rope_mod.apply_rope(k, cos, sin)
+    q = q / jnp.sqrt(jnp.asarray(cfg.head_dim, q.dtype))
+    window = cfg.sliding_window
+
+    new_cache = None
+    if mode == "train":
+        out = _sdpa(q, k, v, causal=True, window=window, q_offset=0)
+    elif mode == "prefill":
+        out = _sdpa(q, k, v, causal=True, window=window, q_offset=0)
+        new_cache = _init_cache_from_prefill(k, v, window)
+    elif mode == "decode":
+        assert cache is not None
+        k_all, v_all, positions, pos = _cache_append(cache, k, v, window)
+        out = _decode_attend(q, k_all, v_all, positions=positions, pos=pos, window=window)
+        new_cache = dict(cache)
+        new_cache.update(k=k_all, v=v_all, positions=positions, pos=pos + 1)
+    else:
+        raise ValueError(mode)
+
+    b_, s = out.shape[0], out.shape[1]
+    y = out.astype(x.dtype).reshape(b_, s, cfg.num_heads * cfg.head_dim) @ params["wo"]
+    if cfg.out_bias:
+        y = y + params["bo"]
+    return y, new_cache
+
+
+# -- KV cache helpers (full + ring-buffer sliding window) -------------------
+
+
+def _init_cache_from_prefill(k, v, window: Optional[int]) -> dict:
+    s = k.shape[1]
+    if window is not None and s > window:
+        k = k[:, -window:]
+        v = v[:, -window:]
+        positions = jnp.arange(s - k.shape[1], s, dtype=jnp.int32)
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    return dict(
+        k=k,
+        v=v,
+        positions=positions,
+        pos=jnp.asarray(s, jnp.int32),
+        kind="window" if window else "full",
+    )
+
+
+def grow_cache(cache: dict, new_len: int) -> dict:
+    """Extend a prefill cache's buffers to ``new_len`` slots (generation)."""
+    if "ckv" in cache:  # MLA latent cache
+        cur = cache["ckv"].shape[1]
+        if cur >= new_len:
+            return cache
+        pad = new_len - cur
+        out = dict(cache)
+        out["ckv"] = jnp.pad(cache["ckv"], ((0, 0), (0, pad), (0, 0)))
+        out["krope"] = jnp.pad(cache["krope"], ((0, 0), (0, pad), (0, 0)))
+        return out
+    if "k" not in cache:
+        return cache  # recurrent caches don't grow
+    cur = cache["k"].shape[1]
+    if cur >= new_len:
+        return cache
+    pad = new_len - cur
+    out = dict(cache)
+    out["k"] = jnp.pad(cache["k"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out["v"] = jnp.pad(cache["v"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out["positions"] = jnp.concatenate(
+        [cache["positions"], jnp.full((pad,), -1, jnp.int32)]
+    )
+    return out
+
+
+def make_decode_cache(batch: int, max_len: int, cfg: AttentionConfig, dtype, window: Optional[int] = None) -> dict:
+    """Preallocated cache for pure-decode benchmarks (cache 'already full')."""
+    window = window if window is not None else cfg.sliding_window
+    length = min(max_len, window) if window else max_len
+    kv = cfg.num_kv_heads
+    if cfg.kind == "mla":
+        return dict(
+            ckv=jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+            krope=jnp.zeros((batch, length, cfg.qk_rope_head_dim), dtype),
+            pos=jnp.asarray(max_len - 1, jnp.int32),
+            kind="mla",
+        )
+    pos = max_len - 1
+    idx = jnp.arange(length, dtype=jnp.int32)
+    # warm ring buffer: slot i holds the most recent absolute position ≡ i (mod L)
+    positions = pos - ((pos - idx) % length)
+    return dict(
+        k=jnp.zeros((batch, length, kv, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, length, kv, cfg.head_dim), dtype),
+        positions=positions,
+        pos=jnp.asarray(pos, jnp.int32),
+        kind="window" if window else "full",
+    )
+
+
+def _cache_append(cache: dict, k_new, v_new, window: Optional[int]):
+    """Write the new token's K/V at its ring slot; returns updated buffers."""
+    pos = cache["pos"]
+    length = cache["k"].shape[1]
+    slot = pos % length
+    k_all = cache["k"].at[:, slot].set(k_new[:, 0])
+    v_all = cache["v"].at[:, slot].set(v_new[:, 0])
+    positions = cache["positions"].at[slot].set(pos)
+    return k_all, v_all, positions, pos
+
+
+def _decode_attend(q, k, v, *, positions, pos, window: Optional[int]):
+    """Single-token attention against the cache.
+
+    q: (B,1,H,D); k/v: (B,L,Hkv,D); positions (L,) holds each slot's absolute
+    token position (−1 = empty), which makes the same code path correct for
+    growing caches, warm ring buffers, and sliding windows.
+    """
+    b, _, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, d)
+    scores = jnp.einsum("bqhgd,blhd->bhgql", qg.astype(jnp.float32), k.astype(jnp.float32))
+    valid = (positions >= 0) & (positions <= pos)
+    if window is not None:
+        valid &= positions > (pos - window)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgql,blhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3, arXiv:2412.19437)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(b, name: str, d_model: int, cfg: AttentionConfig, eps: float = 1e-5):
+    """MLA projections fused over (heads × per-head dims) — see init_gqa."""
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    with b.scope(name):
+        if cfg.q_lora_rank:
+            b.param("wdq", (d_model, cfg.q_lora_rank), ("embed", "lora"))
+            init_rmsnorm(b, "q_norm", cfg.q_lora_rank)
+            b.param("wuq", (cfg.q_lora_rank, h * (dn + dr)), ("lora", "ff"))
+        else:
+            b.param("wq", (d_model, h * (dn + dr)), ("embed", "ff"))
+        b.param("wdkv", (d_model, cfg.kv_lora_rank), ("embed", "lora"))
+        init_rmsnorm(b, "kv_norm", cfg.kv_lora_rank)
+        b.param("wuk", (cfg.kv_lora_rank, h * dn), ("lora", "ff"))
+        b.param("wuv", (cfg.kv_lora_rank, h * dv), ("lora", "ff"))
+        b.param("wkr", (d_model, dr), ("embed", None))
+        b.param("wo", (h * dv, d_model), ("ff", "embed"))
+
+
+def mla_apply(
+    params,
+    cfg: AttentionConfig,
+    x,
+    cos,
+    sin,
+    *,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    eps: float = 1e-5,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b_, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    if cfg.q_lora_rank:
+        ql = rmsnorm(params["q_norm"], x @ params["wdq"], eps)
+        q = ql @ params["wuq"]
+    else:
+        q = x @ params["wq"]
+    q = constrain(q, ("batch", "seq", "act_ff")).reshape(b_, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope_mod.apply_rope(q_rope, cos, sin)
+
+    ckv = rmsnorm(params["kv_norm"], x @ params["wdkv"], eps)  # (B,S,r)
+    k_rope = rope_mod.apply_rope((x @ params["wkr"])[:, :, None, :], cos, sin)  # (B,S,1,dr)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+
+    if mode in ("train", "prefill"):
+        k_nope = constrain(ckv @ params["wuk"], ("batch", "seq", "act_ff")).reshape(b_, s, h, dn)
+        v = constrain(ckv @ params["wuv"], ("batch", "seq", "act_ff")).reshape(b_, s, h, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b_, s, h, dr))], axis=-1)
+        qcat = jnp.concatenate([q_nope, q_rope], axis=-1) * scale.astype(x.dtype)
+        # pad v to qk head dim for the fused kernel, slice after
+        dqk = dn + dr
+        if kflags.use_pallas() and dv <= dqk:
+            vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv)))
+            out = fa_ops.flash_attention(qcat, k, vpad, causal=True, window=None, q_offset=0)[..., :dv]
+        else:
+            out = fa_ref.mha_reference(qcat, k, v, causal=True, window=None, q_offset=0)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = dict(ckv=ckv, krope=k_rope[:, :, 0, :], pos=jnp.asarray(s, jnp.int32), kind="mla")
+    else:  # decode — absorbed formulation: score via the latent cache directly
+        assert cache is not None
+        pos = cache["pos"]
+        ckv_all = cache["ckv"].at[:, jnp.minimum(pos, cache["ckv"].shape[1] - 1)].set(ckv[:, 0])
+        kr_all = cache["krope"].at[:, jnp.minimum(pos, cache["krope"].shape[1] - 1)].set(k_rope[:, 0, 0])
+        # absorb W_uk into q: (B,1,h,dn) x (r,h,dn) -> (B,1,h,r)
+        wuk = params["wuk"].reshape(cfg.kv_lora_rank, h, dn)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wuk)
+        s_nope = jnp.einsum("bshr,blr->bhsl", q_lat.astype(jnp.float32), ckv_all.astype(jnp.float32))
+        s_rope = jnp.einsum("bshk,blk->bhsl", q_rope.astype(jnp.float32), kr_all.astype(jnp.float32))
+        scores = (s_nope + s_rope) * scale
+        valid = jnp.arange(ckv_all.shape[1]) <= pos
+        scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+        p = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhsl,blr->bshr", p, ckv_all.astype(jnp.float32))  # (B,1,h,r)
+        wuv = params["wuv"].reshape(cfg.kv_lora_rank, h, dv)
+        out = jnp.einsum("bshr,rhk->bshk", o_lat, wuv.astype(jnp.float32))
+        new_cache = dict(ckv=ckv_all, krope=kr_all, pos=pos + 1, kind="mla")
+
+    sq = out.shape[1]
+    y = out.astype(x.dtype).reshape(b_, sq, h * dv) @ params["wo"]
+    return y, new_cache

@@ -1,0 +1,124 @@
+"""Mamba2 block (SSD) as used by Zamba2 [arXiv:2411.15242].
+
+in_proj → [gate z | conv-stream (x, B, C) | dt] → causal conv1d → SSD scan
+→ gated RMSNorm → out_proj. Train/prefill use the chunked SSD (Pallas kernel
+on TPU, chunked-jnp otherwise); decode is the O(1) recurrent step carrying
+(conv_state, ssd_state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import SSMConfig
+from repro.kernels import flags as kflags
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.parallel import constrain
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.expand * d_model
+    heads = d_inner // cfg.head_dim
+    groups = 1
+    return d_inner, heads, groups
+
+
+def init_mamba2(b, name: str, d_model: int, cfg: SSMConfig):
+    d_inner, heads, groups = _dims(d_model, cfg)
+    n = cfg.state_dim
+    conv_dim = d_inner + 2 * groups * n
+    with b.scope(name):
+        b.param("in_proj", (d_model, 2 * d_inner + 2 * groups * n + heads), ("embed", "ff"))
+        b.param("conv_w", (cfg.conv_width, conv_dim), ("conv", "ff"))
+        b.param("conv_b", (conv_dim,), ("ff",), init="zeros")
+        b.param("a_log", (heads,), (None,), init="constant", scale=0.0)
+        b.param("dt_bias", (heads,), (None,), init="zeros")
+        b.param("d_skip", (heads,), (None,), init="ones")
+        init_rmsnorm(b, "norm", d_inner)
+        b.param("out_proj", (d_inner, d_model), ("ff", "embed"))
+
+
+def _split(params, cfg: SSMConfig, d_model: int, xz):
+    d_inner, heads, groups = _dims(d_model, cfg)
+    n = cfg.state_dim
+    z, xbc, dt = jnp.split(xz, [d_inner, 2 * d_inner + 2 * groups * n], axis=-1)
+    return z, xbc, dt, d_inner, heads, groups, n
+
+
+def _causal_conv(xbc, conv_w, conv_b, width: int):
+    # xbc: (B,S,C); depthwise causal conv via width-shifted adds (width ≤ 4)
+    out = xbc * conv_w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * conv_w[-1 - i]
+    return jax.nn.silu(out + conv_b)
+
+
+def mamba2_apply(
+    params,
+    cfg: SSMConfig,
+    x,  # (B,S,d_model)
+    *,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    eps: float = 1e-5,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b_, s, d_model = x.shape
+    xz = x @ params["in_proj"]
+    z, xbc, dt, d_inner, heads, groups, n = _split(params, cfg, d_model, xz)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    new_cache = None
+
+    if mode in ("train", "prefill"):
+        xbc_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], cfg.conv_width)
+        xs, B, C = jnp.split(xbc_conv, [d_inner, d_inner + groups * n], axis=-1)
+        xs = constrain(xs, ("batch", "seq", "act_ff"))
+        xh = xs.reshape(b_, s, heads, cfg.head_dim)
+        Bh = B.reshape(b_, s, groups, n)
+        Ch = C.reshape(b_, s, groups, n)
+        dt_s = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+        if kflags.use_pallas():
+            y, st = ssd_ops.ssd_scan(xh, dt_s, A, Bh, Ch, params["d_skip"], cfg.chunk_size)
+        else:
+            y, st = ssd_ref.ssd_chunked(xh, dt_s, A, Bh, Ch, params["d_skip"], chunk=cfg.chunk_size)
+        y = y.reshape(b_, s, d_inner)
+        if mode == "prefill":
+            conv_state = jnp.pad(xbc, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))[:, -(cfg.conv_width - 1) :]
+            new_cache = dict(ssd_state=st, conv_state=conv_state, kind="mamba")
+    else:  # decode: single step
+        assert cache is not None and s == 1
+        conv_state = cache["conv_state"]  # (B, width-1, conv_dim)
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, width, conv_dim)
+        conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+        xbc_conv = jax.nn.silu(conv_out)[:, None, :]
+        xs, B, C = jnp.split(xbc_conv, [d_inner, d_inner + groups * n], axis=-1)
+        dt_s = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+        y, st = ssd_ops.ssd_decode_step(
+            cache["ssd_state"],
+            xs[:, 0].reshape(b_, heads, cfg.head_dim),
+            dt_s,
+            A,
+            B[:, 0].reshape(b_, groups, n),
+            C[:, 0].reshape(b_, groups, n),
+            params["d_skip"],
+        )
+        y = y.reshape(b_, 1, d_inner)
+        new_cache = dict(ssd_state=st, conv_state=window[:, 1:], kind="mamba")
+
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), eps)
+    return y @ params["out_proj"], new_cache
+
+
+def make_mamba_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, heads, groups = _dims(d_model, cfg)
+    n = cfg.state_dim
+    conv_dim = d_inner + 2 * groups * n
+    return dict(
+        ssd_state=jnp.zeros((batch, heads, cfg.head_dim, n), jnp.float32),
+        conv_state=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        kind="mamba",
+    )

@@ -1,0 +1,43 @@
+"""Feed-forward layers: SwiGLU (llama-family) and plain GELU MLP (musicgen).
+
+Model code is written per-worker: activations are (B, S, ...). The trainer
+vmaps over the Local-SGD worker axis; sharding constraints specified here
+apply to the per-worker view and the worker axis sharding propagates from
+the stacked operands (verified: constraints compose correctly under vmap).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import constrain
+
+
+def init_swiglu(b, name: str, d_model: int, d_ff: int):
+    with b.scope(name):
+        b.param("wi_gate", (d_model, d_ff), ("embed", "ff"))
+        b.param("wi_up", (d_model, d_ff), ("embed", "ff"))
+        b.param("wo", (d_ff, d_model), ("ff", "embed"))
+
+
+def swiglu(params, x, act: str = "silu"):
+    g = x @ params["wi_gate"]
+    u = x @ params["wi_up"]
+    g = constrain(g, ("batch", "seq", "act_ff"))
+    u = constrain(u, ("batch", "seq", "act_ff"))
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (a * u) @ params["wo"]
+
+
+def init_gelu_mlp(b, name: str, d_model: int, d_ff: int):
+    with b.scope(name):
+        b.param("wi", (d_model, d_ff), ("embed", "ff"))
+        b.param("bi", (d_ff,), ("ff",), init="zeros")
+        b.param("wo", (d_ff, d_model), ("ff", "embed"))
+        b.param("bo", (d_model,), (None,), init="zeros")
+
+
+def gelu_mlp(params, x):
+    h = x @ params["wi"] + params["bi"]
+    h = constrain(h, ("batch", "seq", "act_ff"))
+    return jax.nn.gelu(h) @ params["wo"] + params["bo"]

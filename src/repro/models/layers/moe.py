@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Covers both assigned MoE styles:
+* Arctic  [hf:Snowflake/snowflake-arctic-base] — 128 experts top-2 with a
+  dense SwiGLU FFN *in parallel* (residual MoE).
+* DeepSeek-V3 [arXiv:2412.19437] — 1 shared + 256 routed experts top-8,
+  sigmoid routing with normalized top-k gates, first-k layers dense.
+
+Dispatch is scatter/gather based (dropless up to a capacity factor): tokens
+are assigned slots in per-expert buffers sized ``capacity``; the buffers are
+sharded over the ``experts`` logical axis (expert parallelism), so on a real
+mesh the scatter/gather pair lowers to all-to-all style collectives between
+the data and expert shards. The auxiliary load-balance loss follows the
+switch-transformer form. Router statistics are returned so Overlap-Local-SGD
+can (optionally) all-reduce them only at round boundaries — local routers
+drift during a round exactly like the rest of the local model.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import MoEConfig
+from repro.models.layers.mlp import init_swiglu, swiglu
+from repro.parallel import constrain
+
+
+def init_moe(b, name: str, d_model: int, cfg: MoEConfig):
+    e, f = cfg.num_experts, cfg.expert_ff
+    with b.scope(name):
+        b.param("router", (d_model, e), ("embed_no_shard", None), init="normal", scale=0.02, dtype=jnp.float32)
+        b.param("wi_gate", (e, d_model, f), ("experts", "embed_no_shard", "expert_ff"))
+        b.param("wi_up", (e, d_model, f), ("experts", "embed_no_shard", "expert_ff"))
+        b.param("wo", (e, f, d_model), ("experts", "expert_ff", "embed_no_shard"))
+        if cfg.num_shared_experts:
+            init_swiglu(b, "shared", d_model, cfg.shared_expert_ff * cfg.num_shared_experts)
+        if cfg.dense_residual_ff:
+            init_swiglu(b, "dense_residual", d_model, cfg.dense_residual_ff)
+
+
+def moe_apply(params, cfg: MoEConfig, x, act: str = "silu", capacity_factor: float = 0.0) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (out, router_stats).
+
+    capacity_factor overrides cfg.capacity_factor when > 0 (serving paths use
+    a higher factor so prefill/decode are effectively dropless)."""
+    b_, s, d = x.shape
+    t = b_ * s
+    cf = capacity_factor if capacity_factor > 0 else cfg.capacity_factor
+    xt = constrain(x.reshape(t, d), ("act_tokens", None))
+    logits = (xt.astype(jnp.float32)) @ params["router"]  # (T, E)
+    e = cfg.num_experts
+    k = cfg.top_k
+
+    if cfg.num_shared_experts:  # deepseek-style sigmoid router, normalized gates
+        scores = jax.nn.sigmoid(logits)
+        gate_vals, idx = jax.lax.top_k(scores, k)
+        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-9)
+    else:  # softmax router (arctic)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, idx = jax.lax.top_k(probs, k)
+        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    capacity = int(max(k, round(t * k / e * cf)))
+    capacity = min(capacity, t)  # a token can use an expert at most once
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (T, k, E)
+    assigned = onehot.sum(1)  # (T, E) 0/1
+    # position of each token within its expert's buffer (first-come order)
+    pos_in_expert = jnp.cumsum(assigned, axis=0) - assigned  # (T, E)
+    pos_k = jnp.take_along_axis(pos_in_expert, idx, axis=1)  # (T, k)
+    keep = pos_k < capacity
+    gates = jnp.where(keep, gates, 0.0)
+
+    flat_slot = jnp.where(keep, idx * capacity + pos_k, e * capacity)  # overflow -> dropped row
+    # dispatch: scatter TOKEN IDS (tiny) into the slot table, then gather the
+    # hidden vectors — keeps every large tensor sharded (token dim on fsdp,
+    # expert dim on fsdp after the gather); the gather/scatter pair is the
+    # all-to-all of expert parallelism.
+    slot_token = jnp.full((e * capacity + 1,), t, jnp.int32)
+    token_ids = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None], (t, k))
+    slot_token = slot_token.at[flat_slot.reshape(-1)].set(token_ids.reshape(-1), mode="drop")
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), x.dtype)], axis=0)
+    buf = xt_pad[slot_token[: e * capacity]].reshape(e, capacity, d)
+    buf = constrain(buf, ("act_experts", None, None))
+
+    # expert computation (grouped einsum over the expert-parallel axis)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+    g = constrain(g, ("act_experts", None, "act_expert_ff"))
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    y = jnp.einsum("ecf,efd->ecd", a * u, params["wo"])
+    y = constrain(y, ("act_experts", None, None))
+
+    # combine: gather each token's k slots, weight by gates
+    y_flat = jnp.concatenate([y.reshape(e * capacity, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    gathered = y_flat[flat_slot]  # (T, k, d)
+    gathered = constrain(gathered, ("act_tokens", None, None))
+    out = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32), gates.astype(jnp.float32)).astype(x.dtype)
+    out = constrain(out, ("act_tokens", None)).reshape(b_, s, d)
+
+    if cfg.num_shared_experts:
+        out = out + swiglu(params["shared"], x, act)
+    if cfg.dense_residual_ff:
+        out = out + swiglu(params["dense_residual"], x, act)
+
+    # switch-style aux loss: E * sum_e f_e * p_e
+    frac_tokens = assigned.astype(jnp.float32).mean(0) * (e / k)  # load fraction (normalized)
+    mean_prob = probs.mean(0)
+    aux = e * jnp.sum(frac_tokens / e * mean_prob) * k  # == E * mean(f_e p_e) form
+    stats = dict(
+        aux_loss=aux,
+        load=frac_tokens,
+        mean_prob=mean_prob,
+        dropped=1.0 - jnp.mean(keep.astype(jnp.float32)),
+    )
+    return out, stats

@@ -1,0 +1,37 @@
+"""Normalization layers (RMSNorm and bias-free LayerNorm).
+
+``rmsnorm`` routes through the fused Pallas kernel when
+``repro.kernels.flags.use_pallas()`` is on (TPU runtime / interpret tests)
+and the pure-jnp reference otherwise (CPU, dry-run lowering).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import flags as kflags
+from repro.kernels.rmsnorm import ops as rms_ops
+from repro.kernels.rmsnorm import ref as rms_ref
+
+
+def init_rmsnorm(b, name: str, dim: int):
+    with b.scope(name):
+        b.param("scale", (dim,), (None,), init="ones")
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    if kflags.use_pallas():
+        return rms_ops.rmsnorm(x, params["scale"], eps=eps)
+    return rms_ref.rmsnorm(x, params["scale"], eps=eps)
+
+
+def init_layernorm(b, name: str, dim: int):
+    with b.scope(name):
+        b.param("scale", (dim,), (None,), init="ones")
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,67 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the head_dim/2 rotary frequencies into
+(temporal, height, width) sections; text tokens use identical (t,h,w)
+positions so M-RoPE degenerates to RoPE for pure text, while vision patch
+tokens carry their 2-D grid coordinates.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (..., S) int -> cos/sin (..., S, head_dim/2) f32."""
+    freqs = rope_freqs(head_dim, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(
+    positions: jnp.ndarray,  # (B, 3, S) int — (t, h, w) per token
+    head_dim: int,
+    theta: float,
+    sections: Tuple[int, ...],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """M-RoPE: frequency bands are assigned to (t,h,w) sections."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    # angle for all 3 position streams: (B, 3, S, half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    # select stream per frequency band
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half)  # (half,)
+    ang = jnp.moveaxis(ang, 1, -2)  # (B, S, 3, half)
+    ang_sel = jnp.take_along_axis(ang, sec_id[None, None, None, :], axis=-2)[..., 0, :]  # (B,S,half)
+    return jnp.cos(ang_sel), jnp.sin(ang_sel)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over heads.
+
+    Rotate-half convention (Llama/Qwen): pairs are (x[..., :D/2], x[..., D/2:]).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None, :] + offset, (batch, seq))
+
+
+def text_mrope_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    p = text_positions(batch, seq, offset)
+    return jnp.broadcast_to(p[:, None, :], (batch, 3, seq))

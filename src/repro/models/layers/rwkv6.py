@@ -1,0 +1,143 @@
+"""RWKV-6 "Finch" block [arXiv:2404.05892]: time-mix with data-dependent
+decay (WKV recurrence) + channel-mix.
+
+Faithful structure: token-shift ddlerp (low-rank data-dependent
+interpolation between x_t and x_{t-1}) feeding r/k/v/w/g projections; decay
+w_t = exp(-exp(w0 + lora_w(x_w))); per-head WKV state with bonus u; grouped
+RMS-norm on heads; squared-ReLU channel-mix. Decode carries
+(last_token_timemix, last_token_channelmix, wkv_state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import SSMConfig
+from repro.kernels import flags as kflags
+from repro.kernels.rwkv6_wkv import ops as wkv_ops
+from repro.kernels.rwkv6_wkv import ref as wkv_ref
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.parallel import constrain
+
+_MIX = ("r", "k", "v", "w", "g")
+_LORA_RANK = 32
+_DECAY_RANK = 64
+
+
+def init_rwkv6(b, name: str, d_model: int, cfg: SSMConfig):
+    h, n = cfg.num_heads, cfg.head_dim
+    d_attn = h * n
+    with b.scope(name):
+        # time-mix
+        b.param("mu_x", (d_model,), (None,), init="constant", scale=0.5)
+        b.param("mix_w1", (d_model, len(_MIX) * _LORA_RANK), ("embed", "lora"))
+        b.param("mix_w2", (len(_MIX), _LORA_RANK, d_model), (None, "lora", "embed_no_shard"))
+        b.param("mu", (len(_MIX), d_model), (None, None), init="constant", scale=0.5)
+        b.param("wr", (d_model, h * n), ("embed", "ff"))
+        b.param("wk", (d_model, h * n), ("embed", "ff"))
+        b.param("wv", (d_model, h * n), ("embed", "ff"))
+        b.param("wg", (d_model, d_attn), ("embed", "ff"))
+        b.param("w0", (h, n), (None, None), init="constant", scale=-2.0)
+        b.param("decay_w1", (d_model, _DECAY_RANK), ("embed", "lora"))
+        b.param("decay_w2", (_DECAY_RANK, h * n), ("lora", "ff"))
+        b.param("u_bonus", (h, n), (None, None), init="normal", scale=0.3)
+        init_rmsnorm(b, "gnorm", n)
+        b.param("wo", (d_attn, d_model), ("ff", "embed"))
+        # channel-mix
+        b.param("cmix_mu_k", (d_model,), (None,), init="constant", scale=0.5)
+        b.param("cmix_mu_r", (d_model,), (None,), init="constant", scale=0.5)
+
+
+def init_rwkv6_ffn(b, name: str, d_model: int, d_ff: int):
+    with b.scope(name):
+        b.param("wk", (d_model, d_ff), ("embed", "ff"))
+        b.param("wv", (d_ff, d_model), ("ff", "embed"))
+        b.param("wr", (d_model, d_model), ("embed", "embed_no_shard"))
+
+
+def _shift(x, last):
+    """x_{t-1} stream: shift right by one; position 0 takes ``last``."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def rwkv6_timemix_apply(
+    params,
+    cfg: SSMConfig,
+    x,
+    *,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    eps: float = 1e-5,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b_, s, d = x.shape
+    h, n = cfg.num_heads, cfg.head_dim
+    last = cache["tm_last"][:, None, :] if cache is not None else None
+    prev = _shift(x, last)
+    dx = prev - x
+
+    # ddlerp: x_s = x + dx * (mu_s + lora_s(x + dx * mu_x))
+    base = x + dx * params["mu_x"]
+    lora = jnp.tanh(base @ params["mix_w1"]).reshape(b_, s, len(_MIX), _LORA_RANK)
+    lora = jnp.einsum("bsmr,mrd->bsmd", lora, params["mix_w2"])
+    mixed = x[:, :, None, :] + dx[:, :, None, :] * (params["mu"] + lora)  # (B,S,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(len(_MIX))]
+
+    r = constrain(xr @ params["wr"], ("batch", "seq", "act_ff")).reshape(b_, s, h, n)
+    k = constrain(xk @ params["wk"], ("batch", "seq", "act_ff")).reshape(b_, s, h, n)
+    v = constrain(xv @ params["wv"], ("batch", "seq", "act_ff")).reshape(b_, s, h, n)
+    g = jax.nn.silu(constrain(xg @ params["wg"], ("batch", "seq", "act_ff")))
+
+    dlora = (jnp.tanh(xw @ params["decay_w1"]) @ params["decay_w2"]).reshape(b_, s, h, n)
+    w = jnp.exp(-jnp.exp((params["w0"] + dlora).astype(jnp.float32)))  # (B,S,H,N) in (0,1)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        if kflags.use_pallas():
+            y, st = wkv_ops.wkv(r, k, v, w.astype(r.dtype), params["u_bonus"], cfg.chunk_size)
+        else:
+            y, st = wkv_ref.wkv_chunked(r, k, v, w, params["u_bonus"], chunk=cfg.chunk_size)
+        if mode == "prefill":
+            new_cache = dict(wkv_state=st, tm_last=x[:, -1], kind="rwkv")
+    else:
+        assert cache is not None and s == 1
+        y, st = wkv_ops.wkv_decode_step(
+            cache["wkv_state"], r[:, 0], k[:, 0], v[:, 0], w[:, 0], params["u_bonus"]
+        )
+        y = y[:, None]
+        new_cache = dict(wkv_state=st, tm_last=x[:, 0], kind="rwkv")
+
+    y = rmsnorm(params["gnorm"], y, eps).reshape(b_, s, h * n) * g
+    return y @ params["wo"], new_cache
+
+
+def rwkv6_channelmix_apply(
+    params_tm,
+    params_ffn,
+    x,
+    *,
+    cache: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    last = cache["cm_last"][:, None, :] if cache is not None else None
+    prev = _shift(x, last)
+    dx = prev - x
+    xk = x + dx * params_tm["cmix_mu_k"]
+    xr = x + dx * params_tm["cmix_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ params_ffn["wk"]))
+    kk = constrain(kk, ("batch", "seq", "act_ff"))
+    out = jax.nn.sigmoid(xr @ params_ffn["wr"]) * (kk @ params_ffn["wv"])
+    new_cache = dict(cm_last=x[:, -1]) if cache is not None else None
+    return out, new_cache
+
+
+def make_rwkv_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    h, n = cfg.num_heads, cfg.head_dim
+    return dict(
+        wkv_state=jnp.zeros((batch, h, n, n), jnp.float32),
+        tm_last=jnp.zeros((batch, d_model), dtype),
+        cm_last=jnp.zeros((batch, d_model), dtype),
+        kind="rwkv",
+    )

@@ -1,0 +1,96 @@
+"""Parameter construction with logical-axis bookkeeping.
+
+``Builder`` creates parameter pytrees (plain nested dicts) while recording a
+parallel tree of *logical axis names* for every leaf — the sharding layer
+(repro.parallel.sharding) resolves those names to mesh axes. This keeps model
+code free of mesh details while guaranteeing the axes tree always matches the
+params tree structurally.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Builder:
+    def __init__(self, key: jax.Array, dtype=jnp.float32, abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract  # create ShapeDtypeStructs (dry-run: no compute)
+        self.params: dict = {}
+        self.axes: dict = {}
+        self._path: list = []
+
+    # -- scoping ----------------------------------------------------------
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._path.append(str(name))
+        try:
+            yield self
+        finally:
+            self._path.pop()
+
+    def _insert(self, name: str, value, axes):
+        p, a = self.params, self.axes
+        for part in self._path:
+            p = p.setdefault(part, {})
+            a = a.setdefault(part, {})
+        if name in p:
+            raise ValueError(f"duplicate param {'/'.join(self._path + [name])}")
+        p[name] = value
+        a[name] = tuple(axes)
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- creation ---------------------------------------------------------
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        init: str = "fan_in",
+        scale: Optional[float] = None,
+        dtype=None,
+    ) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = dtype or self.dtype
+        if self.abstract:
+            v = jax.ShapeDtypeStruct(tuple(shape), dtype)
+            self._insert(name, v, axes)
+            return v
+        if init == "zeros":
+            v = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, dtype)
+        elif init == "normal":
+            s = 0.02 if scale is None else scale
+            v = (jax.random.normal(self._next_key(), shape, jnp.float32) * s).astype(dtype)
+        elif init == "fan_in":
+            fan_in = shape[0] if len(shape) >= 2 else max(int(np.prod(shape)), 1)
+            if len(shape) == 3:  # (experts, d_in, d_out)
+                fan_in = shape[1]
+            s = (1.0 / np.sqrt(fan_in)) if scale is None else scale / np.sqrt(fan_in)
+            v = (jax.random.normal(self._next_key(), shape, jnp.float32) * s).astype(dtype)
+        elif init == "constant":
+            v = jnp.full(shape, scale, dtype)
+        else:
+            raise ValueError(init)
+        self._insert(name, v, axes)
+        return v
+
+
+def build(fn, key, dtype, *args, abstract: bool = False, **kwargs) -> Tuple[dict, dict]:
+    """Run ``fn(builder, *args, **kwargs)``; return (params, axes) trees."""
+    b = Builder(key, dtype, abstract=abstract)
+    fn(b, *args, **kwargs)
+    return b.params, b.axes
+
+
+def num_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

@@ -1,0 +1,433 @@
+"""Composable decoder-only transformer covering all assigned architectures.
+
+A model is a sequence of *segments*: maximal runs of identical block kinds
+("attn" | "moe" | "mamba2" | "rwkv6" | "shared_attn"). Each homogeneous run
+stores its parameters stacked with a leading layer axis and is applied with
+``lax.scan`` — compile time and HLO size stay O(#segments), not O(#layers),
+which matters when dry-running 88-layer models × 40 configs. Zamba2's
+weight-*shared* attention block is stored once at top level and applied at
+every "shared_attn" position.
+
+Modes: "train" (full sequence, causal), "prefill" (returns KV/state caches),
+"decode" (one token against caches). VLM/audio modality frontends are stubs
+per the assignment: the model consumes precomputed patch/frame embeddings
+(vision) or EnCodec codebook tokens (audio).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import params as P
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import mamba2 as mamba_mod
+from repro.models.layers import mlp as mlp_mod
+from repro.models.layers import moe as moe_mod
+from repro.models.layers import rope as rope_mod
+from repro.models.layers import rwkv6 as rwkv_mod
+from repro.models.layers.norms import init_layernorm, init_rmsnorm, layernorm, rmsnorm
+from repro.parallel import constrain
+
+# ---------------------------------------------------------------------------
+# pattern segmentation
+# ---------------------------------------------------------------------------
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    out: List[Tuple[str, int]] = []
+    for kind in cfg.pattern():
+        if out and out[-1][0] == kind and kind != "shared_attn":
+            out[-1] = (kind, out[-1][1] + 1)
+        else:
+            out.append((kind, 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(b, cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    if kind in ("attn", "moe", "shared_attn"):
+        a = cfg.attention
+        norm_init = init_layernorm if cfg.use_parallel_block else init_rmsnorm
+        norm_init(b, "ln1", d)
+        if a.kind == "mla":
+            attn_mod.init_mla(b, "attn", d, a)
+        else:
+            attn_mod.init_gqa(b, "attn", d, a)
+            if cfg.use_qk_norm:
+                attn_mod.init_qk_norm(b, "qknorm", a)
+        if not cfg.use_parallel_block:
+            init_rmsnorm(b, "ln2", d)
+        if kind == "moe":
+            moe_mod.init_moe(b, "ffn", d, cfg.moe)
+        else:
+            mlp_kind = "gelu" if cfg.act == "gelu" else "swiglu"
+            if mlp_kind == "gelu":
+                mlp_mod.init_gelu_mlp(b, "ffn", d, cfg.d_ff)
+            else:
+                mlp_mod.init_swiglu(b, "ffn", d, cfg.d_ff)
+    elif kind == "mamba2":
+        init_rmsnorm(b, "ln1", d)
+        mamba_mod.init_mamba2(b, "block", d, cfg.ssm)
+    elif kind == "rwkv6":
+        init_rmsnorm(b, "ln1", d)
+        init_rmsnorm(b, "ln2", d)
+        rwkv_mod.init_rwkv6(b, "tm", d, cfg.ssm)
+        rwkv_mod.init_rwkv6_ffn(b, "cm", d, cfg.d_ff)
+    else:
+        raise ValueError(kind)
+
+
+def _init_stacked(key, dtype, cfg: ModelConfig, kind: str, n: int, abstract: bool = False):
+    """Stacked params for a scanned run of n identical blocks."""
+    if abstract:
+        one, axes = P.build(_init_block, key, dtype, cfg, kind, abstract=True)
+        stacked = jax.tree.map(lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), one)
+    else:
+
+        def one_fn(k):
+            prm, _ = P.build(_init_block, k, dtype, cfg, kind)
+            return prm
+
+        keys = jax.random.split(key, n)
+        stacked = jax.vmap(one_fn)(keys)
+        _, axes = P.build(_init_block, key, dtype, cfg, kind)
+    axes = jax.tree.map(lambda a: (None,) + a, axes, is_leaf=lambda t: isinstance(t, tuple))
+    return stacked, axes
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def init_model(cfg: ModelConfig, key, abstract: bool = False) -> Tuple[dict, dict]:
+    """Build (params, logical-axes) trees. ``abstract=True`` returns
+    ShapeDtypeStructs — used by the dry-run to describe multi-hundred-B
+    parameter trees without allocating anything."""
+    b = P.Builder(key, cfg.param_dtype, abstract=abstract)
+    d = cfg.d_model
+    fe = cfg.frontend
+    if fe is not None and fe.kind == "audio":
+        b.param("tok_emb", (fe.num_codebooks, cfg.vocab_size, d), (None, "vocab", "embed"), init="normal")
+    else:
+        b.param("tok_emb", (cfg.vocab_size, d), ("vocab", "embed"), init="normal")
+    if fe is not None and fe.kind == "vision":
+        with b.scope("projector"):
+            b.param("w1", (fe.embed_dim, d), ("embed_no_shard", "embed"))
+            b.param("w2", (d, d), ("embed", "embed_no_shard"))
+    init_rmsnorm(b, "final_norm", d)
+    if not cfg.tie_embeddings:
+        if fe is not None and fe.kind == "audio":
+            b.param("head", (fe.num_codebooks, d, cfg.vocab_size), (None, "embed", "vocab"))
+        else:
+            b.param("head", (d, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.shared_attn_every:
+        with b.scope("shared_block"):
+            _init_block(b, cfg, "shared_attn")
+    if cfg.mtp_depth:
+        with b.scope("mtp"):
+            init_rmsnorm(b, "ln_in", d)
+            b.param("proj", (2 * d, d), ("embed_no_shard", "embed"))
+            _init_block(b, cfg, "attn")
+
+    params, axes = b.params, b.axes
+    key_layers = key if abstract else jax.random.fold_in(key, 7)
+    for si, (kind, n) in enumerate(segments(cfg)):
+        if kind == "shared_attn":
+            continue
+        sub, sub_axes = _init_stacked(
+            key_layers if abstract else jax.random.fold_in(key_layers, si),
+            cfg.param_dtype,
+            cfg,
+            kind,
+            n,
+            abstract=abstract,
+        )
+        params[f"seg{si}"] = sub
+        axes[f"seg{si}"] = sub_axes
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# per-block apply
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ModelConfig, kind: str, prm, x, cos, sin, *, mode: str, cache, eps):
+    stats = None
+    if kind in ("attn", "moe", "shared_attn"):
+        a = cfg.attention
+        if cfg.use_parallel_block:  # command-r: x + attn(ln(x)) + ffn(ln(x))
+            h = layernorm(prm["ln1"], x, eps)
+            if a.kind == "mla":
+                y_attn, new_cache = attn_mod.mla_apply(prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps)
+            else:
+                y_attn, new_cache = attn_mod.gqa_apply(
+                    prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps,
+                    qk_norm_params=prm.get("qknorm"),
+                )
+            if kind == "moe":
+                y_ffn, stats = moe_mod.moe_apply(prm["ffn"], cfg.moe, h, cfg.act, capacity_factor=0.0 if mode == "train" else 4.0)
+            elif cfg.act == "gelu":
+                y_ffn = mlp_mod.gelu_mlp(prm["ffn"], h)
+            else:
+                y_ffn = mlp_mod.swiglu(prm["ffn"], h, cfg.act)
+            x = x + y_attn + y_ffn
+        else:
+            h = rmsnorm(prm["ln1"], x, eps)
+            if a.kind == "mla":
+                y, new_cache = attn_mod.mla_apply(prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps)
+            else:
+                y, new_cache = attn_mod.gqa_apply(
+                    prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps,
+                    qk_norm_params=prm.get("qknorm"),
+                )
+            x = x + y
+            h2 = rmsnorm(prm["ln2"], x, eps)
+            if kind == "moe":
+                y2, stats = moe_mod.moe_apply(prm["ffn"], cfg.moe, h2, cfg.act, capacity_factor=0.0 if mode == "train" else 4.0)
+            elif cfg.act == "gelu":
+                y2 = mlp_mod.gelu_mlp(prm["ffn"], h2)
+            else:
+                y2 = mlp_mod.swiglu(prm["ffn"], h2, cfg.act)
+            x = x + y2
+    elif kind == "mamba2":
+        h = rmsnorm(prm["ln1"], x, eps)
+        y, new_cache = mamba_mod.mamba2_apply(prm["block"], cfg.ssm, h, mode=mode, cache=cache, eps=eps)
+        x = x + y
+    elif kind == "rwkv6":
+        h = rmsnorm(prm["ln1"], x, eps)
+        y, tm_cache = rwkv_mod.rwkv6_timemix_apply(prm["tm"], cfg.ssm, h, mode=mode, cache=cache, eps=eps)
+        x = x + y
+        h2 = rmsnorm(prm["ln2"], x, eps)
+        y2, cm_cache = rwkv_mod.rwkv6_channelmix_apply(prm["tm"], prm["cm"], h2, cache=cache)
+        x = x + y2
+        new_cache = None
+        if tm_cache is not None:
+            new_cache = dict(tm_cache)
+            if cm_cache is not None:
+                new_cache.update(cm_cache)
+            else:
+                new_cache["cm_last"] = h2[:, -1]
+    else:
+        raise ValueError(kind)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    return x, new_cache, stats
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Preallocated per-segment caches for pure-decode (cache 'full' at pos=max_len-1)."""
+    dtype = dtype or cfg.param_dtype
+    caches: Dict[str, Any] = {}
+    for si, (kind, n) in enumerate(segments(cfg)):
+        one = _init_block_cache(cfg, kind, batch, max_len, dtype)
+        if kind == "shared_attn":
+            caches[f"seg{si}"] = one
+        else:
+            caches[f"seg{si}"] = jax.tree.map(lambda t: jnp.broadcast_to(t[None], (n,) + t.shape), one)
+    return caches
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("attn", "moe", "shared_attn"):
+        c = attn_mod.make_decode_cache(batch, max_len, cfg.attention, dtype)
+        c.pop("kind")
+        return c
+    if kind == "mamba2":
+        c = mamba_mod.make_mamba_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        c.pop("kind")
+        return c
+    if kind == "rwkv6":
+        c = rwkv_mod.make_rwkv_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        c.pop("kind")
+        return c
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params, inputs) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Returns (x, loss_mask). inputs: dict with tokens / image_embeds / positions."""
+    fe = cfg.frontend
+    if fe is not None and fe.kind == "audio":
+        toks = inputs["tokens"]  # (B, K, S)
+        # tok_emb: (K, V, d); summed gather per codebook (delay pattern applied
+        # by the data pipeline)
+        x = sum(params["tok_emb"][k][toks[:, k]] for k in range(fe.num_codebooks))
+        return x.astype(cfg.param_dtype), None
+    toks = inputs["tokens"]
+    x = params["tok_emb"][toks]
+    mask = None
+    if fe is not None and fe.kind == "vision" and "image_embeds" in inputs:
+        img = inputs["image_embeds"].astype(cfg.param_dtype)  # (B, S_img, vit)
+        proj = jax.nn.gelu(img @ params["projector"]["w1"]) @ params["projector"]["w2"]
+        x = jnp.concatenate([proj, x], axis=1)
+        s_img = img.shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros((x.shape[0], s_img), bool), jnp.ones((x.shape[0], toks.shape[1]), bool)], axis=1
+        )
+    return x.astype(cfg.param_dtype), mask
+
+
+def _rope_for(cfg: ModelConfig, inputs, batch: int, seq: int, offset) -> Tuple[Optional[jnp.ndarray], Optional[jnp.ndarray]]:
+    a = cfg.attention
+    if a is None or a.rope == "none":
+        return None, None
+    if a.kind == "mla":
+        dim = a.qk_rope_head_dim
+    else:
+        dim = a.head_dim
+    if a.rope == "mrope":
+        pos = inputs.get("positions")
+        if pos is None:
+            pos = rope_mod.text_mrope_positions(batch, seq, offset)
+        return rope_mod.mrope_cos_sin(pos, dim, a.rope_theta, a.mrope_sections)
+    pos = inputs.get("positions")
+    if pos is None:
+        pos = rope_mod.text_positions(batch, seq, offset)
+    return rope_mod.rope_cos_sin(pos, dim, a.rope_theta)
+
+
+def apply_model(
+    cfg: ModelConfig,
+    params: dict,
+    inputs: dict,
+    *,
+    mode: str = "train",
+    caches: Optional[dict] = None,
+    remat: bool = False,
+    decode_pos=None,
+) -> Tuple[jnp.ndarray, dict]:
+    """Returns (logits, aux) where aux has 'caches', 'moe_aux', 'loss_mask',
+    'hidden' (pre-head activations, for MTP)."""
+    x, loss_mask = _embed(cfg, params, inputs)
+    b_, s = x.shape[0], x.shape[1]
+    offset = decode_pos if mode == "decode" else 0
+    cos, sin = _rope_for(cfg, inputs, b_, s, offset if offset is not None else 0)
+    eps = cfg.norm_eps
+
+    moe_aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+
+    for si, (kind, n) in enumerate(segments(cfg)):
+        seg_key = f"seg{si}"
+        if kind == "shared_attn":
+            prm = params["shared_block"]
+            cache = caches.get(seg_key) if caches else None
+            x, nc, stats = _apply_block(cfg, kind, prm, x, cos, sin, mode=mode, cache=cache, eps=eps)
+            if nc is not None:
+                nc.pop("kind", None)
+                new_caches[seg_key] = nc
+            continue
+
+        seg_params = params[seg_key]
+        seg_caches = caches.get(seg_key) if caches else None
+
+        def body(carry, layer_in, _kind=kind):
+            xx, aux = carry
+            prm_i, cache_i = layer_in
+            xx, nc, stats = _apply_block(cfg, _kind, prm_i, xx, cos, sin, mode=mode, cache=cache_i, eps=eps)
+            if stats is not None:
+                aux = aux + stats["aux_loss"]
+            if nc is not None:
+                nc.pop("kind", None)
+            return (xx, aux), nc
+
+        body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+        (x, moe_aux), seg_new_caches = jax.lax.scan(body_fn, (x, moe_aux), (seg_params, seg_caches))
+        if seg_new_caches is not None and mode != "train":
+            new_caches[seg_key] = seg_new_caches
+
+    hidden = rmsnorm(params["final_norm"], x, eps)
+    logits = _head(cfg, params, hidden)
+    aux = dict(caches=new_caches, moe_aux=moe_aux, loss_mask=loss_mask, hidden=hidden)
+    return logits, aux
+
+
+def _head(cfg: ModelConfig, params, hidden):
+    fe = cfg.frontend
+    if fe is not None and fe.kind == "audio":
+        logits = jnp.einsum("bsd,kdv->bksv", hidden, params["head"])
+    elif cfg.tie_embeddings:
+        logits = hidden @ params["tok_emb"].T
+    else:
+        logits = hidden @ params["head"]
+    logits = logits * cfg.logit_scale
+    return constrain(logits, ("batch", "seq", "act_vocab") if logits.ndim == 3 else ("batch", None, "seq", "act_vocab"))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, targets, mask=None) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, remat: bool = False) -> Tuple[jnp.ndarray, dict]:
+    """batch: dict(tokens=..., targets=..., [image_embeds, positions]).
+
+    Audio (musicgen): tokens (B,K,S), targets (B,K,S); loss averaged over
+    codebooks. VLM: loss masked to text positions. MTP (DeepSeek-V3): one
+    extra next-next-token prediction module, weight 0.3.
+    """
+    logits, aux = apply_model(cfg, params, batch, mode="train", remat=remat)
+    fe = cfg.frontend
+    targets = batch["targets"]
+    if fe is not None and fe.kind == "audio":
+        loss = softmax_xent(logits, targets)  # (B,K,S,V) vs (B,K,S)
+    elif fe is not None and fe.kind == "vision":
+        # logits cover [img ; text]; targets only for text tokens
+        s_text = targets.shape[1]
+        loss = softmax_xent(logits[:, -s_text:], targets)
+    else:
+        loss = softmax_xent(logits, targets)
+    metrics = dict(xent=loss)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux["moe_aux"] / max(cfg.num_layers, 1)
+        metrics["moe_aux"] = aux["moe_aux"]
+    if cfg.mtp_depth and fe is None:
+        mtp_l = _mtp_loss(cfg, params, batch, aux["hidden"])
+        loss = loss + 0.3 * mtp_l
+        metrics["mtp"] = mtp_l
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(cfg: ModelConfig, params, batch, hidden):
+    """DeepSeek-V3 multi-token prediction: predict t+2 from [h_t ; emb(t+1)]."""
+    toks = batch["tokens"]
+    tgt = batch["targets"]
+    emb_next = params["tok_emb"][tgt]  # embedding of token t+1
+    mtp = params["mtp"]
+    h = rmsnorm(mtp["ln_in"], hidden, cfg.norm_eps)
+    z = jnp.concatenate([h[:, :-1], emb_next[:, :-1].astype(h.dtype)], axis=-1) @ mtp["proj"]
+    b_, s = z.shape[0], z.shape[1]
+    cos, sin = _rope_for(cfg, {}, b_, s, 0)
+    z, _, _ = _apply_block(cfg, "attn", mtp, z, cos, sin, mode="train", cache=None, eps=cfg.norm_eps)
+    logits2 = _head(cfg, params, z)
+    return softmax_xent(logits2, tgt[:, 1:])

@@ -1,0 +1,23 @@
+from repro.optim import schedules
+from repro.optim.optimizers import (
+    AdamState,
+    Optimizer,
+    SGDState,
+    adamw,
+    clip_by_global_norm,
+    from_config,
+    global_norm,
+    sgd,
+)
+
+__all__ = [
+    "AdamState",
+    "Optimizer",
+    "SGDState",
+    "adamw",
+    "clip_by_global_norm",
+    "from_config",
+    "global_norm",
+    "schedules",
+    "sgd",
+]

@@ -1,0 +1,102 @@
+"""Local optimizers (the per-worker update inside every distributed algorithm).
+
+The paper uses SGD with Nesterov momentum for local updates; the momentum
+buffer is updated *only from local gradients* (§2, Momentum Variant). AdamW is
+provided for the LM examples (§6 of the paper notes the technique extends to
+Adam).
+
+Functional style: ``init(params) -> state``, ``step(state, params, grads, lr)
+-> (state, params)``. All states preserve parameter dtype; Adam moments are
+kept in f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import OptimizerConfig
+
+
+class SGDState(NamedTuple):
+    momentum: dict  # pytree like params
+
+
+class AdamState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jnp.ndarray
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    step: Callable  # (state, params, grads, lr) -> (state, params)
+
+
+def _apply_weight_decay(grads, params, wd):
+    if wd == 0.0:
+        return grads
+    return jax.tree.map(lambda g, p: g + wd * p.astype(g.dtype), grads, params)
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = True, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def step(state: SGDState, params, grads, lr):
+        grads = _apply_weight_decay(grads, params, weight_decay)
+        new_m = jax.tree.map(lambda m, g: (momentum * m + g).astype(m.dtype), state.momentum, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: momentum * m + g, new_m, grads)
+        else:
+            upd = new_m
+        new_p = jax.tree.map(lambda p, u: (p - lr * u).astype(p.dtype), params, upd)
+        return SGDState(momentum=new_m), new_p
+
+    return Optimizer(init=init, step=step)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(mu=jax.tree.map(f32, params), nu=jax.tree.map(f32, params), count=jnp.zeros((), jnp.int32))
+
+    def step(state: AdamState, params, grads, lr):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p - lr * u).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, mu, nu)
+        return AdamState(mu=mu, nu=nu, count=count), new_p
+
+    return Optimizer(init=init, step=step)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.vdot(x.astype(jnp.float32), x.astype(jnp.float32)) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def from_config(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "sgd":
+        return sgd(cfg.momentum, cfg.nesterov, cfg.weight_decay)
+    if cfg.name == "adamw":
+        return adamw(cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.name}")

@@ -1,0 +1,59 @@
+"""Learning-rate schedules.
+
+Includes the paper's schedule (linear warmup for the first epochs, step decay
+by ``decay_factor`` at given boundaries — CIFAR-10 recipe of Goyal et al. [4]
+as used in §4) plus cosine for the LM examples.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+
+def warmup_step_decay(
+    base_lr: float,
+    warmup_steps: int,
+    boundaries: Sequence[int],
+    decay_factor: float = 0.1,
+) -> Callable:
+    boundaries = tuple(boundaries)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        lr = jnp.asarray(base_lr, jnp.float32)
+        for b in boundaries:
+            lr = jnp.where(step >= b, lr * decay_factor, lr)
+        if warmup_steps > 0:
+            warm = base_lr * (step + 1.0) / warmup_steps
+            lr = jnp.where(step < warmup_steps, warm, lr)
+        return lr
+
+    return schedule
+
+
+def cosine(base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (step + 1.0) / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+    return schedule
+
+
+def constant(base_lr: float) -> Callable:
+    def schedule(step):
+        return jnp.full((), base_lr, jnp.float32)
+
+    return schedule
+
+
+def from_config(cfg) -> Callable:
+    """Build a schedule from an OptimizerConfig."""
+    if cfg.decay_steps:
+        return warmup_step_decay(cfg.lr, cfg.warmup_steps, cfg.decay_steps, cfg.decay_factor)
+    if cfg.warmup_steps:
+        return warmup_step_decay(cfg.lr, cfg.warmup_steps, ())
+    return constant(cfg.lr)

@@ -1,0 +1,23 @@
+from repro.parallel.sharding import (
+    LOGICAL_RULES,
+    anchor_axes,
+    constrain,
+    current_mesh,
+    logical_mesh,
+    mesh_context,
+    sharding_for,
+    spec_for,
+    tree_shardings,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "anchor_axes",
+    "constrain",
+    "current_mesh",
+    "logical_mesh",
+    "mesh_context",
+    "sharding_for",
+    "spec_for",
+    "tree_shardings",
+]

@@ -1,0 +1,3 @@
+from repro.serving.engine import BatchedEngine, decode_step, generate, prefill
+
+__all__ = ["BatchedEngine", "decode_step", "generate", "prefill"]

@@ -1,0 +1,113 @@
+"""Serving: prefill + single-token decode steps and a batched generation engine.
+
+``decode_step`` is the function the decode-shape dry-runs lower: one new
+token against a KV/state cache of the benchmark's seq_len. Caches follow the
+per-segment layout of ``repro.models.transformer.init_caches``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.models import transformer as T
+
+
+def prefill(cfg: ModelConfig, params, inputs) -> Tuple[jnp.ndarray, dict]:
+    logits, aux = T.apply_model(cfg, params, inputs, mode="prefill")
+    return logits, aux["caches"]
+
+
+def decode_step(cfg: ModelConfig, params, tokens, caches, pos) -> Tuple[jnp.ndarray, dict]:
+    """tokens: (B, 1) (text) or (B, K, 1) (audio); pos: scalar absolute position."""
+    inputs = dict(tokens=tokens)
+    logits, aux = T.apply_model(cfg, params, inputs, mode="decode", caches=caches, decode_pos=pos)
+    return logits, aux["caches"]
+
+
+def _grow_all(caches: dict, cfg: ModelConfig, target_len: int) -> dict:
+    from repro.models.layers.attention import grow_cache
+    from repro.models.transformer import segments
+
+    out = {}
+    segs = segments(cfg)
+    for si, (kind, n) in enumerate(segs):
+        key = f"seg{si}"
+        if key not in caches:
+            continue
+        c = caches[key]
+        if kind in ("attn", "moe", "shared_attn"):
+            if kind == "shared_attn":
+                out[key] = grow_cache(c, target_len)
+            else:
+                # stacked over the run's layers: vmap the growth
+                out[key] = jax.vmap(lambda ci: grow_cache(ci, target_len))(c)
+        else:
+            out[key] = c
+    return out
+
+
+def _sample(logits, temperature: float, key):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompt: jnp.ndarray,  # (B, S0) int32
+    max_new: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Greedy/sampled generation for the examples (CPU-scale models)."""
+    logits, caches = jax.jit(functools.partial(prefill, cfg))(params, dict(tokens=prompt))
+    target_len = prompt.shape[-1] + max_new
+    caches = _grow_all(caches, cfg, target_len)
+    next_tok = _sample(logits[:, -1], temperature, jax.random.PRNGKey(seed))[:, None]
+    step_fn = jax.jit(functools.partial(decode_step, cfg))
+    out = [next_tok]
+    pos = prompt.shape[1]
+    key = jax.random.PRNGKey(seed + 1)
+    for i in range(max_new - 1):
+        key, sub = jax.random.split(key)
+        logits, caches = step_fn(params, next_tok, caches, jnp.asarray(pos + i, jnp.int32))
+        next_tok = _sample(logits[:, -1], temperature, sub)[:, None]
+        out.append(next_tok)
+    return np.concatenate([np.asarray(t) for t in out], axis=1)
+
+
+class BatchedEngine:
+    """Minimal batched-request server: fixed-slot continuous batching.
+
+    Requests (prompts) queue up; the engine packs up to ``slots`` active
+    sequences, prefills new arrivals one-by-one into their slot's cache, and
+    decodes all active slots jointly each step — the standard
+    serving-throughput structure, CPU-scale.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4, max_len: int = 256):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.queue: list = []
+        self.results: dict = {}
+
+    def submit(self, req_id, prompt: np.ndarray, max_new: int):
+        self.queue.append((req_id, prompt, max_new))
+
+    def run(self) -> dict:
+        while self.queue:
+            batch = self.queue[: self.slots]
+            self.queue = self.queue[self.slots :]
+            width = max(p.shape[0] for _, p, _ in batch)
+            prompts = np.stack([np.pad(p, (width - p.shape[0], 0)) for _, p, _ in batch])
+            max_new = max(n for _, _, n in batch)
+            toks = generate(self.cfg, self.params, jnp.asarray(prompts), max_new)
+            for (rid, _, n), row in zip(batch, toks):
+                self.results[rid] = row[:n]
+        return self.results

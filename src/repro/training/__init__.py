@@ -1,0 +1,12 @@
+from repro.training.train_loop import make_round_step, make_train_fn, stack_round_batches
+from repro.training.train_state import TrainState, consensus_params, make_train_state, worker_params
+
+__all__ = [
+    "TrainState",
+    "consensus_params",
+    "make_round_step",
+    "make_train_fn",
+    "make_train_state",
+    "stack_round_batches",
+    "worker_params",
+]

@@ -1,0 +1,109 @@
+"""Round-based training engine.
+
+One *round* = τ local steps (lax.scan) + the algorithm's boundary. The
+boundary's collectives (anchor reduce-scatter for Overlap-Local-SGD, model
+average for Local SGD, ...) are ordinary XLA ops; when several rounds are
+scanned into one program (``rounds_per_call > 1``, the production setting),
+the anchor collective's consumer lies τ steps downstream and the latency-
+hiding scheduler overlaps it with local compute — the JAX-native form of the
+paper's communication thread.
+
+Batch layout: a *round batch* is a pytree whose array leaves are shaped
+(τ, m, per_worker_batch, ...) — scanned over τ, vmapped over m.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import Algorithm
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+from repro.training.train_state import TrainState
+
+
+def make_round_step(
+    loss_fn: Callable,  # (params, batch) -> (loss, metrics)
+    optimizer: Optimizer,
+    algorithm: Algorithm,
+    schedule: Callable,
+    axes_tree: Any = None,
+    grad_clip: float = 0.0,
+    microbatch: Optional[int] = None,
+):
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def stacked_grads(x, micro):
+        """Per-worker grads, with optional gradient accumulation over
+        microbatches (large per-worker batches on big-vocab/MoE archs)."""
+        leaves = jax.tree.leaves(micro)
+        b = leaves[0].shape[1]
+        if microbatch is None or b <= microbatch:
+            return jax.vmap(grad_fn)(x, micro)
+        k = b // microbatch
+        split = jax.tree.map(
+            lambda t: t.reshape((t.shape[0], k, microbatch) + t.shape[2:]).swapaxes(0, 1), micro
+        )
+
+        def acc(carry, mb):
+            g_acc, _ = carry
+            g, mets = jax.vmap(grad_fn)(x, mb)
+            g_acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), g_acc, g)
+            return (g_acc, mets), None
+
+        g0 = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), x)
+        m0 = jax.eval_shape(lambda mb: jax.vmap(grad_fn)(x, mb)[1], jax.tree.map(lambda t: t[0], split))
+        m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+        (g_sum, mets), _ = jax.lax.scan(acc, (g0, m0), split)
+        grads = jax.tree.map(lambda g, xx: (g / k).astype(xx.dtype), g_sum, x)
+        return grads, mets
+
+    def local_step(carry, micro):
+        x, opt, vars, step = carry
+        lr = schedule(step)
+        grads, metrics = stacked_grads(x, micro)
+        if grad_clip > 0.0:
+            grads = jax.vmap(lambda g: clip_by_global_norm(g, grad_clip)[0])(grads)
+        grads, vars = algorithm.transform_grads(grads, vars)
+        opt, x = jax.vmap(lambda o, xi, gi: optimizer.step(o, xi, gi, lr))(opt, x, grads)
+        metrics = dict(metrics, lr=jnp.broadcast_to(lr, metrics["loss"].shape))
+        return (x, opt, vars, step + 1), metrics
+
+    def round_step(state: TrainState, round_batch) -> Tuple[TrainState, dict]:
+        (x, opt, vars, step), metrics = jax.lax.scan(
+            local_step, (state.x, state.opt, state.vars, state.step), round_batch
+        )
+        x, vars = algorithm.boundary(x, vars, axes_tree)
+        new_state = TrainState(x=x, opt=opt, vars=vars, step=step)
+        return new_state, metrics
+
+    return round_step
+
+
+def make_train_fn(
+    loss_fn: Callable,
+    optimizer: Optimizer,
+    algorithm: Algorithm,
+    schedule: Callable,
+    axes_tree: Any = None,
+    grad_clip: float = 0.0,
+    rounds_per_call: int = 1,
+    donate: bool = True,
+    microbatch: Optional[int] = None,
+):
+    """jit'd multi-round step: (state, batches[(R, τ, m, b, ...)]) -> (state, metrics)."""
+    round_step = make_round_step(loss_fn, optimizer, algorithm, schedule, axes_tree, grad_clip, microbatch)
+
+    def many(state, batches):
+        if rounds_per_call == 1:
+            rb = jax.tree.map(lambda t: t[0], batches)
+            return round_step(state, rb)
+        return jax.lax.scan(round_step, state, batches)
+
+    return jax.jit(many, donate_argnums=(0,) if donate else ())
+
+
+def stack_round_batches(per_step_batches) -> Any:
+    """List (len τ) of per-step batches with leaves (m, b, ...) -> leaves (τ, m, b, ...)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_step_batches)

@@ -1,0 +1,48 @@
+"""Worker-stacked training state."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import Algorithm, AlgoVars
+from repro.optim.optimizers import Optimizer
+
+
+class TrainState(NamedTuple):
+    x: Any  # stacked local params (m, ...)
+    opt: Any  # stacked local optimizer state (m, ...)
+    vars: AlgoVars  # algorithm variables (anchor z, momentum v, extras)
+    step: jnp.ndarray  # global local-step counter
+
+
+def make_train_state(
+    params: Any,
+    m: int,
+    optimizer: Optimizer,
+    algorithm: Algorithm,
+    axes_tree: Any = None,
+) -> TrainState:
+    """All workers start at the same point (Theorem 1's initialization)."""
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
+    opt = jax.vmap(optimizer.init)(x)
+    vars = algorithm.init_vars(x, axes_tree)
+    return TrainState(x=x, opt=opt, vars=vars, step=jnp.zeros((), jnp.int32))
+
+
+def worker_params(state: TrainState, i: int = 0):
+    return jax.tree.map(lambda t: t[i], state.x)
+
+
+def consensus_params(state: TrainState):
+    """The virtual/averaged model used for evaluation (paper's y_k when the
+    algorithm has an anchor, plain mean otherwise)."""
+    mean = jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0), state.x)
+    if state.vars.z is not None:
+        return jax.tree.map(
+            lambda m_, z: m_.astype(jnp.float32),  # evaluation uses mean of locals
+            mean,
+            state.vars.z,
+        )
+    return mean

@@ -1,0 +1,48 @@
+"""Small pytree arithmetic helpers used throughout the optimizer/algorithm code.
+
+These are deliberately dtype-preserving: all Local-SGD variants keep their
+states in the parameter dtype and these helpers never upcast silently.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: (x * s).astype(x.dtype), a)
+
+
+def tree_axpy(s, x, y):
+    """y + s * x, elementwise over the tree, preserving y's dtypes."""
+    return jax.tree.map(lambda xi, yi: (yi + s * xi).astype(yi.dtype), x, y)
+
+
+def tree_lerp(a, b, alpha):
+    """(1 - alpha) * a + alpha * b — the paper's pullback mixing, eq. (4)."""
+    return jax.tree.map(
+        lambda ai, bi: ((1.0 - alpha) * ai + alpha * bi).astype(ai.dtype), a, b
+    )
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    )
+    return sum(leaves)
+
+
+def tree_l2_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree))

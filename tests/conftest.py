@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests run on the default single CPU device. The dry-run (and only the
+# dry-run) uses 512 placeholder devices — launched via subprocess in
+# test_dryrun.py so this process's jax stays single-device.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,66 @@
+"""Adaptive-τ controller (beyond-paper extension; EXPERIMENTS.md §Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AlgoConfig
+from repro.core import make_algorithm
+from repro.core.adaptive import AdaptiveTau, TauScheduledTrainer, consensus_drift
+from repro.models.classifier import init_mlp, mlp_loss
+from repro.optim import schedules, sgd
+from repro.training import make_round_step, make_train_state
+
+M = 4
+
+
+def test_controller_raises_tau_when_drift_small():
+    c = AdaptiveTau(tau=2, lo=0.01, hi=0.05)
+    assert c.update(drift=0.001, scale=1.0) == 4
+    assert c.update(drift=0.0, scale=1.0) == 8
+
+
+def test_controller_lowers_tau_when_drift_large():
+    c = AdaptiveTau(tau=8, lo=0.01, hi=0.05)
+    assert c.update(drift=0.5, scale=1.0) == 4
+    assert c.update(drift=0.5, scale=1.0) == 2
+
+
+def test_controller_clips():
+    c = AdaptiveTau(tau=32, tau_max=32)
+    assert c.update(0.0, 1.0) == 32
+    c2 = AdaptiveTau(tau=1)
+    assert c2.update(10.0, 1.0) == 1
+
+
+def test_consensus_drift_zero_when_equal():
+    x = {"w": jnp.ones((M, 3, 3))}
+    d, s = consensus_drift(x)
+    assert float(d) == 0.0 and float(s) > 0
+
+
+def test_trainer_adapts_tau_end_to_end(rng):
+    params, axes = init_mlp(jax.random.PRNGKey(0), 8, 4)
+    algo_cache = {}
+
+    def make_step(tau):
+        algo = make_algorithm(AlgoConfig(name="overlap_local_sgd", tau=tau, alpha=0.6, anchor_beta=0.0))
+        algo_cache[tau] = algo
+        return jax.jit(make_round_step(mlp_loss, sgd(momentum=0.0), algo, schedules.constant(0.05), axes))
+
+    ctrl = AdaptiveTau(tau=1, tau_max=8, lo=0.05, hi=0.5)
+    trainer = TauScheduledTrainer(make_step, ctrl)
+    state = make_train_state(params, M, sgd(momentum=0.0), make_algorithm(AlgoConfig(name="overlap_local_sgd", tau=1, alpha=0.6, anchor_beta=0.0)), axes)
+
+    def batch_fn(tau):
+        x = rng.normal(size=(tau, M, 16, 8)).astype(np.float32)
+        y = rng.integers(0, 4, size=(tau, M, 16)).astype(np.int32)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    taus = []
+    for r in range(6):
+        state, ms, tau = trainer.run_round(state, batch_fn)
+        taus.append(tau)
+        assert np.isfinite(np.asarray(ms["loss"])).all()
+    # IID batches + pullback keep drift tiny → τ should have grown
+    assert max(taus) > 1
+    assert len(trainer._cache) == len(set(taus))  # compiled once per τ value

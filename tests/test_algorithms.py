@@ -1,0 +1,175 @@
+"""Algorithm semantics: the production implementation must match the paper's
+algebra step-for-step (via the dense matrix-form simulator) and satisfy the
+obvious reductions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AlgoConfig
+from repro.core import make_algorithm, mixing
+from repro.core.algorithms import AlgoVars
+from repro.optim import sgd
+from repro.training import make_round_step, make_train_state
+from repro.optim import schedules
+
+D = 6
+M = 4
+
+
+def quad_loss(params, batch):
+    """0.5‖A x − b‖² with per-worker (A, b) — deterministic gradients."""
+    A, b = batch
+    r = A @ params["x"] - b
+    loss = 0.5 * jnp.sum(r * r)
+    return loss, dict(loss=loss)
+
+
+def make_setup(algo_name, tau, alpha, lr=0.05, beta=0.0):
+    params = {"x": jnp.asarray(np.random.default_rng(0).normal(size=D), jnp.float32)}
+    algo = make_algorithm(AlgoConfig(name=algo_name, tau=tau, alpha=alpha, anchor_beta=beta))
+    opt = sgd(momentum=0.0, nesterov=False, weight_decay=0.0)
+    state = make_train_state(params, M, opt, algo, None)
+    step = make_round_step(quad_loss, opt, algo, schedules.constant(lr), None)
+    return params, algo, state, jax.jit(step)
+
+
+def batch_for(rng, tau):
+    A = rng.normal(size=(tau, M, D, D)).astype(np.float32)
+    b = rng.normal(size=(tau, M, D)).astype(np.float32)
+    return jnp.asarray(A), jnp.asarray(b)
+
+
+def test_overlap_matches_matrix_form_exactly():
+    """Implementation ≡ eq. (8) X_{k+1} = (X_k − γ G_k) W_k, every step."""
+    tau, alpha, lr = 3, 0.6, 0.05
+    rng = np.random.default_rng(42)
+    params, algo, state, step = make_setup("overlap_local_sgd", tau, alpha, lr, beta=0.0)
+    sim = mixing.MatrixFormSim(np.asarray(params["x"]), M, alpha, tau, lr)
+
+    for r in range(4):
+        A, b = batch_for(rng, tau)
+        state, _ = step(state, (A, b))
+        for k in range(tau):
+            grads = np.stack(
+                [np.asarray(A[k, i]).T @ (np.asarray(A[k, i]) @ sim.locals[:, i] - np.asarray(b[k, i])) for i in range(M)],
+                axis=1,
+            )
+            sim.step(grads)
+        np.testing.assert_allclose(np.asarray(state.x["x"]).T, sim.locals, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(state.vars.z["x"]), sim.anchor, rtol=1e-5, atol=1e-5)
+
+
+def test_overlap_momentum_reduces_to_vanilla_at_beta_zero():
+    rng = np.random.default_rng(3)
+    _, _, s0, step0 = make_setup("overlap_local_sgd", 2, 0.5, beta=0.0)
+    _, _, s1, step1 = make_setup("overlap_local_sgd", 2, 0.5, beta=1e-12)
+    A, b = batch_for(rng, 2)
+    s0, _ = step0(s0, (A, b))
+    s1, _ = step1(s1, (A, b))
+    np.testing.assert_allclose(np.asarray(s0.x["x"]), np.asarray(s1.x["x"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s0.vars.z["x"]), np.asarray(s1.vars.z["x"]), rtol=1e-5)
+
+
+def test_local_sgd_boundary_equalizes_workers():
+    rng = np.random.default_rng(4)
+    _, _, state, step = make_setup("local_sgd", 2, 0.0)
+    A, b = batch_for(rng, 2)
+    state, _ = step(state, (A, b))
+    x = np.asarray(state.x["x"])
+    np.testing.assert_allclose(x, np.tile(x[:1], (M, 1)), atol=1e-6)
+
+
+def test_sync_sgd_equals_single_worker_on_mean_gradient():
+    rng = np.random.default_rng(5)
+    params, _, state, step = make_setup("sync_sgd", 1, 0.0, lr=0.05)
+    A, b = batch_for(rng, 1)
+    state, _ = step(state, (A, b))
+    # manual: one SGD step on the mean of per-worker gradients
+    x0 = np.asarray(params["x"])
+    grads = np.stack([np.asarray(A[0, i]).T @ (np.asarray(A[0, i]) @ x0 - np.asarray(b[0, i])) for i in range(M)])
+    expected = x0 - 0.05 * grads.mean(0)
+    for i in range(M):
+        np.testing.assert_allclose(np.asarray(state.x["x"])[i], expected, rtol=1e-5)
+
+
+def test_overlap_alpha_one_pulls_locals_onto_anchor():
+    rng = np.random.default_rng(6)
+    _, _, state, step = make_setup("overlap_local_sgd", 2, 1.0)
+    A, b = batch_for(rng, 2)
+    state, _ = step(state, (A, b))
+    x = np.asarray(state.x["x"])
+    np.testing.assert_allclose(x, np.tile(x[:1], (M, 1)), atol=1e-6)
+
+
+def test_anchor_is_stale_by_one_round():
+    """The pullback at round r must use the anchor computed at round r−1."""
+    rng = np.random.default_rng(7)
+    tau, alpha = 2, 0.6
+    _, _, state, step = make_setup("overlap_local_sgd", tau, alpha)
+    z0 = np.asarray(state.vars.z["x"]).copy()
+    A, b = batch_for(rng, tau)
+    state1, _ = step(state, (A, b))
+    # the anchor used inside round 1's pullback is z0; verify by recomputing
+    # the pullback from the pre-boundary locals: run tau plain SGD steps
+    x = np.tile(z0[None], (M, 1))
+    for k in range(tau):
+        for i in range(M):
+            g = np.asarray(A[k, i]).T @ (np.asarray(A[k, i]) @ x[i] - np.asarray(b[k, i]))
+            x[i] = x[i] - 0.05 * g
+    pulled = (1 - alpha) * x + alpha * z0[None]
+    np.testing.assert_allclose(np.asarray(state1.x["x"]), pulled, rtol=1e-5, atol=1e-5)
+    # and the new anchor is the mean of the pulled-back locals (eq. 5)
+    np.testing.assert_allclose(np.asarray(state1.vars.z["x"]), pulled.mean(0), rtol=1e-5, atol=1e-5)
+
+
+def test_cocod_decouples_but_reaches_consensus_direction():
+    rng = np.random.default_rng(8)
+    _, _, state, step = make_setup("cocod", 2, 0.0)
+    A, b = batch_for(rng, 2)
+    state, _ = step(state, (A, b))
+    # x_i = avg(x_start) + delta_i; with equal init x_start equal, so
+    # differences between workers equal differences of their deltas
+    assert np.isfinite(np.asarray(state.x["x"])).all()
+
+
+def test_powersgd_compresses_and_converges_direction():
+    rng = np.random.default_rng(9)
+    params = {"w": jnp.asarray(rng.normal(size=(D, D)), jnp.float32)}
+
+    def loss(p, batch):
+        A, b = batch
+        r = A @ p["w"] - b
+        l = 0.5 * jnp.sum(r * r)
+        return l, dict(loss=l)
+
+    algo = make_algorithm(AlgoConfig(name="powersgd", powersgd_rank=2))
+    opt = sgd(momentum=0.0, nesterov=False)
+    state = make_train_state(params, M, opt, algo, None)
+    step = jax.jit(make_round_step(loss, opt, algo, schedules.constant(0.02), None))
+    losses = []
+    for r in range(30):
+        A = jnp.asarray(rng.normal(size=(1, M, D, D)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(1, M, D)), jnp.float32) * 0.1
+        state, ms = step(state, (A, b))
+        losses.append(float(ms["loss"].mean()))
+    assert losses[-1] < losses[0] * 0.5
+    # workers stay exactly in sync (decoded gradient identical across workers)
+    x = np.asarray(state.x["w"])
+    np.testing.assert_allclose(x, np.tile(x[:1], (M, 1, 1)), atol=1e-5)
+
+
+@pytest.mark.parametrize("algo_name,tau", [("overlap_local_sgd", 4), ("easgd", 4), ("local_sgd", 4), ("cocod", 4)])
+def test_all_algorithms_converge_on_quadratic(algo_name, tau):
+    rng = np.random.default_rng(10)
+    Afix = rng.normal(size=(M, D, D)).astype(np.float32)
+    x_true = rng.normal(size=D).astype(np.float32)
+    bfix = np.einsum("mij,j->mi", Afix, x_true).astype(np.float32)  # consistent: F* = 0
+    _, _, state, step = make_setup(algo_name, tau, 0.5, lr=0.03)
+    losses = []
+    for r in range(40):
+        A = jnp.asarray(np.tile(Afix[None], (tau, 1, 1, 1)))
+        b = jnp.asarray(np.tile(bfix[None], (tau, 1, 1)))
+        state, ms = step(state, (A, b))
+        losses.append(float(ms["loss"].mean()))
+    assert losses[-1] < losses[0] * 0.1, (algo_name, losses[0], losses[-1])

@@ -1,0 +1,35 @@
+"""Checkpoint round-trip of the full TrainState."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save
+from repro.config import AlgoConfig
+from repro.core import make_algorithm
+from repro.models.classifier import init_mlp
+from repro.optim import sgd
+from repro.training import make_train_state
+
+
+def test_trainstate_roundtrip(tmp_path, rng):
+    params, axes = init_mlp(jax.random.PRNGKey(0), 8, 4)
+    algo = make_algorithm(AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7))
+    state = make_train_state(params, 4, sgd(), algo, axes)
+    # perturb so fields differ
+    state = state._replace(step=jnp.asarray(17, jnp.int32))
+    path = str(tmp_path / "ckpt.npz")
+    save(path, state)
+    template = make_train_state(params, 4, sgd(), algo, axes)
+    restored = restore(path, template)
+    assert int(restored.step) == 17
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dtype_preserved(tmp_path):
+    tree = {"a": jnp.ones((3,), jnp.bfloat16), "b": {"c": jnp.arange(4, dtype=jnp.int32)}}
+    path = str(tmp_path / "t.npz")
+    save(path, tree)
+    out = restore(path, tree)
+    assert out["a"].dtype == jnp.bfloat16
+    assert out["b"]["c"].dtype == jnp.int32

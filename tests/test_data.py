@@ -1,0 +1,68 @@
+"""Data pipeline properties (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    WorkerBatcher,
+    lm_batch_stream,
+    make_classification,
+    partition_iid,
+    partition_noniid,
+    skewness,
+)
+
+
+@given(m=st.integers(2, 16), seed=st.integers(0, 5))
+@settings(max_examples=15, deadline=None)
+def test_iid_partition_disjoint_and_even(m, seed):
+    data = make_classification(n=2000, dim=8, seed=seed)
+    parts = partition_iid(data, m, seed=seed)
+    all_idx = np.concatenate(parts)
+    assert len(np.unique(all_idx)) == len(all_idx)  # disjoint
+    sizes = {len(p) for p in parts}
+    assert len(sizes) == 1  # even
+
+
+@given(m=st.sampled_from([10, 20]), skew=st.floats(0.3, 0.8))
+@settings(max_examples=10, deadline=None)
+def test_noniid_partition_skew(m, skew):
+    # feasibility: per-worker majority draw must fit in its class's pool
+    data = make_classification(n=20000, dim=8, num_classes=10, seed=0)
+    parts = partition_noniid(data, m, skew=skew, seed=0)
+    all_idx = np.concatenate(parts)
+    assert len(np.unique(all_idx)) == len(all_idx)
+    s = skewness(data, parts)
+    assert s > skew * 0.9  # majority class dominates as requested
+    iid = skewness(data, partition_iid(data, m))
+    assert s > iid + 0.1
+
+
+def test_paper_noniid_construction():
+    """§4: 3125 samples per node, 2000 of one class (skew 0.64), 16 nodes."""
+    data = make_classification(n=50000, dim=8, num_classes=10, seed=0)
+    parts = partition_noniid(data, 16, skew=0.64, seed=0)
+    assert all(len(p) == 3125 for p in parts)
+    for i, p in enumerate(parts):
+        counts = np.bincount(data.y[p], minlength=10)
+        # ≥2000 from the assigned class (the uniform remainder may add more)
+        assert counts[i % 10] >= 2000
+
+
+def test_worker_batcher_shapes_and_epoch():
+    data = make_classification(n=1000, dim=8, seed=0)
+    parts = partition_iid(data, 4)
+    b = WorkerBatcher(data, parts, 16)
+    x, y = next(b)
+    assert x.shape == (4, 16, 8) and y.shape == (4, 16)
+    assert b.steps_per_epoch() == 250 // 16
+
+
+def test_lm_stream_learnable_structure():
+    """The bigram permutation must make next-token prediction learnable."""
+    it = lm_batch_stream(batch=8, seq_len=64, vocab_size=32, seed=0)
+    toks, tgts = next(it)
+    assert toks.shape == (8, 64) and tgts.shape == (8, 64)
+    np.testing.assert_array_equal(toks[:, 1:], tgts[:, :-1])
+    # deterministic follow-up happens ~75% of the time
+    toks2, _ = next(it)
+    assert toks2.min() >= 0 and toks2.max() < 32

@@ -1,0 +1,58 @@
+"""Runtime-model validation against the paper's measured constants (§4)."""
+import numpy as np
+import pytest
+
+from repro.core.runtime_model import RuntimeConfig, simulate
+
+# Paper constants: 16 nodes, ~24 steps/epoch (50000/(128·16)), compute 4.6 s/epoch
+STEPS = 24
+CFG = RuntimeConfig(m=16, t_step=4.6 / STEPS, t_comm=1.5 / STEPS, t_handshake=0.02)
+
+
+def test_sync_sgd_comm_ratio_matches_paper():
+    """Fully-sync: ~1.5 s comm per 4.6 s compute epoch (≈33%, paper: 34.6%)."""
+    r = simulate("sync_sgd", 1, STEPS, CFG)
+    assert abs(r.exposed_comm - 1.5) < 1e-9
+    assert 0.30 < r.comm_ratio < 0.36
+
+
+@pytest.mark.parametrize("tau", [1, 2, 8, 24])
+def test_overlap_hides_communication(tau):
+    """Paper Fig. 4(a): Overlap-Local-SGD's additional latency is ~negligible
+    (0.1 s vs 1.5 s per epoch) because τ·t_step ≥ t_comm already at τ=1."""
+    r = simulate("overlap_local_sgd", tau, STEPS, CFG)
+    assert r.exposed_comm <= 0.11, (tau, r.exposed_comm)
+    r_sync = simulate("sync_sgd", 1, STEPS, CFG)
+    assert r.total_time < r_sync.total_time
+
+
+def test_local_sgd_reduces_comm_by_tau():
+    r1 = simulate("local_sgd", 1, STEPS, CFG)
+    r8 = simulate("local_sgd", 8, STEPS, CFG)
+    assert abs(r1.exposed_comm / max(r8.exposed_comm, 1e-12) - 8.0) < 1e-6
+
+
+def test_overlap_exposes_comm_when_compute_too_short():
+    """If τ·t_step < t_comm the collective can't hide completely."""
+    cfg = RuntimeConfig(m=16, t_step=0.01, t_comm=0.2)
+    r = simulate("overlap_local_sgd", 1, 50, cfg)
+    assert r.exposed_comm > 0.5  # most rounds stall on the in-flight collective
+
+
+def test_powersgd_keeps_handshake_cost():
+    """Paper: compression can't remove handshake latency — PowerSGD exposed
+    comm stays ≥ steps × handshake."""
+    r = simulate("powersgd", 1, STEPS, CFG)
+    assert r.exposed_comm >= STEPS * CFG.t_handshake
+    sync = simulate("sync_sgd", 1, STEPS, CFG)
+    assert r.exposed_comm < sync.exposed_comm  # but still beats uncompressed
+
+
+def test_straggler_mitigation():
+    """Paper §2: non-blocking boundaries absorb stragglers; blocking Local SGD
+    pays the max over workers every round."""
+    cfg = RuntimeConfig(m=16, t_step=0.19, t_comm=0.0625, straggle_prob=0.05, straggle_factor=5.0, seed=3)
+    r_local = simulate("local_sgd", 2, 200, cfg)
+    r_overlap = simulate("overlap_local_sgd", 2, 200, cfg)
+    assert r_overlap.total_time < r_local.total_time
+    assert r_overlap.idle_time < r_local.idle_time

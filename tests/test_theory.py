@@ -1,0 +1,92 @@
+"""Property tests for the paper's theory (§2, §5, Appendix A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing
+
+m_strategy = st.integers(min_value=2, max_value=64)
+alpha_strategy = st.floats(min_value=0.05, max_value=0.95)
+
+
+@given(m=m_strategy, alpha=alpha_strategy)
+@settings(max_examples=50, deadline=None)
+def test_mixing_matrix_column_stochastic(m, alpha):
+    P = mixing.mixing_matrix(m, alpha)
+    np.testing.assert_allclose(P.sum(axis=0), np.ones(m + 1), atol=1e-12)
+    assert (P >= 0).all()
+
+
+@given(m=m_strategy, alpha=alpha_strategy)
+@settings(max_examples=50, deadline=None)
+def test_fixed_vector_is_fixed(m, alpha):
+    P = mixing.mixing_matrix(m, alpha)
+    v = mixing.fixed_vector(m, alpha)
+    np.testing.assert_allclose(P @ v, v, atol=1e-12)
+    np.testing.assert_allclose(v.sum(), 1.0, atol=1e-12)
+
+
+@given(m=m_strategy, alpha=alpha_strategy)
+@settings(max_examples=50, deadline=None)
+def test_zeta_bounded_by_one_minus_alpha(m, alpha):
+    """Appendix A: ζ = ‖P − v1ᵀ‖₂ ≤ 1 − α (PageRank second-eigenvalue bound)."""
+    P = mixing.mixing_matrix(m, alpha)
+    v = mixing.fixed_vector(m, alpha)
+    z = mixing.zeta(P, v)
+    assert z <= (1 - alpha) + 1e-9
+    assert z < 1.0  # contraction — required for Theorem 1's bound (29)
+
+
+@given(m=st.integers(2, 16), alpha=alpha_strategy)
+@settings(max_examples=30, deadline=None)
+def test_matrix_powers_converge_to_v1T(m, alpha):
+    """Column-stochastic P: Pᵏ → v·1ᵀ (the anchor consensus limit)."""
+    P = mixing.mixing_matrix(m, alpha)
+    v = mixing.fixed_vector(m, alpha)
+    Pk = np.linalg.matrix_power(P, 200)
+    # geometric convergence at rate ζ ≤ (1−α): tolerance tracks the bound
+    atol = 3 * (1 - alpha) ** 200 + 1e-9
+    np.testing.assert_allclose(Pk, np.outer(v, np.ones(m + 1)), atol=atol)
+
+
+def test_easgd_matrix_is_doubly_stochastic_vs_ours_column_only():
+    m, alpha = 8, 0.3
+    ours = mixing.mixing_matrix(m, alpha)
+    easgd = mixing.easgd_mixing_matrix(m, alpha)
+    # EASGD: rows AND columns sum to 1; ours: columns only (paper §2)
+    np.testing.assert_allclose(easgd.sum(axis=1), np.ones(m + 1), atol=1e-12)
+    np.testing.assert_allclose(easgd.sum(axis=0), np.ones(m + 1), atol=1e-12)
+    np.testing.assert_allclose(ours.sum(axis=0), np.ones(m + 1), atol=1e-12)
+    assert not np.allclose(ours.sum(axis=1), np.ones(m + 1))
+
+
+@given(
+    m=st.integers(2, 8),
+    alpha=st.floats(0.1, 0.9),
+    tau=st.integers(1, 5),
+    d=st.integers(1, 6),
+)
+@settings(max_examples=25, deadline=None)
+def test_virtual_sequence_identity(m, alpha, tau, d):
+    """Eq. (19): y_{k+1} = y_k − γ_eff · (1/m) Σ g_i, with γ_eff = (1−α)γ,
+    for EVERY k (boundary or not) — the key reduction in the proof."""
+    rng = np.random.default_rng(0)
+    gamma = 0.05
+    sim = mixing.MatrixFormSim(rng.normal(size=d), m, alpha, tau, gamma)
+    for k in range(3 * tau + 1):
+        y_before = sim.virtual_sequence()
+        grads = rng.normal(size=(d, m))
+        sim.step(grads)
+        y_after = sim.virtual_sequence()
+        expected = y_before - (1 - alpha) * gamma * grads.mean(axis=1)
+        np.testing.assert_allclose(y_after, expected, atol=1e-10)
+
+
+def test_matrix_form_anchor_equals_mean_of_pulled_back_locals():
+    """Paper eq. (5) ⇔ matrix column: z_{k+1} = mean_i x_{k+1}^(i)."""
+    rng = np.random.default_rng(1)
+    m, alpha, tau, d = 4, 0.6, 3, 5
+    sim = mixing.MatrixFormSim(rng.normal(size=d), m, alpha, tau, 0.1)
+    for k in range(tau):
+        sim.step(rng.normal(size=(d, m)))
+    np.testing.assert_allclose(sim.anchor, sim.locals.mean(axis=1), atol=1e-10)
