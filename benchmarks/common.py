@@ -2,27 +2,19 @@
 
 ``train_run`` executes a full training run of one algorithm configuration on
 the synthetic classification task (the CIFAR-10/ResNet-18 stand-in; see
-DESIGN.md §5) and returns loss curves + test accuracy. All Table/Figure
-benchmarks are thin grids over this.
+DESIGN.md §5) through ``repro.api.Experiment`` and returns loss curves +
+test accuracy. All Table/Figure benchmarks are thin grids over this.
 """
 from __future__ import annotations
 
 import os
-import time
 from dataclasses import dataclass
 from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.api import ClassificationSpec, Experiment
 from repro.config import AlgoConfig, OptimizerConfig
-from repro.core import make_algorithm
-from repro.data import WorkerBatcher, make_classification, partition_iid, partition_noniid
-from repro.models.classifier import accuracy, init_mlp, mlp_loss
-from repro.optim import from_config as opt_from_config
+from repro.data import make_classification_splits
 from repro.optim import schedules
-from repro.training import consensus_params, make_round_step, make_train_state
 
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
 
@@ -43,21 +35,17 @@ _DATA = {}
 
 
 def get_data(noniid: bool):
+    """Shared splits for the whole benchmark grid (one generation per mode)."""
     key = ("noniid" if noniid else "iid",)
     if key not in _DATA:
         n = 25000 if QUICK else 50000
         # noise calibrated so the task has irreducible error (sync accuracy
         # ≈ 0.77) — in the fully-separable regime every algorithm reaches
         # 100% and the paper's τ-tradeoff is invisible
-        data = make_classification(n=n, dim=DIM, num_classes=CLASSES, noise=3.0, seed=0)
-        holdout = 5000
-        test = type(data)(x=data.x[:holdout], y=data.y[:holdout], num_classes=CLASSES)
-        train = type(data)(x=data.x[holdout:], y=data.y[holdout:], num_classes=CLASSES)
-        if noniid:
-            parts = partition_noniid(train, M, skew=0.64, seed=0)
-        else:
-            parts = partition_iid(train, M, seed=0)
-        _DATA[key] = (train, test, parts)
+        _DATA[key] = make_classification_splits(
+            M, n=n, dim=DIM, num_classes=CLASSES, noise=3.0, holdout=5000,
+            noniid=noniid, skew=0.64, seed=0,
+        )
     return _DATA[key]
 
 
@@ -74,33 +62,23 @@ def train_run(
     seed: int = 0,
     local_momentum: float = 0.9,
 ) -> RunResult:
-    train, test, parts = get_data(noniid)
+    splits = get_data(noniid)
     steps = steps or (300 if QUICK else 900)
-    acfg = AlgoConfig(name=algo_name, tau=tau, alpha=alpha, anchor_beta=anchor_beta)
-    algo = make_algorithm(acfg)
-    tau_eff = algo.tau
-    # noise-dominated regime (paper's tradeoff is visible before LR decay):
-    # warmup 2%, single ×0.1 decay at 85%
-    rounds = steps // tau_eff
-    sched = schedules.warmup_step_decay(lr, int(0.02 * steps), (int(0.85 * steps),))
-    opt = opt_from_config(OptimizerConfig(name="sgd", lr=lr, momentum=local_momentum, nesterov=True, weight_decay=1e-4))
-    params, axes = init_mlp(jax.random.PRNGKey(seed), DIM, CLASSES, hidden=(32,))
-    state = make_train_state(params, M, opt, algo, axes)
-    step = jax.jit(make_round_step(mlp_loss, opt, algo, sched, axes))
-    batcher = WorkerBatcher(train, parts, batch, seed=seed)
-    losses = []
-    t0 = time.time()
-    for r in range(rounds):
-        micro = []
-        for _ in range(tau_eff):
-            x, y = next(batcher)
-            micro.append((jnp.asarray(x), jnp.asarray(y)))
-        rb = jax.tree.map(lambda *xs: jnp.stack(xs), *micro)
-        state, ms = step(state, rb)
-        losses.append(float(np.asarray(ms["loss"]).mean()))
-    p = jax.tree.map(lambda t: t.astype(jnp.float32), consensus_params(state))
-    acc = accuracy(p, jnp.asarray(test.x), jnp.asarray(test.y))
-    return RunResult(algo=algo_name, tau=tau, losses=losses, test_acc=acc, wall_s=time.time() - t0)
+    exp = Experiment(
+        task=ClassificationSpec(splits=splits, batch_per_worker=batch, hidden=(32,), seed=seed),
+        strategy=AlgoConfig(name=algo_name, tau=tau, alpha=alpha, anchor_beta=anchor_beta),
+        optimizer=OptimizerConfig(
+            name="sgd", lr=lr, momentum=local_momentum, nesterov=True, weight_decay=1e-4
+        ),
+        # noise-dominated regime (paper's tradeoff is visible before LR decay):
+        # warmup 2%, single ×0.1 decay at 85%
+        schedule=schedules.warmup_step_decay(lr, int(0.02 * steps), (int(0.85 * steps),)),
+        workers=M,
+        seed=seed,
+    )
+    res = exp.fit(steps=steps)
+    acc = exp.evaluate()["test_acc"]
+    return RunResult(algo=algo_name, tau=tau, losses=res.losses, test_acc=acc, wall_s=res.wall_s)
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

@@ -1,6 +1,7 @@
 """Paper §4 non-IID experiment in miniature: each worker's data is 64%
 single-class. Shows Overlap-Local-SGD staying stable at large τ where
-CoCoD-SGD degrades (Table 2's phenomenon).
+CoCoD-SGD degrades (Table 2's phenomenon). All four runs share one dataset
+split through ``ClassificationSpec(splits=...)``.
 
     PYTHONPATH=src python examples/noniid_stability.py [--tau 24]
 """
@@ -10,35 +11,27 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ClassificationSpec, Experiment
 from repro.config import AlgoConfig, OptimizerConfig
-from repro.core import make_algorithm
-from repro.data import WorkerBatcher, make_classification, partition_noniid, skewness
-from repro.models.classifier import accuracy, init_mlp, mlp_loss
-from repro.optim import from_config as opt_from_config, schedules
-from repro.training import consensus_params, make_round_step, make_train_state
+from repro.data import make_classification_splits, skewness
+from repro.optim import schedules
 
 
-def run(algo_name: str, tau: int, steps: int, data, test, parts, m: int) -> None:
-    algo = make_algorithm(AlgoConfig(name=algo_name, tau=tau, alpha=0.6, anchor_beta=0.7))
-    opt = opt_from_config(OptimizerConfig(name="sgd", lr=0.1, momentum=0.9, nesterov=True))
-    params, axes = init_mlp(jax.random.PRNGKey(0), 64, 10)
-    state = make_train_state(params, m, opt, algo, axes)
-    step = jax.jit(make_round_step(mlp_loss, opt, algo, schedules.warmup_step_decay(0.1, 20, (steps // 2,)), axes))
-    batcher = WorkerBatcher(data, parts, 32)
-    losses = []
-    for r in range(steps // tau):
-        micro = [tuple(map(jnp.asarray, next(batcher))) for _ in range(tau)]
-        state, ms = step(state, jax.tree.map(lambda *xs: jnp.stack(xs), *micro))
-        losses.append(float(np.asarray(ms["loss"]).mean()))
-    p = jax.tree.map(lambda t: t.astype(jnp.float32), consensus_params(state))
-    acc = accuracy(p, jnp.asarray(test.x), jnp.asarray(test.y))
-    tail = np.mean(losses[-10:])
-    print(f"{algo_name:20s} tau={tau:3d}  final_loss={tail:8.4f}  test_acc={acc:.4f}  "
-          f"{'UNSTABLE' if not np.isfinite(tail) or tail > losses[0] else 'stable'}")
+def run(algo_name: str, tau: int, steps: int, splits, m: int) -> None:
+    exp = Experiment(
+        task=ClassificationSpec(splits=splits, batch_per_worker=32),
+        strategy=AlgoConfig(name=algo_name, tau=tau, alpha=0.6, anchor_beta=0.7),
+        optimizer=OptimizerConfig(name="sgd", lr=0.1, momentum=0.9, nesterov=True),
+        schedule=schedules.warmup_step_decay(0.1, 20, (steps // 2,)),
+        workers=m,
+    )
+    res = exp.fit(steps=steps)
+    acc = exp.evaluate()["test_acc"]
+    tail = np.mean(res.losses[-10:])
+    print(f"{algo_name:20s} tau={exp.tau:3d}  final_loss={tail:8.4f}  test_acc={acc:.4f}  "
+          f"{'UNSTABLE' if not np.isfinite(tail) or tail > res.losses[0] else 'stable'}")
 
 
 if __name__ == "__main__":
@@ -47,10 +40,7 @@ if __name__ == "__main__":
     ap.add_argument("--steps", type=int, default=720)
     args = ap.parse_args()
     m = 16
-    data = make_classification(n=30000, dim=64, num_classes=10, noise=3.0, seed=0)
-    test = type(data)(x=data.x[:4000], y=data.y[:4000], num_classes=10)
-    train = type(data)(x=data.x[4000:], y=data.y[4000:], num_classes=10)
-    parts = partition_noniid(train, m, skew=0.64)
-    print(f"non-IID partitions: mean majority-class fraction = {skewness(train, parts):.2f}\n")
+    splits = make_classification_splits(m, n=30000, holdout=4000, noniid=True, skew=0.64)
+    print(f"non-IID partitions: mean majority-class fraction = {skewness(splits.train, splits.parts):.2f}\n")
     for algo in ("sync_sgd", "cocod", "easgd", "overlap_local_sgd"):
-        run(algo, args.tau if algo not in ("sync_sgd",) else 1, args.steps, train, test, parts, m)
+        run(algo, args.tau if algo not in ("sync_sgd",) else 1, args.steps, splits, m)

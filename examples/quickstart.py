@@ -1,51 +1,33 @@
 """Quickstart: Overlap-Local-SGD vs fully-synchronous SGD on 16 simulated
-workers (classification task), ~1 minute on CPU.
+workers (classification task) through the ``repro.api.Experiment`` facade,
+~1 minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py [--tau 2] [--alpha 0.6] [--steps 600]
 """
 import argparse
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.api import ClassificationSpec, Experiment
 from repro.config import AlgoConfig, OptimizerConfig
-from repro.core import make_algorithm
-from repro.data import WorkerBatcher, make_classification, partition_iid
-from repro.models.classifier import accuracy, init_mlp, mlp_loss
-from repro.optim import from_config as opt_from_config, schedules
-from repro.training import consensus_params, make_round_step, make_train_state
+from repro.optim import schedules
 
 
 def run(algo_name: str, tau: int, alpha: float, steps: int, m: int = 16) -> None:
-    data = make_classification(n=30000, dim=64, num_classes=10, noise=3.0, seed=0)
-    test_x, test_y = jnp.asarray(data.x[:4000]), jnp.asarray(data.y[:4000])
-    train = type(data)(x=data.x[4000:], y=data.y[4000:], num_classes=10)
-    parts = partition_iid(train, m)
-
-    algo = make_algorithm(AlgoConfig(name=algo_name, tau=tau, alpha=alpha, anchor_beta=0.7))
-    tau = algo.tau
-    opt = opt_from_config(OptimizerConfig(name="sgd", lr=0.1, momentum=0.9, nesterov=True))
-    params, axes = init_mlp(jax.random.PRNGKey(0), 64, 10)
-    state = make_train_state(params, m, opt, algo, axes)
-    step = jax.jit(make_round_step(mlp_loss, opt, algo, schedules.warmup_step_decay(0.1, 20, (steps // 2,)), axes))
-    batcher = WorkerBatcher(train, parts, 32)
-
-    t0 = time.time()
-    for r in range(steps // tau):
-        micro = [tuple(map(jnp.asarray, next(batcher))) for _ in range(tau)]
-        rb = jax.tree.map(lambda *xs: jnp.stack(xs), *micro)
-        state, ms = step(state, rb)
-        if r % max(1, (steps // tau) // 10) == 0:
-            print(f"  round {r:4d}  loss {float(np.asarray(ms['loss']).mean()):.4f}")
-    p = jax.tree.map(lambda t: t.astype(jnp.float32), consensus_params(state))
-    acc = accuracy(p, test_x, test_y)
-    print(f"{algo_name} (tau={tau}, alpha={alpha}): test acc {acc:.4f}  [{time.time()-t0:.1f}s]\n")
+    exp = Experiment(
+        task=ClassificationSpec(n=30000, holdout=4000, batch_per_worker=32),
+        strategy=AlgoConfig(name=algo_name, tau=tau, alpha=alpha, anchor_beta=0.7),
+        optimizer=OptimizerConfig(name="sgd", lr=0.1, momentum=0.9, nesterov=True),
+        schedule=schedules.warmup_step_decay(0.1, 20, (steps // 2,)),
+        workers=m,
+    )
+    rounds = steps // exp.tau
+    every = max(1, rounds // 10)
+    res = exp.fit(steps=steps, log=lambda r, loss: r % every == 0 and print(f"  round {r:4d}  loss {loss:.4f}"))
+    acc = exp.evaluate()["test_acc"]
+    print(f"{algo_name} (tau={exp.tau}, alpha={alpha}): test acc {acc:.4f}  [{res.wall_s:.1f}s]\n")
 
 
 if __name__ == "__main__":
@@ -56,5 +38,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     print("== fully-synchronous SGD baseline ==")
     run("sync_sgd", 1, 0.0, args.steps)
-    print(f"== Overlap-Local-SGD (the paper's algorithm) ==")
+    print("== Overlap-Local-SGD (the paper's algorithm) ==")
     run("overlap_local_sgd", args.tau, args.alpha, args.steps)

@@ -1,4 +1,5 @@
-"""End-to-end LM pretraining driver with Overlap-Local-SGD.
+"""End-to-end LM pretraining driver with Overlap-Local-SGD, built through
+the ``repro.api.Experiment`` facade.
 
 Trains a decoder-only transformer (reduced Qwen2-family block structure) on
 the synthetic bigram-structured token stream for a few hundred rounds, with
@@ -11,24 +12,17 @@ checkpointing. Presets:
     PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 import argparse
-import dataclasses
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
+from repro.api import Experiment, TokenStream
 from repro.config import AlgoConfig, AttentionConfig, ModelConfig, OptimizerConfig
-from repro.core import make_algorithm
-from repro.data import lm_batch_stream, stack_lm_batches
-from repro.models import transformer as T
-from repro.optim import from_config as opt_from_config, schedules
-from repro.training import make_round_step, make_train_state
+from repro.optim import schedules
 
 PRESETS = dict(
     tiny=dict(layers=4, d_model=128, d_ff=512, heads=4, kv=2, vocab=512, m=4, batch=8, seq=128),
@@ -56,35 +50,25 @@ def main() -> None:
         attention=AttentionConfig(num_heads=p["heads"], num_kv_heads=p["kv"], head_dim=p["d_model"] // p["heads"], qkv_bias=True),
         dtype="float32",
     )
-    params, axes = T.init_model(cfg, jax.random.PRNGKey(0))
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"model: {n_params/1e6:.1f}M params, {p['m']} Overlap-Local-SGD workers, tau={args.tau}")
+    exp = Experiment(
+        arch=cfg,
+        strategy=AlgoConfig(name="overlap_local_sgd", tau=args.tau, alpha=args.alpha, anchor_beta=0.7),
+        optimizer=OptimizerConfig(name="adamw", lr=3e-3, weight_decay=0.01),
+        schedule=schedules.cosine(3e-3, warmup_steps=20, total_steps=args.steps),
+        data=TokenStream(batch_per_worker=p["batch"], seq_len=p["seq"]),
+        workers=p["m"],
+    )
+    print(f"model: {exp.num_params/1e6:.1f}M params, {p['m']} Overlap-Local-SGD workers, tau={args.tau}")
 
-    algo = make_algorithm(AlgoConfig(name="overlap_local_sgd", tau=args.tau, alpha=args.alpha, anchor_beta=0.7))
-    opt = opt_from_config(OptimizerConfig(name="adamw", lr=3e-3, weight_decay=0.01))
-    state = make_train_state(params, p["m"], opt, algo, axes)
-    sched = schedules.cosine(3e-3, warmup_steps=20, total_steps=args.steps)
-
-    def loss_fn(prm, batch):
-        return T.lm_loss(cfg, prm, batch)
-
-    step = jax.jit(make_round_step(loss_fn, opt, algo, sched, axes))
-    streams = [lm_batch_stream(p["batch"], p["seq"], p["vocab"], seed=i) for i in range(p["m"])]
-    stream = stack_lm_batches(streams, p["m"])
+    import time
 
     t0 = time.time()
-    for r in range(args.steps // args.tau):
-        micro = []
-        for _ in range(args.tau):
-            toks, tgts = next(stream)
-            micro.append(dict(tokens=jnp.asarray(toks), targets=jnp.asarray(tgts)))
-        rb = jax.tree.map(lambda *xs: jnp.stack(xs), *micro)
-        state, ms = step(state, rb)
-        if r % 10 == 0:
-            loss = float(np.asarray(ms["loss"]).mean())
-            print(f"round {r:4d}  loss {loss:.4f}  ({(time.time()-t0):.0f}s)")
-    checkpoint.save(args.ckpt, state)
-    print(f"done: final loss {float(np.asarray(ms['loss']).mean()):.4f} "
+    res = exp.fit(
+        steps=args.steps,
+        log=lambda r, loss: r % 10 == 0 and print(f"round {r:4d}  loss {loss:.4f}  ({time.time()-t0:.0f}s)"),
+    )
+    checkpoint.save(args.ckpt, exp.state)
+    print(f"done: final loss {res.final_loss:.4f} "
           f"(vs ln(V)={np.log(p['vocab']):.2f} random); checkpoint -> {args.ckpt}")
 
 

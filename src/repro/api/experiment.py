@@ -1,0 +1,289 @@
+"""The ``Experiment`` facade: one config-driven entrypoint for training,
+evaluation and serving.
+
+Collapses the argparse drivers that used to re-implement the same wiring
+(model init → strategy → optimizer → train state → jitted round step → batch
+loop) into a single declarative object:
+
+    from repro.api import Experiment
+
+    exp = Experiment(arch="qwen2-7b", strategy="overlap_local_sgd",
+                     workers=4, rounds=20)
+    result = exp.fit()
+    print(exp.evaluate())          # held-out loss of the consensus model
+    engine = exp.serve(slots=4)    # batched generation on the fitted params
+
+Two task families are supported:
+
+* **LM** — ``arch`` names a registered architecture (reduced variant by
+  default) or is a full ``ModelConfig``; data is the synthetic token stream.
+* **classification** — ``task=ClassificationSpec(...)`` runs the paper's
+  CIFAR-10 stand-in (MLP on synthetic classification), the substrate of the
+  Table/Figure benchmarks.
+
+``strategy`` accepts a name, an ``AlgoConfig``, a two-phase ``CommStrategy``
+instance, or a legacy ``Algorithm`` (wrapped transparently) — including the
+DaSGD-style ``delayed_avg`` and LOSCAR-style ``sparse_anchor`` strategies.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AlgoConfig, ModelConfig, OptimizerConfig, ParallelPlan, get_arch
+from repro.core.strategy import CommStrategy, as_strategy, make_strategy
+from repro.data.loaders import (
+    ClassificationSplits,
+    classification_batch_fn,
+    lm_batch_fn,
+    make_classification_splits,
+    round_batch,
+)
+from repro.models import transformer as T
+from repro.models.classifier import accuracy, init_mlp, mlp_loss
+from repro.optim import from_config as opt_from_config
+from repro.optim import schedules
+from repro.optim.optimizers import Optimizer
+from repro.training import consensus_params, make_round_step, make_train_state
+
+
+@dataclass
+class ClassificationSpec:
+    """The synthetic classification task (paper §4's CIFAR-10 stand-in)."""
+
+    n: int = 30000
+    dim: int = 64
+    num_classes: int = 10
+    noise: float = 3.0
+    holdout: int = 4000
+    noniid: bool = False
+    skew: float = 0.64
+    batch_per_worker: int = 32
+    hidden: Tuple[int, ...] = (128, 64)
+    seed: int = 0
+    # pre-built splits (shared across experiments, e.g. a benchmark grid);
+    # overrides the generation parameters above
+    splits: Optional[ClassificationSplits] = None
+
+
+@dataclass
+class TokenStream:
+    """Synthetic LM token-stream spec (bigram-structured, per-worker seeds)."""
+
+    batch_per_worker: int = 2
+    seq_len: int = 64
+    seed: int = 0
+
+
+@dataclass
+class FitResult:
+    losses: List[float]  # per-round mean loss
+    state: Any  # final TrainState
+    rounds: int
+    steps: int  # local steps taken (rounds × τ)
+    wall_s: float
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[-1] if self.losses else float("nan")
+
+
+@dataclass
+class Experiment:
+    """Declarative training/serving experiment. See module docstring."""
+
+    arch: Union[str, ModelConfig, None] = None
+    task: Optional[ClassificationSpec] = None
+    strategy: Union[str, AlgoConfig, CommStrategy, Any] = "overlap_local_sgd"
+    optimizer: Union[str, OptimizerConfig, Optimizer] = field(default_factory=OptimizerConfig)
+    data: Optional[TokenStream] = None
+    parallel: Optional[ParallelPlan] = None  # reserved for mesh runs (see launch/dryrun.py)
+    workers: int = 4
+    rounds: int = 20
+    schedule: Optional[Callable] = None  # lr schedule; default derives from optimizer config
+    grad_clip: float = 0.0
+    microbatch: Optional[int] = None
+    full: bool = False  # use the full (not reduced) registered model config
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.arch is None and self.task is None:
+            self.task = ClassificationSpec()
+        if self.arch is not None and self.task is not None:
+            raise ValueError("specify either arch= (LM) or task= (classification), not both")
+        self._built = False
+        self.state = None
+
+    # -- construction -------------------------------------------------------
+
+    def _resolve_strategy(self) -> CommStrategy:
+        s = self.strategy
+        if isinstance(s, str):
+            s = AlgoConfig(name=s)
+        if isinstance(s, AlgoConfig):
+            return make_strategy(s)
+        return as_strategy(s)
+
+    def _resolve_optimizer(self) -> Tuple[Optimizer, Callable]:
+        o = self.optimizer
+        if isinstance(o, str):
+            o = OptimizerConfig(name=o)
+        if isinstance(o, OptimizerConfig):
+            sched = self.schedule or schedules.from_config(o)
+            return opt_from_config(o), sched
+        if self.schedule is None:
+            raise ValueError(
+                "a raw Optimizer instance carries no learning rate; pass schedule= "
+                "(e.g. schedules.constant(lr)) or use an OptimizerConfig"
+            )
+        return o, self.schedule
+
+    def build(self) -> "Experiment":
+        """Resolve configs into params/state/step-fn/batch-fn (idempotent)."""
+        if self._built:
+            return self
+        self.strategy_obj = self._resolve_strategy()
+        self.opt_obj, self.schedule_fn = self._resolve_optimizer()
+        key = jax.random.PRNGKey(self.seed)
+
+        if self.task is not None:
+            spec = self.task
+            self.splits = spec.splits or make_classification_splits(
+                self.workers,
+                n=spec.n,
+                dim=spec.dim,
+                num_classes=spec.num_classes,
+                noise=spec.noise,
+                holdout=spec.holdout,
+                noniid=spec.noniid,
+                skew=spec.skew,
+                seed=spec.seed,
+            )
+            if self.splits.num_workers != self.workers:
+                raise ValueError(
+                    f"task splits have {self.splits.num_workers} partitions but workers={self.workers}"
+                )
+            self.model_cfg = None
+            self.params, self.axes = init_mlp(key, spec.dim, spec.num_classes, hidden=spec.hidden)
+            self.loss_fn = mlp_loss
+            self.next_batch = classification_batch_fn(self.splits, spec.batch_per_worker, seed=spec.seed)
+        else:
+            if isinstance(self.arch, ModelConfig):
+                cfg = self.arch
+            else:
+                model = get_arch(self.arch).model
+                cfg = model if self.full else model.reduced()
+            self.model_cfg = cfg
+            stream = self.data or TokenStream()
+            self.params, self.axes = T.init_model(cfg, key)
+            self.loss_fn = lambda p, b: T.lm_loss(cfg, p, b)
+            self.next_batch = lm_batch_fn(
+                cfg, self.workers, stream.batch_per_worker, stream.seq_len, seed=stream.seed
+            )
+
+        self.state = make_train_state(self.params, self.workers, self.opt_obj, self.strategy_obj, self.axes)
+        self.step_fn = jax.jit(
+            make_round_step(
+                self.loss_fn,
+                self.opt_obj,
+                self.strategy_obj,
+                self.schedule_fn,
+                self.axes,
+                grad_clip=self.grad_clip,
+                microbatch=self.microbatch,
+            )
+        )
+        self._built = True
+        return self
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def tau(self) -> int:
+        self.build()
+        return self.strategy_obj.tau
+
+    @property
+    def num_params(self) -> int:
+        self.build()
+        return sum(int(x.size) for x in jax.tree.leaves(self.params))
+
+    # -- training -----------------------------------------------------------
+
+    def fit(
+        self,
+        rounds: Optional[int] = None,
+        steps: Optional[int] = None,
+        log: Optional[Callable[[int, float], None]] = None,
+    ) -> FitResult:
+        """Run the round loop. ``steps`` (local steps) is an alternative to
+        ``rounds``: rounds = steps // τ. ``log(round_idx, mean_loss)`` is
+        called once per round when given. Fitting continues from the current
+        state, so repeated calls accumulate training."""
+        self.build()
+        tau = self.strategy_obj.tau
+        if rounds is None:
+            rounds = (steps // tau) if steps is not None else self.rounds
+        losses: List[float] = []
+        t0 = time.time()
+        state = self.state
+        for r in range(rounds):
+            rb = round_batch(self.next_batch, tau)
+            state, ms = self.step_fn(state, rb)
+            loss = float(np.asarray(ms["loss"]).mean())
+            losses.append(loss)
+            if log is not None:
+                log(r, loss)
+        self.state = state
+        return FitResult(
+            losses=losses, state=state, rounds=rounds, steps=rounds * tau, wall_s=time.time() - t0
+        )
+
+    # -- evaluation ---------------------------------------------------------
+
+    def consensus(self):
+        """Float32 consensus (averaged) model — the paper's evaluation point."""
+        if self.state is None:
+            self.build()
+        return jax.tree.map(lambda t: t.astype(jnp.float32), consensus_params(self.state))
+
+    def evaluate(self, eval_batches: int = 8) -> dict:
+        """Evaluate the consensus model: classification → held-out accuracy;
+        LM → mean loss on fresh held-out token batches."""
+        self.build()
+        p = self.consensus()
+        if self.task is not None:
+            acc = accuracy(p, jnp.asarray(self.splits.test.x), jnp.asarray(self.splits.test.y))
+            return {"test_acc": float(acc)}
+        cfg = self.model_cfg
+        p = jax.tree.map(lambda t: t.astype(cfg.param_dtype), p)
+        if not hasattr(self, "_eval_fn"):  # cache: one compile per experiment
+            stream = self.data or TokenStream()
+            self._eval_stream = lm_batch_fn(
+                cfg, 1, stream.batch_per_worker, stream.seq_len, seed=stream.seed + 7919
+            )
+            self._eval_fn = jax.jit(lambda prm, b: self.loss_fn(prm, b)[0])
+        losses = []
+        for _ in range(eval_batches):
+            batch = jax.tree.map(lambda t: t[0], self._eval_stream())  # drop the worker axis
+            losses.append(float(self._eval_fn(p, batch)))
+        return {"eval_loss": float(np.mean(losses))}
+
+    # -- serving ------------------------------------------------------------
+
+    def serve(self, slots: int = 4, max_len: int = 256):
+        """Batched generation engine over the fitted consensus params
+        (LM experiments only)."""
+        from repro.serving import BatchedEngine
+
+        self.build()
+        if self.model_cfg is None:
+            raise ValueError("serve() requires an LM experiment (arch=...), not a classification task")
+        cfg = self.model_cfg
+        p = jax.tree.map(lambda t: t.astype(cfg.param_dtype), self.consensus())
+        return BatchedEngine(cfg, p, slots=slots, max_len=max_len)

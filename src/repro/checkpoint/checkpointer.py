@@ -3,6 +3,14 @@
 Handles the full TrainState (stacked params, optimizer state, anchor,
 counters). NamedTuples are stored with their field path; restore rebuilds
 into a caller-provided template tree so custom containers round-trip.
+
+Note on the two-phase protocol migration: TrainState gained an ``inflight``
+slot, and overlapped strategies carry their pending anchor there instead of
+in ``vars.z``. Checkpoints written before that change restore only into
+templates built from the legacy ``Algorithm`` path (whose inflight is None);
+restoring them into a native-strategy template raises KeyError on the
+missing ``inflight`` paths. Retrain or re-save through the legacy shim to
+migrate.
 """
 from __future__ import annotations
 

@@ -290,11 +290,14 @@ class AlgoConfig:
 
     name: str = "overlap_local_sgd"
     # overlap_local_sgd | local_sgd | sync_sgd | easgd | cocod | powersgd
+    # | delayed_avg (DaSGD) | sparse_anchor (LOSCAR)
     tau: int = 2  # local updates per round
     alpha: float = 0.6  # pullback strength (paper: 0.6 for tau>=2, 0.5 for tau=1)
     anchor_beta: float = 0.7  # anchor momentum (paper §4)
     easgd_beta: float = 0.9  # EASGD moving-rate (symmetric variant)
     powersgd_rank: int = 2
+    delay_steps: int = 1  # delayed_avg: consume the average k steps into the next round
+    sparse_k: float = 1.0  # sparse_anchor: top-k fraction of the anchor delta transmitted
     sync_router_stats: bool = True  # beyond-paper: all-reduce MoE router stats at boundaries
 
 

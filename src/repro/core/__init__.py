@@ -1,6 +1,17 @@
+"""Distributed-optimization core.
+
+Two API generations live here:
+
+* ``repro.core.strategy`` — the two-phase :class:`CommStrategy` protocol
+  (``boundary_apply`` consumes last round's collective, ``boundary_launch``
+  starts this round's; the launched value rides in ``TrainState.inflight``).
+  This is the current API; :func:`make_strategy` is the factory.
+* ``repro.core.algorithms`` — the legacy single-``boundary``-hook
+  ``Algorithm`` classes, kept as a deprecation shim and as the bit-exact
+  reference the golden equivalence tests compare against.
+"""
 from repro.core.algorithms import (
     Algorithm,
-    AlgoVars,
     CoCoDSGD,
     EASGD,
     LocalSGD,
@@ -8,17 +19,48 @@ from repro.core.algorithms import (
     SyncSGD,
     make_algorithm,
 )
+from repro.core.strategy import (
+    AlgoVars,
+    CommStrategy,
+    CoCoDStrategy,
+    DelayedAveragingStrategy,
+    EASGDStrategy,
+    LegacyStrategy,
+    LocalSGDStrategy,
+    OverlapLocalSGDStrategy,
+    PowerSGDStrategy,
+    SparseAnchorStrategy,
+    SyncSGDStrategy,
+    STRATEGIES,
+    as_strategy,
+    make_strategy,
+    sparsify_topk,
+)
 from repro.core import mixing, runtime_model
 
 __all__ = [
     "Algorithm",
     "AlgoVars",
     "CoCoDSGD",
+    "CoCoDStrategy",
+    "CommStrategy",
+    "DelayedAveragingStrategy",
     "EASGD",
+    "EASGDStrategy",
+    "LegacyStrategy",
     "LocalSGD",
+    "LocalSGDStrategy",
     "OverlapLocalSGD",
+    "OverlapLocalSGDStrategy",
+    "PowerSGDStrategy",
+    "STRATEGIES",
+    "SparseAnchorStrategy",
     "SyncSGD",
+    "SyncSGDStrategy",
+    "as_strategy",
     "make_algorithm",
+    "make_strategy",
     "mixing",
     "runtime_model",
+    "sparsify_topk",
 ]

@@ -1,24 +1,23 @@
-"""Distributed-optimization algorithms: Overlap-Local-SGD and all baselines
-the paper compares against.
+"""Legacy single-hook distributed-optimization algorithms (deprecated shim).
+
+This module is kept as a thin compatibility layer: new code should use the
+two-phase :class:`repro.core.strategy.CommStrategy` protocol, where the round
+boundary is explicitly split into ``boundary_apply`` (consume the collective
+launched last round — eq. 4) and ``boundary_launch`` (start this round's
+collective — eq. 5), with the launched-but-unconsumed value carried in
+``TrainState.inflight``. Here, by contrast, the overlap property is only
+*implicit* in the statement ordering inside ``boundary`` — which is exactly
+why the API was redesigned.
+
+The classes below remain the bit-exact reference semantics of the seed:
+``repro.training`` wraps them in :class:`repro.core.strategy.LegacyStrategy`
+(all work in the apply phase, nothing launched) and the golden equivalence
+tests in ``tests/test_strategies.py`` check the native ports against them.
 
 State layout (matches DESIGN.md §3): per-worker quantities carry a leading
 worker axis m; the anchor z (and its momentum v) are *unstacked* — they are
 identical across workers by construction, so on a mesh they are stored fully
 sharded (worker+fsdp axes) and materialize only inside the pullback.
-
-Each algorithm is a small set of pure hooks consumed by the round engine in
-``repro.training.train_loop``:
-
-    transform_grads(g_stacked)     per local step (sync-SGD/PowerSGD live here)
-    boundary(x, opt, vars, cfg)    every τ steps (pullback / averaging / anchor sync)
-
-The overlap property is *structural*: ``boundary`` for Overlap-Local-SGD
-first applies the pullback using the anchor computed at the PREVIOUS
-boundary (paper eq. (4) with z_k), then computes the new anchor mean (eq.
-(5)) whose only consumer is the NEXT round's pullback — τ local steps of
-compute sit between the reduce-scatter and its consumer, which is exactly
-the window XLA's latency-hiding scheduler uses to run the collective in the
-background (the paper's "communication thread").
 """
 from __future__ import annotations
 
@@ -28,59 +27,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import AlgoConfig
-from repro.kernels.anchor_mix import ops as anchor_ops
-from repro.parallel import anchor_axes, constrain, current_mesh, sharding_for, spec_for
+from repro.core.strategy import (  # shared primitives live with the new protocol
+    AlgoVars,
+    _broadcast_like,
+    _constrain_anchor,
+    _pullback,
+    _worker_mean,
+    x_stacked_leading,
+)
 from repro.utils.tree import tree_lerp
 
 
-class AlgoVars(NamedTuple):
-    """Algorithm-specific slots (unused slots are empty dicts/None)."""
-
-    z: Any = None  # anchor model (overlap, easgd) — unstacked
-    v: Any = None  # anchor momentum (overlap momentum variant)
-    extra: Any = None  # powersgd (Q, error) / cocod pending average
-
-
-def _worker_mean(x_stacked):
-    """Average over the worker axis; on a mesh this is the paper's model
-    all-reduce (lowered as reduce-scatter when the consumer is sharded)."""
-    return jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0).astype(t.dtype), x_stacked)
-
-
-def _broadcast_like(z, x_stacked):
-    return jax.tree.map(lambda zi, xi: jnp.broadcast_to(zi[None], xi.shape), z, x_stacked)
-
-
-def _constrain_anchor(z, axes_tree):
-    """Pin the anchor to its fully-sharded layout (reduce-scatter target)."""
-    mesh = current_mesh()
-    if mesh is None or axes_tree is None:
-        return z
-    from repro.parallel.sharding import fit_spec, spec_for
-    from jax.sharding import NamedSharding
-
-    a_axes = anchor_axes(axes_tree)
-
-    def one(t, ax):
-        spec = fit_spec(spec_for(ax), t.shape, mesh)
-        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
-
-    return jax.tree.map(
-        one,
-        z,
-        a_axes,
-        is_leaf=lambda t: isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t),
-    )
-
-
-def _pullback(x_stacked, z, alpha: float):
-    """Paper eq. (4): x_i ← (1−α)·x_i + α·z, for every worker i (fused
-    anchor-mix kernel on TPU)."""
-    return jax.vmap(lambda xi: anchor_ops.pullback_tree(xi, z, alpha))(x_stacked)
-
-
 class Algorithm:
-    """Base: plain Local SGD behaviour is 'do nothing' hooks."""
+    """Base: plain Local SGD behaviour is 'do nothing' hooks. Deprecated —
+    subclass :class:`repro.core.strategy.CommStrategy` instead."""
 
     name = "base"
     needs_anchor = False
@@ -106,11 +66,6 @@ class Algorithm:
         dev = jax.tree.map(lambda xi, mi: jnp.sum(jnp.square(xi.astype(jnp.float32) - mi[None].astype(jnp.float32))), x_stacked, mean)
         total = sum(jax.tree.leaves(dev)) / max(x_stacked_leading(x_stacked), 1)
         return {"consensus_dist": total}
-
-
-def x_stacked_leading(x_stacked) -> int:
-    leaves = jax.tree.leaves(x_stacked)
-    return int(leaves[0].shape[0]) if leaves else 1
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +191,9 @@ class CoCoDSGD(Algorithm):
 
 
 def make_algorithm(cfg: AlgoConfig) -> Algorithm:
+    """Deprecated: use :func:`repro.core.strategy.make_strategy`, which also
+    covers the delayed-averaging and sparse-anchor strategies the legacy
+    single-hook API cannot express."""
     table = {
         "overlap_local_sgd": OverlapLocalSGD,
         "local_sgd": LocalSGD,

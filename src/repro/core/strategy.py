@@ -1,0 +1,569 @@
+"""Two-phase communication strategies: the launch/consume contract.
+
+The paper's central claim is *structural*: the anchor collective launched at
+one round boundary is only consumed τ local steps later (eqs. 4–5), which is
+exactly the window XLA's latency-hiding scheduler uses to run the collective
+in the background. In the original ``Algorithm.boundary`` hook this property
+lived implicitly in statement ordering — nothing stopped a new algorithm
+from accidentally making the collective blocking. ``CommStrategy`` makes the
+overlap window a first-class contract by splitting the round boundary into
+two phases, with the launched-but-unconsumed collective carried explicitly
+as the ``inflight`` slot of ``TrainState``:
+
+    boundary_apply(x, vars, inflight)   consume the collective launched at
+                                        the PREVIOUS boundary (the pullback,
+                                        eq. 4) — this phase may not start a
+                                        new collective.
+    boundary_launch(x, vars) -> inflight
+                                        start this round's collective (the
+                                        anchor mean, eq. 5); its result is
+                                        only consumed at the NEXT boundary
+                                        (or, for delayed-averaging variants,
+                                        k steps into the next round via
+                                        ``local_post_update``).
+
+A *blocking* algorithm (Local SGD, EASGD) is expressed by putting its
+collective inside ``boundary_apply`` and leaving ``boundary_launch`` empty —
+the blocking/overlapped distinction is now visible in the code structure
+rather than implied by it.
+
+The round engine (``repro.training.train_loop``) drives, per round:
+
+    τ × [transform_grads → optimizer step → local_post_update(k)]
+    boundary_apply(x, vars, inflight)
+    boundary_launch(x, vars) -> new inflight
+
+State layout matches the legacy module (DESIGN.md §3): per-worker
+quantities carry a leading worker axis m; anchor-shaped quantities are
+unstacked and pinned to the fully-sharded anchor layout.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AlgoConfig
+from repro.kernels.anchor_mix import ops as anchor_ops
+from repro.parallel import anchor_axes, current_mesh
+from repro.utils.tree import tree_lerp
+
+
+class AlgoVars(NamedTuple):
+    """Strategy-owned state slots (unused slots are None)."""
+
+    z: Any = None  # anchor model (overlap, easgd, sparse) — unstacked
+    v: Any = None  # anchor momentum (overlap momentum variant)
+    extra: Any = None  # powersgd (Q, error) / sparse error feedback / legacy cocod
+
+
+# ---------------------------------------------------------------------------
+# shared tree primitives (also re-exported by repro.core.algorithms)
+# ---------------------------------------------------------------------------
+
+
+def _worker_mean(x_stacked):
+    """Average over the worker axis; on a mesh this is the paper's model
+    all-reduce (lowered as reduce-scatter when the consumer is sharded)."""
+    return jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0).astype(t.dtype), x_stacked)
+
+
+def _broadcast_like(z, x_stacked):
+    return jax.tree.map(lambda zi, xi: jnp.broadcast_to(zi[None], xi.shape), z, x_stacked)
+
+
+def _is_axes_leaf(t):
+    return isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t)
+
+
+def _constrain_anchor(z, axes_tree):
+    """Pin the anchor to its fully-sharded layout (reduce-scatter target)."""
+    mesh = current_mesh()
+    if mesh is None or axes_tree is None:
+        return z
+    from jax.sharding import NamedSharding
+
+    from repro.parallel.sharding import fit_spec, spec_for
+
+    a_axes = anchor_axes(axes_tree)
+
+    def one(t, ax):
+        spec = fit_spec(spec_for(ax), t.shape, mesh)
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, z, a_axes, is_leaf=_is_axes_leaf)
+
+
+def _pullback(x_stacked, z, alpha: float):
+    """Paper eq. (4): x_i ← (1−α)·x_i + α·z, for every worker i (fused
+    anchor-mix kernel on TPU)."""
+    return jax.vmap(lambda xi: anchor_ops.pullback_tree(xi, z, alpha))(x_stacked)
+
+
+def x_stacked_leading(x_stacked) -> int:
+    leaves = jax.tree.leaves(x_stacked)
+    return int(leaves[0].shape[0]) if leaves else 1
+
+
+def _stacked_axes(axes_tree):
+    """Worker-prefixed logical axes for a stacked (m, ...) copy of params."""
+    return jax.tree.map(lambda ax: ("worker",) + tuple(ax), axes_tree, is_leaf=_is_axes_leaf)
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+
+
+class CommStrategy:
+    """Base strategy: plain Local-SGD-without-averaging (all hooks no-ops).
+
+    Subclasses choose where their collective lives:
+
+    * overlapped  — launch it in :meth:`boundary_launch`, consume the carried
+      ``inflight`` at the next :meth:`boundary_apply` (or mid-round via
+      :meth:`local_post_update`). τ local steps of compute separate producer
+      and consumer — the paper's hidden-communication window.
+    * blocking    — run it inside :meth:`boundary_apply` and leave
+      :meth:`boundary_launch` returning ``None``.
+
+    The ``inflight`` pytree must keep a fixed structure across rounds (it is
+    a ``lax.scan`` carry): :meth:`init_inflight` and :meth:`boundary_launch`
+    must return structurally identical trees.
+    """
+
+    name = "base"
+    needs_anchor = False
+
+    def __init__(self, cfg: AlgoConfig):
+        self.cfg = cfg
+        self.tau = cfg.tau
+
+    # ---- state ----
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        return AlgoVars()
+
+    def init_inflight(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        """Initial carried collective — what round 0's apply phase consumes."""
+        return None
+
+    # ---- per-local-step hooks ----
+    def transform_grads(self, grads_stacked, vars: AlgoVars):
+        """Gradient-space hook (sync-SGD averaging / PowerSGD compression)."""
+        return grads_stacked, vars
+
+    def local_post_update(self, x_stacked, vars: AlgoVars, inflight, k_in_round):
+        """Mid-round consumption point: called after the optimizer update of
+        local step ``k_in_round`` (0-based, traced). Delayed-averaging
+        strategies consume ``inflight`` here instead of at the boundary."""
+        return x_stacked
+
+    # ---- round-boundary phases ----
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        """Phase 1 — consume the collective launched last round (eq. 4)."""
+        return x_stacked, vars
+
+    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        """Phase 2 — launch this round's collective (eq. 5); returns
+        ``(vars, inflight)`` with the launched value carried to the next
+        consumption point."""
+        return vars, None
+
+    # ---- AOT spec support (launch/specs.py) ----
+    def state_axes(self, axes_tree) -> Tuple[Optional[AlgoVars], Any]:
+        """(vars_axes, inflight_axes): logical-axes trees mirroring
+        ``init_vars``/``init_inflight`` output for sharding-spec
+        construction. ``None`` entries mean replicated."""
+        return None, None
+
+    # ---- diagnostics ----
+    def metrics(self, x_stacked, vars: AlgoVars) -> dict:
+        mean = _worker_mean(x_stacked)
+        dev = jax.tree.map(
+            lambda xi, mi: jnp.sum(jnp.square(xi.astype(jnp.float32) - mi[None].astype(jnp.float32))),
+            x_stacked,
+            mean,
+        )
+        total = sum(jax.tree.leaves(dev)) / max(x_stacked_leading(x_stacked), 1)
+        return {"consensus_dist": total}
+
+
+# ---------------------------------------------------------------------------
+# ports of the six seed algorithms
+# ---------------------------------------------------------------------------
+
+
+class SyncSGDStrategy(CommStrategy):
+    """Fully synchronous SGD: gradient all-reduce every local step (τ=1).
+
+    The collective lives in ``transform_grads`` — per-step and blocking by
+    nature; both boundary phases are empty.
+    """
+
+    name = "sync_sgd"
+
+    def __init__(self, cfg: AlgoConfig):
+        super().__init__(cfg)
+        self.tau = 1
+
+    def transform_grads(self, grads_stacked, vars):
+        g = _worker_mean(grads_stacked)
+        return _broadcast_like(g, grads_stacked), vars
+
+
+class LocalSGDStrategy(CommStrategy):
+    """Periodic model averaging — eq. (2). Blocking: the average is both
+    computed and consumed inside ``boundary_apply``; nothing is launched."""
+
+    name = "local_sgd"
+
+    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
+        avg = _worker_mean(x_stacked)
+        return _broadcast_like(avg, x_stacked), vars
+
+
+class OverlapLocalSGDStrategy(CommStrategy):
+    """The paper's algorithm (+ momentum variant when ``anchor_beta`` > 0).
+
+    * apply  (eq. 4): pull every worker toward the anchor carried in
+      ``inflight`` — that anchor was launched one full round (τ steps) ago.
+    * launch (eq. 5): mean of the pulled-back models becomes the next
+      anchor; with momentum, v ← β·v + (mean − z); z ← z + v (eqs. 10–11).
+      Its only consumer is the NEXT round's apply, so the collective
+      overlaps the next τ local steps.
+    """
+
+    name = "overlap_local_sgd"
+    needs_anchor = True
+
+    def __init__(self, cfg: AlgoConfig):
+        super().__init__(cfg)
+        self.momentum = cfg.anchor_beta > 0
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        if not self.momentum:
+            return AlgoVars()
+        z = jax.tree.map(lambda t: t[0], x_stacked)
+        z = _constrain_anchor(z, axes_tree)
+        return AlgoVars(z=z, v=jax.tree.map(jnp.zeros_like, z))
+
+    def init_inflight(self, x_stacked, vars, axes_tree=None):
+        z = jax.tree.map(lambda t: t[0], x_stacked)  # all workers start equal
+        return _constrain_anchor(z, axes_tree)
+
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        x_new = _pullback(x_stacked, inflight, self.cfg.alpha)
+        if self.momentum:
+            # remember the consumed anchor: launch needs it for eq. (10)
+            vars = AlgoVars(z=inflight, v=vars.v, extra=vars.extra)
+        return x_new, vars
+
+    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        mean_x = _worker_mean(x_stacked)
+        if self.momentum:
+            beta = self.cfg.anchor_beta
+            v_new = jax.tree.map(
+                lambda v, m, z: (beta * v.astype(jnp.float32) + (m.astype(jnp.float32) - z.astype(jnp.float32))).astype(v.dtype),
+                vars.v,
+                mean_x,
+                vars.z,
+            )
+            z_new = jax.tree.map(
+                lambda z, v: (z.astype(jnp.float32) + v.astype(jnp.float32)).astype(z.dtype), vars.z, v_new
+            )
+            vars = AlgoVars(z=vars.z, v=v_new, extra=vars.extra)
+        else:
+            z_new = mean_x
+        return vars, _constrain_anchor(z_new, axes_tree)
+
+    def state_axes(self, axes_tree):
+        a = anchor_axes(axes_tree)
+        vars_axes = AlgoVars(z=a, v=a) if self.momentum else None
+        return vars_axes, a
+
+
+class EASGDStrategy(CommStrategy):
+    """Elastic-averaging SGD [19]. Blocking in the original formulation: the
+    symmetric mixing collective runs inside ``boundary_apply`` (the worker
+    waits on mean(x) before continuing); nothing is launched."""
+
+    name = "easgd"
+    needs_anchor = True
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        z = jax.tree.map(lambda t: t[0], x_stacked)
+        return AlgoVars(z=_constrain_anchor(z, axes_tree))
+
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        alpha = self.cfg.alpha
+        z = vars.z
+        x_new = _pullback(x_stacked, z, alpha)
+        # symmetric update: z ← z + α·Σ_i (x_i − z) = (1−mα)z + mα·mean(x)
+        m = x_stacked_leading(x_stacked)
+        rate = min(alpha * m, 1.0)
+        mean_x = _worker_mean(x_stacked)  # pre-pullback models (symmetric W)
+        z_new = _constrain_anchor(tree_lerp(z, mean_x, rate), axes_tree)
+        return x_new, AlgoVars(z=z_new, v=vars.v, extra=vars.extra)
+
+    def state_axes(self, axes_tree):
+        return AlgoVars(z=anchor_axes(axes_tree)), None
+
+
+class _AvgRebaseStrategy(CommStrategy):
+    """Shared machinery for strategies whose launched collective is the mean
+    of the round's models plus a per-worker copy for delta correction, and
+    whose consumption re-bases x_i ← avg(x₀) + (x_i − x₀ᵢ)."""
+
+    class Inflight(NamedTuple):
+        avg: Any  # mean of launch-time models (the overlapped collective)
+        x0: Any  # per-worker launch-time models (local correction term)
+
+    def init_inflight(self, x_stacked, vars, axes_tree=None):
+        return self.Inflight(avg=_worker_mean(x_stacked), x0=jax.tree.map(jnp.copy, x_stacked))
+
+    def _rebase(self, x_stacked, inflight):
+        return jax.tree.map(
+            lambda xi, xs, av: (av[None].astype(jnp.float32) + xi.astype(jnp.float32) - xs.astype(jnp.float32)).astype(xi.dtype),
+            x_stacked,
+            inflight.x0,
+            inflight.avg,
+        )
+
+    def boundary_launch(self, x_stacked, vars, axes_tree=None):
+        return vars, self.Inflight(avg=_worker_mean(x_stacked), x0=jax.tree.map(jnp.copy, x_stacked))
+
+    def state_axes(self, axes_tree):
+        return None, self.Inflight(avg=anchor_axes(axes_tree), x0=_stacked_axes(axes_tree))
+
+
+class CoCoDStrategy(_AvgRebaseStrategy):
+    """CoCoD-SGD [20] in its native two-phase form: launch averages the
+    round's *starting* models, apply (one round later) re-bases each worker
+    onto that average plus its local delta. Decoupled like Overlap-Local-SGD
+    but without the pullback contraction. Equivalent to
+    :class:`DelayedAveragingStrategy` with the delay pinned to τ.
+    """
+
+    name = "cocod"
+
+    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
+        return self._rebase(x_stacked, inflight), vars
+
+
+class PowerSGDStrategy(CommStrategy):
+    """PowerSGD [5]: rank-r gradient compression, synchronous (τ=1). The
+    compressed collectives live in ``transform_grads`` (per-step); both
+    boundary phases are empty. Delegates the factor math to the legacy
+    implementation in :mod:`repro.core.powersgd`."""
+
+    name = "powersgd"
+
+    def __init__(self, cfg: AlgoConfig):
+        super().__init__(cfg)
+        self.tau = 1
+        from repro.core.powersgd import PowerSGD  # deferred: avoids import cycle
+
+        self._impl = PowerSGD(cfg)
+        self.rank = self._impl.rank
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        return self._impl.init_vars(x_stacked, axes_tree)
+
+    def transform_grads(self, grads_stacked, vars: AlgoVars):
+        return self._impl.transform_grads(grads_stacked, vars)
+
+
+# ---------------------------------------------------------------------------
+# new strategies the single-hook API could not express cleanly
+# ---------------------------------------------------------------------------
+
+
+class DelayedAveragingStrategy(_AvgRebaseStrategy):
+    """DaSGD-style delayed averaging (arXiv:2006.00441).
+
+    The average of the round's models is launched at the boundary but only
+    *applied k local steps into the next round* — modelling a collective
+    whose transit time is shorter than a full round. On arrival each worker
+    re-bases onto the average plus the local progress it made while the
+    collective was in flight:
+
+        after local step k:  x_i ← avg(x₀) + (x_i − x₀ᵢ)
+
+    ``delay_steps`` ∈ [1, τ]; k = τ degenerates to boundary consumption
+    (CoCoD). This strategy is only expressible because consumption is a
+    separate phase from launch — under the old single ``boundary`` hook the
+    apply point was hard-wired to the round boundary.
+    """
+
+    name = "delayed_avg"
+
+    def __init__(self, cfg: AlgoConfig):
+        super().__init__(cfg)
+        if not 1 <= cfg.delay_steps <= cfg.tau:
+            raise ValueError(f"delay_steps must be in [1, tau={cfg.tau}], got {cfg.delay_steps}")
+        self.delay = cfg.delay_steps
+
+    def local_post_update(self, x_stacked, vars, inflight, k_in_round):
+        if self.delay >= self.tau:  # consumed at the boundary instead
+            return x_stacked
+        # cond, not where: the rebase only materializes on the arrival step
+        arrived = k_in_round == self.delay - 1  # after the delay-th local update
+        return jax.lax.cond(arrived, lambda x: self._rebase(x, inflight), lambda x: x, x_stacked)
+
+    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
+        if self.delay >= self.tau:
+            return self._rebase(x_stacked, inflight), vars
+        return x_stacked, vars
+
+
+def sparsify_topk(delta, k: float):
+    """Keep the top-``k`` fraction of entries of ``delta`` by magnitude
+    (per-leaf), zeroing the rest. k ≥ 1 is the identity."""
+    if k >= 1.0:
+        return delta
+
+    def one(d):
+        if d.size <= 1:
+            return d
+        flat = jnp.abs(d.astype(jnp.float32)).reshape(-1)
+        thresh = jnp.quantile(flat, 1.0 - k)
+        return jnp.where(jnp.abs(d) >= thresh.astype(d.dtype), d, jnp.zeros_like(d))
+
+    return jax.tree.map(one, delta)
+
+
+class SparseAnchorStrategy(CommStrategy):
+    """LOSCAR-style top-k sparse anchor averaging with delay correction.
+
+    Overlap-Local-SGD where the launched anchor update transmits only the
+    top-``sparse_k`` fraction of the anchor *delta* Δ = mean(x) − z by
+    magnitude — a sparse collective whose payload shrinks with k. The
+    truncated residual is kept as per-leaf error feedback e and folded into
+    the next round's delta (the delay correction), so nothing is lost, only
+    delayed:
+
+        s   = top_k(Δ + e)          (the sparse collective payload)
+        e'  = (Δ + e) − s           (carried correction)
+        z'  = z + s                 (next anchor, consumed τ steps later)
+
+    At ``sparse_k = 1`` this is exactly vanilla Overlap-Local-SGD (the
+    residual is identically zero and z' = mean(x)).
+    """
+
+    name = "sparse_anchor"
+    needs_anchor = True
+
+    def __init__(self, cfg: AlgoConfig):
+        super().__init__(cfg)
+        if not 0.0 < cfg.sparse_k <= 1.0:
+            raise ValueError(f"sparse_k must be in (0, 1], got {cfg.sparse_k}")
+        self.k = cfg.sparse_k
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        z = _constrain_anchor(jax.tree.map(lambda t: t[0], x_stacked), axes_tree)
+        err = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), z)
+        return AlgoVars(z=z, extra=err)
+
+    def init_inflight(self, x_stacked, vars, axes_tree=None):
+        return _constrain_anchor(jax.tree.map(lambda t: t[0], x_stacked), axes_tree)
+
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        x_new = _pullback(x_stacked, inflight, self.cfg.alpha)
+        # the consumed anchor is the base of this round's launched delta
+        return x_new, AlgoVars(z=inflight, v=vars.v, extra=vars.extra)
+
+    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        mean_x = _worker_mean(x_stacked)
+        if self.k >= 1.0:  # dense: bitwise-identical to OverlapLocalSGDStrategy
+            z_new = mean_x
+            err = vars.extra
+        else:
+            delta = jax.tree.map(
+                lambda m, z, e: m.astype(jnp.float32) - z.astype(jnp.float32) + e, mean_x, vars.z, vars.extra
+            )
+            s = sparsify_topk(delta, self.k)
+            err = jax.tree.map(lambda d, si: d - si, delta, s)
+            z_new = jax.tree.map(lambda z, si: (z.astype(jnp.float32) + si).astype(z.dtype), vars.z, s)
+        z_new = _constrain_anchor(z_new, axes_tree)
+        return AlgoVars(z=vars.z, v=vars.v, extra=err), z_new
+
+    def state_axes(self, axes_tree):
+        a = anchor_axes(axes_tree)
+        return AlgoVars(z=a, extra=a), a
+
+
+# ---------------------------------------------------------------------------
+# legacy adapter + factory
+# ---------------------------------------------------------------------------
+
+
+class LegacyStrategy(CommStrategy):
+    """Adapter: runs a legacy single-hook ``Algorithm`` under the two-phase
+    protocol. Everything the old ``boundary`` did happens in
+    ``boundary_apply`` (i.e. treated as blocking); nothing is launched. This
+    preserves the seed semantics bit-for-bit — it is the reference the
+    golden equivalence tests compare the native ports against."""
+
+    def __init__(self, algorithm):
+        self.algorithm = algorithm
+        self.cfg = algorithm.cfg
+        self.tau = algorithm.tau
+        self.name = algorithm.name
+        self.needs_anchor = algorithm.needs_anchor
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        return self.algorithm.init_vars(x_stacked, axes_tree)
+
+    def transform_grads(self, grads_stacked, vars):
+        return self.algorithm.transform_grads(grads_stacked, vars)
+
+    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
+        return self.algorithm.boundary(x_stacked, vars, axes_tree)
+
+    def state_axes(self, axes_tree):
+        # mirror the legacy algorithms' state layout: sharded anchor (+ its
+        # momentum for the overlap momentum variant), worker-stacked cocod
+        # round-start copy; anything else (powersgd factors) replicates
+        a = anchor_axes(axes_tree)
+        z_ax = a if self.needs_anchor else None
+        v_ax = a if (self.name == "overlap_local_sgd" and getattr(self.cfg, "anchor_beta", 0) > 0) else None
+        extra_ax = _stacked_axes(axes_tree) if self.name == "cocod" else None
+        if z_ax is None and v_ax is None and extra_ax is None:
+            return None, None
+        return AlgoVars(z=z_ax, v=v_ax, extra=extra_ax), None
+
+    def metrics(self, x_stacked, vars):
+        return self.algorithm.metrics(x_stacked, vars)
+
+
+def as_strategy(algorithm_or_strategy) -> CommStrategy:
+    """Coerce either API to a CommStrategy (legacy Algorithms get wrapped)."""
+    if isinstance(algorithm_or_strategy, CommStrategy):
+        return algorithm_or_strategy
+    from repro.core.algorithms import Algorithm
+
+    if isinstance(algorithm_or_strategy, Algorithm):
+        return LegacyStrategy(algorithm_or_strategy)
+    raise TypeError(f"expected CommStrategy or Algorithm, got {type(algorithm_or_strategy)!r}")
+
+
+STRATEGIES = {
+    "overlap_local_sgd": OverlapLocalSGDStrategy,
+    "local_sgd": LocalSGDStrategy,
+    "sync_sgd": SyncSGDStrategy,
+    "easgd": EASGDStrategy,
+    "cocod": CoCoDStrategy,
+    "powersgd": PowerSGDStrategy,
+    "delayed_avg": DelayedAveragingStrategy,
+    "sparse_anchor": SparseAnchorStrategy,
+}
+
+_ALIASES = {"dasgd": "delayed_avg", "loscar": "sparse_anchor", "overlap": "overlap_local_sgd"}
+
+
+def make_strategy(cfg: AlgoConfig) -> CommStrategy:
+    name = _ALIASES.get(cfg.name, cfg.name)
+    if name not in STRATEGIES:
+        raise ValueError(f"unknown strategy {cfg.name!r}; known: {sorted(STRATEGIES) + sorted(_ALIASES)}")
+    return STRATEGIES[name](cfg)

@@ -1,14 +1,26 @@
+from repro.data.loaders import (
+    ClassificationSplits,
+    classification_batch_fn,
+    lm_batch_fn,
+    make_classification_splits,
+    round_batch,
+)
 from repro.data.partition import partition_iid, partition_noniid, skewness
 from repro.data.pipeline import WorkerBatcher, stack_lm_batches
 from repro.data.synthetic import ClassificationData, lm_batch_stream, make_classification
 
 __all__ = [
     "ClassificationData",
+    "ClassificationSplits",
     "WorkerBatcher",
+    "classification_batch_fn",
+    "lm_batch_fn",
     "lm_batch_stream",
     "make_classification",
+    "make_classification_splits",
     "partition_iid",
     "partition_noniid",
+    "round_batch",
     "skewness",
     "stack_lm_batches",
 ]

@@ -1,0 +1,109 @@
+"""Worker-stacked batch builders shared by the Experiment facade, the
+launchers, the examples and the benchmarks.
+
+This is the single home for the synthetic batch wiring that used to be
+duplicated across ``launch/train.py``, ``examples/train_lm.py`` and the
+classification drivers: a *batch fn* is a zero-arg callable returning one
+worker-stacked per-step batch (leaves shaped (m, b, ...)), and
+:func:`round_batch` stacks τ of them into the (τ, m, b, ...) layout the
+round engine scans over.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.data.partition import partition_iid, partition_noniid
+from repro.data.pipeline import WorkerBatcher
+from repro.data.synthetic import ClassificationData, lm_batch_stream, make_classification
+
+
+def round_batch(next_batch: Callable, tau: int):
+    """Stack τ per-step batches (m, b, ...) into one round batch (τ, m, b, ...)."""
+    micro = [next_batch() for _ in range(tau)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *micro)
+
+
+def lm_batch_fn(cfg: ModelConfig, m: int, batch: int, seq: int, seed: int = 0) -> Callable:
+    """Worker-stacked synthetic LM batches for ``cfg``, including the
+    modality-frontend variants (vision patch embeddings, audio codebooks)."""
+    streams = [lm_batch_stream(batch, seq, cfg.vocab_size, seed=seed + i) for i in range(m)]
+    rng = np.random.default_rng(seed)
+
+    def vlm_extra():
+        fe = cfg.frontend
+        return dict(
+            image_embeds=jnp.asarray(
+                rng.normal(size=(m, batch, fe.tokens_per_item, fe.embed_dim)).astype(np.float32)
+            )
+        )
+
+    def next_batch():
+        toks, tgts = zip(*[next(s) for s in streams])
+        toks, tgts = np.stack(toks), np.stack(tgts)
+        fe = cfg.frontend
+        if fe is not None and fe.kind == "audio":
+            k = fe.num_codebooks
+            toks = rng.integers(0, cfg.vocab_size, (m, batch, k, seq)).astype(np.int32)
+            tgts = rng.integers(0, cfg.vocab_size, (m, batch, k, seq)).astype(np.int32)
+            return dict(tokens=jnp.asarray(toks), targets=jnp.asarray(tgts))
+        out = dict(tokens=jnp.asarray(toks), targets=jnp.asarray(tgts))
+        if fe is not None and fe.kind == "vision":
+            out.update(vlm_extra())
+        return out
+
+    return next_batch
+
+
+@dataclass
+class ClassificationSplits:
+    """A train/test split plus per-worker index partitions."""
+
+    train: ClassificationData
+    test: ClassificationData
+    parts: List[np.ndarray]
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.parts)
+
+
+def make_classification_splits(
+    m: int,
+    *,
+    n: int = 30000,
+    dim: int = 64,
+    num_classes: int = 10,
+    noise: float = 3.0,
+    holdout: int = 4000,
+    noniid: bool = False,
+    skew: float = 0.64,
+    seed: int = 0,
+) -> ClassificationSplits:
+    """The synthetic classification task (CIFAR-10/ResNet-18 stand-in) split
+    into holdout test set + per-worker partitions — previously re-derived in
+    quickstart, noniid_stability and benchmarks/common."""
+    data = make_classification(n=n, dim=dim, num_classes=num_classes, noise=noise, seed=seed)
+    test = type(data)(x=data.x[:holdout], y=data.y[:holdout], num_classes=num_classes)
+    train = type(data)(x=data.x[holdout:], y=data.y[holdout:], num_classes=num_classes)
+    if noniid:
+        parts = partition_noniid(train, m, skew=skew, seed=seed)
+    else:
+        parts = partition_iid(train, m, seed=seed)
+    return ClassificationSplits(train=train, test=test, parts=parts)
+
+
+def classification_batch_fn(splits: ClassificationSplits, batch_per_worker: int, seed: int = 0) -> Callable:
+    """Worker-stacked (x, y) batches from pre-partitioned classification data."""
+    batcher = WorkerBatcher(splits.train, splits.parts, batch_per_worker, seed=seed)
+
+    def next_batch():
+        x, y = next(batcher)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    return next_batch

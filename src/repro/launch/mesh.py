@@ -16,13 +16,14 @@ jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.parallel.sharding import make_auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def device_count(*, multi_pod: bool = False) -> int:
@@ -37,4 +38,4 @@ ICI_BW = 50e9  # B/s per link
 
 def make_smoke_mesh(workers: int = 2, fsdp: int = 2, tensor: int = 2):
     """Small host-device mesh for CI-scale sharding tests (8 devices)."""
-    return jax.make_mesh((workers, fsdp, tensor), ("worker", "fsdp", "tensor"), axis_types=(AxisType.Auto,) * 3)
+    return make_auto_mesh((workers, fsdp, tensor), ("worker", "fsdp", "tensor"))

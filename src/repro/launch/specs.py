@@ -23,6 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import AlgoConfig, ArchConfig, InputShape, ModelConfig, OptimizerConfig, ParallelPlan
 from repro.core.algorithms import AlgoVars, make_algorithm
+from repro.core.strategy import CommStrategy, _stacked_axes
 from repro.models import transformer as T
 from repro.optim import optimizers as opt_mod
 from repro.parallel import sharding as sh
@@ -135,46 +136,65 @@ def batch_shardings(batch_specs, mesh: Mesh, rules: dict):
 # train state specs ---------------------------------------------------------
 
 
+def _axes_tree_shardings(ax_tree, sds_tree, mesh: Mesh, rules: dict):
+    """Map a logical-axes tree (leaves = axes tuples, mirroring ``sds_tree``)
+    to NamedShardings. A ``None`` node — the whole tree or any subtree —
+    replicates the corresponding specs."""
+    replicate = lambda sub: jax.tree.map(lambda s: NamedSharding(mesh, P()), sub)
+    if ax_tree is None:
+        return replicate(sds_tree)
+
+    def one(ax, sub):
+        if ax is None:
+            return replicate(sub)
+        return NamedSharding(mesh, sh.fit_spec(sh.spec_for(ax, rules), sub.shape, mesh))
+
+    is_leaf = lambda t: t is None or (
+        isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t)
+    )
+    return jax.tree.map(one, ax_tree, sds_tree, is_leaf=is_leaf)
+
+
 def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mesh: Mesh, rules: dict):
+    """Abstract TrainState + shardings for ``algo`` — a legacy ``Algorithm``
+    or a two-phase ``CommStrategy`` (whose ``state_axes`` hook supplies the
+    vars/inflight layouts, including the carried anchor collective)."""
     params_sds, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
     m = plan.workers
 
     x_sds = jax.tree.map(lambda s: _sds((m,) + tuple(s.shape), s.dtype), params_sds)
     opt_sds = opt_mod.SGDState(momentum=x_sds)
-
-    z_sds = v_sds = None
-    if algo.needs_anchor:
-        z_sds = params_sds
-        if getattr(algo.cfg, "anchor_beta", 0) > 0 and algo.name == "overlap_local_sgd":
-            v_sds = params_sds
-    extra = None
-    if algo.name == "cocod":
-        extra = x_sds
-    vars_sds = AlgoVars(z=z_sds, v=v_sds, extra=extra)
-    state_sds = TrainState(x=x_sds, opt=opt_sds, vars=vars_sds, step=_sds((), jnp.int32))
-
-    # shardings (fit_spec demotes non-dividing dims to replication)
-    is_axes_leaf = lambda t: isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t)
-    x_sh = jax.tree.map(
-        lambda ax, s: NamedSharding(mesh, sh.fit_spec(sh.spec_for(("worker",) + tuple(ax), rules), s.shape, mesh)),
-        axes,
-        x_sds,
-        is_leaf=is_axes_leaf,
-    )
+    x_sh = _axes_tree_shardings(_stacked_axes(axes), x_sds, mesh, rules)
     opt_sh = opt_mod.SGDState(momentum=x_sh)
-    anchor_ax = sh.anchor_axes(axes)
-    z_sh = jax.tree.map(
-        lambda ax, s: NamedSharding(mesh, sh.fit_spec(sh.spec_for(ax, rules), s.shape, mesh)),
-        anchor_ax,
-        params_sds,
-        is_leaf=is_axes_leaf,
-    )
-    vars_sh = AlgoVars(
-        z=z_sh if z_sds is not None else None,
-        v=z_sh if v_sds is not None else None,
-        extra=x_sh if extra is not None else None,
-    )
-    state_sh = TrainState(x=x_sh, opt=opt_sh, vars=vars_sh, step=NamedSharding(mesh, P()))
+
+    if isinstance(algo, CommStrategy):
+        vars_sds = jax.eval_shape(lambda xs: algo.init_vars(xs, None), x_sds)
+        inflight_sds = jax.eval_shape(lambda xs, vs: algo.init_inflight(xs, vs, None), x_sds, vars_sds)
+        vars_axes, inflight_axes = algo.state_axes(axes)
+        vars_sh = _axes_tree_shardings(vars_axes, vars_sds, mesh, rules)
+        inflight_sh = _axes_tree_shardings(inflight_axes, inflight_sds, mesh, rules)
+    else:
+        z_sds = v_sds = None
+        if algo.needs_anchor:
+            z_sds = params_sds
+            if getattr(algo.cfg, "anchor_beta", 0) > 0 and algo.name == "overlap_local_sgd":
+                v_sds = params_sds
+        extra = None
+        if algo.name == "cocod":
+            extra = x_sds
+        vars_sds = AlgoVars(z=z_sds, v=v_sds, extra=extra)
+        inflight_sds = None
+        anchor_ax = sh.anchor_axes(axes)
+        z_sh = _axes_tree_shardings(anchor_ax, params_sds, mesh, rules)
+        vars_sh = AlgoVars(
+            z=z_sh if z_sds is not None else None,
+            v=z_sh if v_sds is not None else None,
+            extra=x_sh if extra is not None else None,
+        )
+        inflight_sh = None
+
+    state_sds = TrainState(x=x_sds, opt=opt_sds, vars=vars_sds, step=_sds((), jnp.int32), inflight=inflight_sds)
+    state_sh = TrainState(x=x_sh, opt=opt_sh, vars=vars_sh, step=NamedSharding(mesh, P()), inflight=inflight_sh)
     return state_sds, state_sh, axes
 
 
@@ -183,14 +203,7 @@ def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mes
 
 def serve_param_specs(cfg: ModelConfig, mesh: Mesh, rules: dict):
     params_sds, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
-    is_axes_leaf = lambda t: isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t)
-    sh_tree = jax.tree.map(
-        lambda ax, s: NamedSharding(mesh, sh.fit_spec(sh.spec_for(ax, rules), s.shape, mesh)),
-        axes,
-        params_sds,
-        is_leaf=is_axes_leaf,
-    )
-    return params_sds, sh_tree, axes
+    return params_sds, _axes_tree_shardings(axes, params_sds, mesh, rules), axes
 
 
 def prefill_input_specs(cfg: ModelConfig, shape: InputShape):

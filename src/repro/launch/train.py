@@ -1,4 +1,4 @@
-"""Training launcher.
+"""Training launcher — a thin CLI over :class:`repro.api.Experiment`.
 
 Single-host CPU execution runs the reduced variant of the selected
 architecture for a quick end-to-end check; on a real TPU slice the same
@@ -7,63 +7,31 @@ that path AOT — see launch/dryrun.py).
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --rounds 20 \
         [--algo overlap_local_sgd] [--tau 2] [--alpha 0.6] [--workers 4] [--full]
+
+``--algo`` accepts every two-phase strategy, including the new
+``delayed_avg`` (DaSGD) and ``sparse_anchor`` (LOSCAR) variants.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro import checkpoint
-from repro.config import AlgoConfig, OptimizerConfig, get_arch, list_archs
-from repro.core import make_algorithm
-from repro.data import lm_batch_stream
-from repro.models import transformer as T
-from repro.optim import from_config as opt_from_config
+from repro.api import Experiment, TokenStream
+from repro.config import AlgoConfig, OptimizerConfig, list_archs
+from repro.core import STRATEGIES
 from repro.optim import schedules
-from repro.training import make_round_step, make_train_state
-
-
-def make_batch_fn(cfg, m: int, batch: int, seq: int):
-    streams = [lm_batch_stream(batch, seq, cfg.vocab_size, seed=i) for i in range(m)]
-
-    def vlm_extra(rng):
-        fe = cfg.frontend
-        return dict(
-            image_embeds=jnp.asarray(
-                rng.normal(size=(m, batch, fe.tokens_per_item, fe.embed_dim)).astype(np.float32)
-            )
-        )
-
-    rng = np.random.default_rng(0)
-
-    def next_batch():
-        toks, tgts = zip(*[next(s) for s in streams])
-        toks, tgts = np.stack(toks), np.stack(tgts)
-        fe = cfg.frontend
-        if fe is not None and fe.kind == "audio":
-            k = fe.num_codebooks
-            toks = rng.integers(0, cfg.vocab_size, (m, batch, k, seq)).astype(np.int32)
-            tgts = rng.integers(0, cfg.vocab_size, (m, batch, k, seq)).astype(np.int32)
-            return dict(tokens=jnp.asarray(toks), targets=jnp.asarray(tgts))
-        out = dict(tokens=jnp.asarray(toks), targets=jnp.asarray(tgts))
-        if fe is not None and fe.kind == "vision":
-            out.update(vlm_extra(rng))
-        return out
-
-    return next_batch
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--algo", default="overlap_local_sgd")
+    ap.add_argument("--algo", default="overlap_local_sgd", choices=sorted(STRATEGIES))
     ap.add_argument("--tau", type=int, default=2)
     ap.add_argument("--alpha", type=float, default=0.6)
     ap.add_argument("--anchor-beta", type=float, default=0.7)
+    ap.add_argument("--delay-steps", type=int, default=1, help="delayed_avg: consume k steps into the round")
+    ap.add_argument("--sparse-k", type=float, default=1.0, help="sparse_anchor: top-k fraction transmitted")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--batch", type=int, default=2)
@@ -73,30 +41,39 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
-    arch = get_arch(args.arch)
-    cfg = arch.model if args.full else arch.model.reduced()
-    params, axes = T.init_model(cfg, jax.random.PRNGKey(0))
-    n = sum(x.size for x in jax.tree.leaves(params))
-    print(f"{cfg.name}: {n/1e6:.1f}M params | {args.algo} tau={args.tau} alpha={args.alpha} m={args.workers}")
-
-    algo = make_algorithm(AlgoConfig(name=args.algo, tau=args.tau, alpha=args.alpha, anchor_beta=args.anchor_beta))
-    opt = opt_from_config(OptimizerConfig(name="sgd", lr=args.lr, momentum=0.9, nesterov=True))
-    state = make_train_state(params, args.workers, opt, algo, axes)
-    step = jax.jit(
-        make_round_step(lambda p, b: T.lm_loss(cfg, p, b), opt, algo, schedules.constant(args.lr), axes)
+    exp = Experiment(
+        arch=args.arch,
+        strategy=AlgoConfig(
+            name=args.algo,
+            tau=args.tau,
+            alpha=args.alpha,
+            anchor_beta=args.anchor_beta,
+            delay_steps=args.delay_steps,
+            sparse_k=args.sparse_k,
+        ),
+        optimizer=OptimizerConfig(name="sgd", lr=args.lr, momentum=0.9, nesterov=True),
+        schedule=schedules.constant(args.lr),
+        data=TokenStream(batch_per_worker=args.batch, seq_len=args.seq),
+        workers=args.workers,
+        rounds=args.rounds,
+        full=args.full,
     )
-    next_batch = make_batch_fn(cfg, args.workers, args.batch, args.seq)
+    exp.build()
+    print(
+        f"{exp.model_cfg.name}: {exp.num_params/1e6:.1f}M params | "
+        f"{args.algo} tau={exp.tau} alpha={args.alpha} m={args.workers}"
+    )
 
     t0 = time.time()
-    for r in range(args.rounds):
-        micro = [next_batch() for _ in range(algo.tau)]
-        rb = jax.tree.map(lambda *xs: jnp.stack(xs), *micro)
-        state, ms = step(state, rb)
-        loss = float(np.asarray(ms["loss"]).mean())
-        if r % max(1, args.rounds // 10) == 0 or r == args.rounds - 1:
+    every = max(1, args.rounds // 10)
+
+    def log(r, loss):
+        if r % every == 0 or r == args.rounds - 1:
             print(f"round {r:4d}  loss {loss:.4f}  ({time.time()-t0:.0f}s)")
+
+    exp.fit(log=log)
     if args.ckpt:
-        checkpoint.save(args.ckpt, state)
+        checkpoint.save(args.ckpt, exp.state)
         print(f"checkpoint -> {args.ckpt}")
 
 

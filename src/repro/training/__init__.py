@@ -1,3 +1,10 @@
+"""Round-based training engine for two-phase communication strategies.
+
+``make_round_step`` drives, per round: τ local steps (scan) →
+``boundary_apply`` (consume last round's collective) → ``boundary_launch``
+(start this round's, carried in ``TrainState.inflight``). Most callers go
+through :class:`repro.api.Experiment` instead of wiring these directly.
+"""
 from repro.training.train_loop import make_round_step, make_train_fn, stack_round_batches
 from repro.training.train_state import TrainState, consensus_params, make_train_state, worker_params
 

@@ -1,12 +1,24 @@
-"""Round-based training engine.
+"""Round-based training engine for two-phase communication strategies.
 
-One *round* = τ local steps (lax.scan) + the algorithm's boundary. The
-boundary's collectives (anchor reduce-scatter for Overlap-Local-SGD, model
-average for Local SGD, ...) are ordinary XLA ops; when several rounds are
-scanned into one program (``rounds_per_call > 1``, the production setting),
-the anchor collective's consumer lies τ steps downstream and the latency-
-hiding scheduler overlaps it with local compute — the JAX-native form of the
-paper's communication thread.
+One *round* = τ local steps (lax.scan) + the strategy's two boundary phases:
+
+    boundary_apply(x, vars, inflight)      consume the collective launched at
+                                           the PREVIOUS boundary (eq. 4)
+    boundary_launch(x, vars) -> inflight   start this round's collective
+                                           (eq. 5), carried in TrainState
+
+Because launch and consume are distinct phases separated by τ local steps,
+the anchor collective's consumer lies a full round downstream when several
+rounds are scanned into one program (``rounds_per_call > 1``, the production
+setting) — the latency-hiding scheduler overlaps it with local compute, the
+JAX-native form of the paper's communication thread. Delayed-averaging
+strategies consume mid-round instead via the per-step
+``local_post_update(x, vars, inflight, k)`` hook, which receives the local
+step index within the round.
+
+Legacy single-hook ``Algorithm`` objects are accepted everywhere a strategy
+is and run through :class:`repro.core.strategy.LegacyStrategy` (their whole
+``boundary`` executes in the apply phase — seed semantics, bit for bit).
 
 Batch layout: a *round batch* is a pytree whose array leaves are shaped
 (τ, m, per_worker_batch, ...) — scanned over τ, vmapped over m.
@@ -18,7 +30,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithms import Algorithm
+from repro.core.strategy import as_strategy
 from repro.optim.optimizers import Optimizer, clip_by_global_norm
 from repro.training.train_state import TrainState
 
@@ -26,17 +38,19 @@ from repro.training.train_state import TrainState
 def make_round_step(
     loss_fn: Callable,  # (params, batch) -> (loss, metrics)
     optimizer: Optimizer,
-    algorithm: Algorithm,
+    strategy,  # CommStrategy or legacy Algorithm
     schedule: Callable,
     axes_tree: Any = None,
     grad_clip: float = 0.0,
     microbatch: Optional[int] = None,
 ):
+    strategy = as_strategy(strategy)
     grad_fn = jax.grad(loss_fn, has_aux=True)
 
     def stacked_grads(x, micro):
         """Per-worker grads, with optional gradient accumulation over
-        microbatches (large per-worker batches on big-vocab/MoE archs)."""
+        microbatches (large per-worker batches on big-vocab/MoE archs).
+        Metrics are averaged across microbatches."""
         leaves = jax.tree.leaves(micro)
         b = leaves[0].shape[1]
         if microbatch is None or b <= microbatch:
@@ -47,35 +61,45 @@ def make_round_step(
         )
 
         def acc(carry, mb):
-            g_acc, _ = carry
+            g_acc, m_acc = carry
             g, mets = jax.vmap(grad_fn)(x, mb)
             g_acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), g_acc, g)
-            return (g_acc, mets), None
+            m_acc = jax.tree.map(lambda a, mm: a + mm.astype(jnp.float32), m_acc, mets)
+            return (g_acc, m_acc), None
 
         g0 = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), x)
-        m0 = jax.eval_shape(lambda mb: jax.vmap(grad_fn)(x, mb)[1], jax.tree.map(lambda t: t[0], split))
-        m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
-        (g_sum, mets), _ = jax.lax.scan(acc, (g0, m0), split)
+        m_sds = jax.eval_shape(lambda mb: jax.vmap(grad_fn)(x, mb)[1], jax.tree.map(lambda t: t[0], split))
+        m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), m_sds)
+        (g_sum, m_sum), _ = jax.lax.scan(acc, (g0, m0), split)
         grads = jax.tree.map(lambda g, xx: (g / k).astype(xx.dtype), g_sum, x)
-        return grads, mets
-
-    def local_step(carry, micro):
-        x, opt, vars, step = carry
-        lr = schedule(step)
-        grads, metrics = stacked_grads(x, micro)
-        if grad_clip > 0.0:
-            grads = jax.vmap(lambda g: clip_by_global_norm(g, grad_clip)[0])(grads)
-        grads, vars = algorithm.transform_grads(grads, vars)
-        opt, x = jax.vmap(lambda o, xi, gi: optimizer.step(o, xi, gi, lr))(opt, x, grads)
-        metrics = dict(metrics, lr=jnp.broadcast_to(lr, metrics["loss"].shape))
-        return (x, opt, vars, step + 1), metrics
+        metrics = jax.tree.map(lambda s, ref: (s / k).astype(ref.dtype), m_sum, m_sds)
+        return grads, metrics
 
     def round_step(state: TrainState, round_batch) -> Tuple[TrainState, dict]:
+        inflight = state.inflight
+
+        def local_step(carry, scanned):
+            micro, k_in_round = scanned
+            x, opt, vars, step = carry
+            lr = schedule(step)
+            grads, metrics = stacked_grads(x, micro)
+            if grad_clip > 0.0:
+                grads = jax.vmap(lambda g: clip_by_global_norm(g, grad_clip)[0])(grads)
+            grads, vars = strategy.transform_grads(grads, vars)
+            opt, x = jax.vmap(lambda o, xi, gi: optimizer.step(o, xi, gi, lr))(opt, x, grads)
+            x = strategy.local_post_update(x, vars, inflight, k_in_round)
+            metrics = dict(metrics, lr=jnp.broadcast_to(lr, metrics["loss"].shape))
+            return (x, opt, vars, step + 1), metrics
+
+        tau = jax.tree.leaves(round_batch)[0].shape[0]
         (x, opt, vars, step), metrics = jax.lax.scan(
-            local_step, (state.x, state.opt, state.vars, state.step), round_batch
+            local_step,
+            (state.x, state.opt, state.vars, state.step),
+            (round_batch, jnp.arange(tau)),
         )
-        x, vars = algorithm.boundary(x, vars, axes_tree)
-        new_state = TrainState(x=x, opt=opt, vars=vars, step=step)
+        x, vars = strategy.boundary_apply(x, vars, inflight, axes_tree)
+        vars, inflight = strategy.boundary_launch(x, vars, axes_tree)
+        new_state = TrainState(x=x, opt=opt, vars=vars, step=step, inflight=inflight)
         return new_state, metrics
 
     return round_step
@@ -84,7 +108,7 @@ def make_round_step(
 def make_train_fn(
     loss_fn: Callable,
     optimizer: Optimizer,
-    algorithm: Algorithm,
+    strategy,  # CommStrategy or legacy Algorithm
     schedule: Callable,
     axes_tree: Any = None,
     grad_clip: float = 0.0,
@@ -93,7 +117,7 @@ def make_train_fn(
     microbatch: Optional[int] = None,
 ):
     """jit'd multi-round step: (state, batches[(R, τ, m, b, ...)]) -> (state, metrics)."""
-    round_step = make_round_step(loss_fn, optimizer, algorithm, schedule, axes_tree, grad_clip, microbatch)
+    round_step = make_round_step(loss_fn, optimizer, strategy, schedule, axes_tree, grad_clip, microbatch)
 
     def many(state, batches):
         if rounds_per_call == 1:

@@ -1,4 +1,10 @@
-"""Worker-stacked training state."""
+"""Worker-stacked training state.
+
+``inflight`` is the two-phase protocol's first-class slot for the collective
+launched at the previous round boundary and not yet consumed (the anchor
+mean for Overlap-Local-SGD). Strategies without an overlapped collective
+(blocking algorithms, pure gradient-space methods) carry ``None`` there.
+"""
 from __future__ import annotations
 
 from typing import Any, NamedTuple
@@ -6,29 +12,32 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithms import Algorithm, AlgoVars
+from repro.core.strategy import AlgoVars, CommStrategy, as_strategy
 from repro.optim.optimizers import Optimizer
 
 
 class TrainState(NamedTuple):
     x: Any  # stacked local params (m, ...)
     opt: Any  # stacked local optimizer state (m, ...)
-    vars: AlgoVars  # algorithm variables (anchor z, momentum v, extras)
+    vars: AlgoVars  # strategy variables (anchor z, momentum v, extras)
     step: jnp.ndarray  # global local-step counter
+    inflight: Any = None  # collective launched last boundary, consumed next (eq. 5 → eq. 4)
 
 
 def make_train_state(
     params: Any,
     m: int,
     optimizer: Optimizer,
-    algorithm: Algorithm,
+    algorithm,  # CommStrategy, or a legacy Algorithm (wrapped automatically)
     axes_tree: Any = None,
 ) -> TrainState:
     """All workers start at the same point (Theorem 1's initialization)."""
+    strategy = as_strategy(algorithm)
     x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
     opt = jax.vmap(optimizer.init)(x)
-    vars = algorithm.init_vars(x, axes_tree)
-    return TrainState(x=x, opt=opt, vars=vars, step=jnp.zeros((), jnp.int32))
+    vars = strategy.init_vars(x, axes_tree)
+    inflight = strategy.init_inflight(x, vars, axes_tree)
+    return TrainState(x=x, opt=opt, vars=vars, step=jnp.zeros((), jnp.int32), inflight=inflight)
 
 
 def worker_params(state: TrainState, i: int = 0):

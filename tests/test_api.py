@@ -1,0 +1,95 @@
+"""repro.api.Experiment facade: fit / evaluate / serve on both task families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ClassificationSpec, Experiment, TokenStream
+from repro.config import AlgoConfig, OptimizerConfig
+from repro.data import make_classification_splits
+from repro.optim import schedules
+
+
+def test_classification_fit_and_evaluate():
+    exp = Experiment(
+        task=ClassificationSpec(n=4000, holdout=1000, batch_per_worker=32),
+        strategy=AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7),
+        optimizer=OptimizerConfig(name="sgd", lr=0.1, momentum=0.9, nesterov=True, weight_decay=0.0),
+        workers=8,
+    )
+    res = exp.fit(steps=80)
+    assert res.rounds == 40 and res.steps == 80
+    assert np.isfinite(res.losses).all()
+    assert res.final_loss < res.losses[0]
+    acc = exp.evaluate()["test_acc"]
+    assert acc > 0.4  # 10 classes; far above chance after 80 steps
+
+
+def test_shared_splits_and_strategy_string():
+    splits = make_classification_splits(4, n=2000, holdout=500)
+    accs = {}
+    for name in ("sync_sgd", "delayed_avg"):
+        exp = Experiment(
+            task=ClassificationSpec(splits=splits, batch_per_worker=16),
+            strategy=name,
+            optimizer=OptimizerConfig(name="sgd", lr=0.1, momentum=0.0),
+            workers=4,
+        )
+        exp.fit(steps=30)
+        accs[name] = exp.evaluate()["test_acc"]
+    assert all(np.isfinite(v) for v in accs.values())
+
+
+def test_workers_splits_mismatch_raises():
+    splits = make_classification_splits(4, n=1000, holdout=200)
+    exp = Experiment(task=ClassificationSpec(splits=splits), workers=8)
+    with pytest.raises(ValueError):
+        exp.build()
+
+
+def test_arch_and_task_both_given_raises():
+    with pytest.raises(ValueError):
+        Experiment(arch="qwen2-7b", task=ClassificationSpec())
+
+
+def test_lm_fit_evaluate_serve_roundtrip():
+    exp = Experiment(
+        arch="qwen2-7b",  # reduced() by default
+        strategy=AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7),
+        optimizer=OptimizerConfig(name="sgd", lr=1e-2, momentum=0.9, nesterov=True, weight_decay=0.0),
+        schedule=schedules.constant(1e-2),
+        data=TokenStream(batch_per_worker=2, seq_len=32),
+        workers=2,
+        rounds=2,
+    )
+    res = exp.fit()
+    assert len(res.losses) == 2 and np.isfinite(res.losses).all()
+    ev = exp.evaluate(eval_batches=2)
+    assert np.isfinite(ev["eval_loss"])
+
+    eng = exp.serve(slots=2)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(f"r{i}", rng.integers(0, exp.model_cfg.vocab_size, (4 + i,)).astype(np.int32), 4)
+    out = eng.run()
+    assert set(out) == {"r0", "r1", "r2"}
+    assert all(len(v) == 4 for v in out.values())
+
+
+def test_fit_continues_from_current_state():
+    exp = Experiment(
+        task=ClassificationSpec(n=1000, holdout=200, batch_per_worker=16),
+        strategy="local_sgd",
+        optimizer=OptimizerConfig(name="sgd", lr=0.05, momentum=0.0),
+        workers=4,
+    )
+    exp.fit(rounds=3)
+    step_after_first = int(exp.state.step)
+    exp.fit(rounds=2)
+    assert int(exp.state.step) == step_after_first + 2 * exp.tau
+
+
+def test_serve_rejects_classification():
+    exp = Experiment(task=ClassificationSpec(n=500, holdout=100), workers=2)
+    with pytest.raises(ValueError):
+        exp.serve()

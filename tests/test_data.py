@@ -1,5 +1,8 @@
 """Data pipeline properties (hypothesis)."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (

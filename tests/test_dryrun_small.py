@@ -13,16 +13,16 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import Mesh, AxisType
 from repro.config import AlgoConfig, get_arch, InputShape, ParallelPlan
 from repro.core import make_algorithm
 from repro.launch import specs, roofline as rl
+from repro.launch.mesh import make_smoke_mesh
 from repro.models import transformer as T
 from repro.optim import schedules, sgd
 from repro.parallel import mesh_context
 from repro.training.train_loop import make_round_step
 
-mesh = jax.make_mesh((2, 2, 2), ("worker", "fsdp", "tensor"), axis_types=(AxisType.Auto,) * 3)
+mesh = make_smoke_mesh()
 arch = get_arch("{arch}")
 cfg = arch.model.reduced()
 plan = ParallelPlan(workers=2, fsdp=2, tensor=2)
@@ -65,16 +65,16 @@ RUN_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.config import AlgoConfig, get_arch
 from repro.core import make_algorithm
+from repro.launch.mesh import make_smoke_mesh
 from repro.models import transformer as T
 from repro.optim import schedules, sgd
 from repro.parallel import mesh_context
 from repro.training import make_round_step, make_train_state
 from repro.launch import specs
 
-mesh = jax.make_mesh((2, 2, 2), ("worker", "fsdp", "tensor"), axis_types=(AxisType.Auto,) * 3)
+mesh = make_smoke_mesh()
 cfg = get_arch("h2o-danube-1.8b").model.reduced()
 rng = np.random.default_rng(0)
 with mesh_context(mesh, specs.TRAIN_RULES):

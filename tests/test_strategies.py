@@ -1,0 +1,251 @@
+"""Two-phase CommStrategy protocol: golden equivalence against the seed
+single-hook Algorithm path, plus semantics of the two strategies the old
+API could not express (delayed averaging, sparse anchor averaging)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AlgoConfig, get_arch
+from repro.core import make_algorithm, make_strategy, sparsify_topk
+from repro.core.strategy import LegacyStrategy
+from repro.models import transformer as T
+from repro.optim import schedules, sgd
+from repro.training import make_round_step, make_train_state
+
+D = 6
+M = 4
+
+
+def quad_loss(params, batch):
+    A, b = batch
+    r = A @ params["x"] - b
+    loss = 0.5 * jnp.sum(r * r)
+    return loss, dict(loss=loss)
+
+
+def _quad_setup(cfg: AlgoConfig, algo, lr=0.05):
+    params = {"x": jnp.asarray(np.random.default_rng(0).normal(size=D), jnp.float32)}
+    opt = sgd(momentum=0.0, nesterov=False, weight_decay=0.0)
+    state = make_train_state(params, M, opt, algo, None)
+    step = jax.jit(make_round_step(quad_loss, opt, algo, schedules.constant(lr), None))
+    return state, step
+
+
+def _quad_batches(rng, tau):
+    A = jnp.asarray(rng.normal(size=(tau, M, D, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(tau, M, D)), jnp.float32)
+    return A, b
+
+
+def _run_pair(cfg: AlgoConfig, rounds=4, lr=0.05):
+    """Run the legacy Algorithm and the native CommStrategy on identical
+    batches; return the two final states."""
+    legacy, native = make_algorithm(cfg), make_strategy(cfg)
+    s_l, step_l = _quad_setup(cfg, legacy, lr)
+    s_n, step_n = _quad_setup(cfg, native, lr)
+    rng = np.random.default_rng(1)
+    for _ in range(rounds):
+        batch = _quad_batches(rng, legacy.tau)
+        s_l, _ = step_l(s_l, batch)
+        s_n, _ = step_n(s_n, batch)
+    return s_l, s_n
+
+
+@pytest.mark.parametrize(
+    "name,beta",
+    [
+        ("overlap_local_sgd", 0.0),
+        ("overlap_local_sgd", 0.7),
+        ("local_sgd", 0.0),
+        ("sync_sgd", 0.0),
+        ("easgd", 0.0),
+        ("cocod", 0.0),
+        ("powersgd", 0.0),
+    ],
+)
+def test_native_port_bitwise_matches_legacy(name, beta):
+    """Every seed algorithm, ported onto the two-phase protocol, must be
+    bit-for-bit identical to its legacy single-hook form."""
+    cfg = AlgoConfig(name=name, tau=3, alpha=0.6, anchor_beta=beta)
+    s_l, s_n = _run_pair(cfg)
+    np.testing.assert_array_equal(np.asarray(s_l.x["x"]), np.asarray(s_n.x["x"]))
+    if name == "overlap_local_sgd":
+        # legacy carries the pending anchor in vars.z; natively it is the
+        # explicit in-flight collective
+        np.testing.assert_array_equal(np.asarray(s_l.vars.z["x"]), np.asarray(s_n.inflight["x"]))
+
+
+def test_overlap_golden_qwen2_reduced_bitwise():
+    """ISSUE golden test: OverlapLocalSGD under CommStrategy produces
+    bitwise-identical params to the seed Algorithm.boundary path for 3
+    rounds on the reduced qwen2 config."""
+    cfg_model = get_arch("qwen2-7b").model.reduced()
+    params, axes = T.init_model(cfg_model, jax.random.PRNGKey(0))
+    acfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7)
+    opt = sgd(momentum=0.9, nesterov=True, weight_decay=0.0)
+    loss_fn = lambda p, b: T.lm_loss(cfg_model, p, b)
+
+    states, steps = [], []
+    for algo in (make_algorithm(acfg), make_strategy(acfg)):
+        states.append(make_train_state(params, 2, opt, algo, axes))
+        steps.append(jax.jit(make_round_step(loss_fn, opt, algo, schedules.constant(1e-2), axes)))
+
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        toks = rng.integers(0, cfg_model.vocab_size, (2, 2, 2, 16)).astype(np.int32)
+        tgts = rng.integers(0, cfg_model.vocab_size, (2, 2, 2, 16)).astype(np.int32)
+        batch = dict(tokens=jnp.asarray(toks), targets=jnp.asarray(tgts))
+        states = [step(s, batch)[0] for step, s in zip(steps, states)]
+
+    s_legacy, s_native = states
+    for a, b in zip(jax.tree.leaves(s_legacy.x), jax.tree.leaves(s_native.x)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # pending anchor: legacy vars.z ≡ native inflight
+    for a, b in zip(jax.tree.leaves(s_legacy.vars.z), jax.tree.leaves(s_native.inflight)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_strategy_wrapper_is_identity_semantics():
+    """as_strategy-wrapped Algorithm (everything in the apply phase) is the
+    reference path; its inflight slot stays empty."""
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.0)
+    algo = make_algorithm(cfg)
+    state, _ = _quad_setup(cfg, algo)
+    assert isinstance(state.inflight, type(None))
+    wrapped = LegacyStrategy(algo)
+    assert wrapped.tau == algo.tau and wrapped.name == algo.name
+
+
+# ---------------------------------------------------------------------------
+# delayed averaging (DaSGD-style)
+# ---------------------------------------------------------------------------
+
+
+def _manual_delayed_sim(x0, As, bs, lr, tau, delay, rounds):
+    """NumPy reference: plain local SGD; the round-average launched at each
+    boundary is applied `delay` steps into the next round as
+    x_i ← avg(x_launch) + (x_i − x_launch_i)."""
+    x = np.tile(x0[None], (M, 1)).astype(np.float32)
+    avg, x_launch = x.mean(0), x.copy()  # init_inflight
+    for r in range(rounds):
+        for k in range(tau):
+            A, b = As[r, k], bs[r, k]
+            for i in range(M):
+                g = A[i].T @ (A[i] @ x[i] - b[i])
+                x[i] = x[i] - lr * g
+            if delay < tau and k == delay - 1:
+                x = avg[None] + (x - x_launch)
+        if delay >= tau:
+            x = avg[None] + (x - x_launch)
+        avg, x_launch = x.mean(0), x.copy()  # boundary_launch
+    return x
+
+
+@pytest.mark.parametrize("delay", [1, 2, 4])
+def test_delayed_averaging_consumes_at_step_k(delay):
+    tau, lr, rounds = 4, 0.05, 3
+    cfg = AlgoConfig(name="delayed_avg", tau=tau, delay_steps=delay)
+    strat = make_strategy(cfg)
+    state, step = _quad_setup(cfg, strat, lr)
+    x0 = np.asarray(state.x["x"][0])
+
+    rng = np.random.default_rng(5)
+    As = rng.normal(size=(rounds, tau, M, D, D)).astype(np.float32)
+    bs = rng.normal(size=(rounds, tau, M, D)).astype(np.float32)
+    for r in range(rounds):
+        state, _ = step(state, (jnp.asarray(As[r]), jnp.asarray(bs[r])))
+
+    expected = _manual_delayed_sim(x0, As, bs, lr, tau, delay, rounds)
+    np.testing.assert_allclose(np.asarray(state.x["x"]), expected, rtol=2e-5, atol=2e-5)
+
+
+def test_delayed_averaging_at_full_delay_matches_cocod():
+    """delay = τ degenerates to boundary consumption — exactly CoCoD-SGD."""
+    tau = 3
+    cfg_d = AlgoConfig(name="delayed_avg", tau=tau, delay_steps=tau)
+    cfg_c = AlgoConfig(name="cocod", tau=tau)
+    s_d, step_d = _quad_setup(cfg_d, make_strategy(cfg_d))
+    s_c, step_c = _quad_setup(cfg_c, make_strategy(cfg_c))
+    rng = np.random.default_rng(6)
+    for _ in range(3):
+        batch = _quad_batches(rng, tau)
+        s_d, _ = step_d(s_d, batch)
+        s_c, _ = step_c(s_c, batch)
+    np.testing.assert_allclose(np.asarray(s_d.x["x"]), np.asarray(s_c.x["x"]), rtol=1e-6, atol=1e-6)
+
+
+def test_delayed_averaging_rejects_bad_delay():
+    with pytest.raises(ValueError):
+        make_strategy(AlgoConfig(name="delayed_avg", tau=2, delay_steps=3))
+    with pytest.raises(ValueError):
+        make_strategy(AlgoConfig(name="delayed_avg", tau=2, delay_steps=0))
+
+
+# ---------------------------------------------------------------------------
+# sparse anchor averaging (LOSCAR-style)
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_anchor_dense_matches_overlap_bitwise():
+    """sparse_k = 100% must be exactly vanilla Overlap-Local-SGD."""
+    tau = 3
+    cfg_s = AlgoConfig(name="sparse_anchor", tau=tau, alpha=0.6, sparse_k=1.0)
+    cfg_o = AlgoConfig(name="overlap_local_sgd", tau=tau, alpha=0.6, anchor_beta=0.0)
+    s_s, step_s = _quad_setup(cfg_s, make_strategy(cfg_s))
+    s_o, step_o = _quad_setup(cfg_o, make_strategy(cfg_o))
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        batch = _quad_batches(rng, tau)
+        s_s, _ = step_s(s_s, batch)
+        s_o, _ = step_o(s_o, batch)
+    np.testing.assert_array_equal(np.asarray(s_s.x["x"]), np.asarray(s_o.x["x"]))
+    np.testing.assert_array_equal(np.asarray(s_s.inflight["x"]), np.asarray(s_o.inflight["x"]))
+
+
+def test_sparsify_topk_keeps_top_fraction():
+    d = {"w": jnp.asarray(np.arange(1.0, 101.0, dtype=np.float32))}
+    s = sparsify_topk(d, 0.25)["w"]
+    assert int(jnp.sum(s != 0)) in (25, 26)  # quantile ties may keep one extra
+    assert float(s[-1]) == 100.0 and float(s[0]) == 0.0
+    np.testing.assert_array_equal(np.asarray(sparsify_topk(d, 1.0)["w"]), np.asarray(d["w"]))
+
+
+def test_sparse_anchor_error_feedback_conserves_delta():
+    """s + e' = Δ + e: the truncated residual is carried, not dropped."""
+    tau = 2
+    cfg = AlgoConfig(name="sparse_anchor", tau=tau, alpha=0.6, sparse_k=0.5)
+    strat = make_strategy(cfg)
+    state, step = _quad_setup(cfg, strat)
+    rng = np.random.default_rng(8)
+    # after one round: z_new − z_old (the transmitted sparse payload) plus
+    # the carried error must equal the dense delta mean(x) − z_old
+    z_old = np.asarray(state.inflight["x"])  # anchor consumed in round 1
+    state, _ = step(state, _quad_batches(rng, tau))
+    z_new = np.asarray(state.inflight["x"])
+    err = np.asarray(state.vars.extra["x"])
+    dense_delta = np.asarray(state.x["x"]).mean(0) - z_old  # x is post-pullback
+    np.testing.assert_allclose((z_new - z_old) + err, dense_delta, rtol=1e-5, atol=1e-6)
+    assert np.any(err != 0)  # something was actually truncated
+
+
+@pytest.mark.parametrize(
+    "name,kw",
+    [("delayed_avg", dict(delay_steps=2)), ("sparse_anchor", dict(sparse_k=0.5))],
+)
+def test_new_strategies_converge_on_quadratic(name, kw):
+    tau = 4
+    cfg = AlgoConfig(name=name, tau=tau, alpha=0.5, **kw)
+    strat = make_strategy(cfg)
+    state, step = _quad_setup(cfg, strat, lr=0.03)
+    rng = np.random.default_rng(10)
+    Afix = rng.normal(size=(M, D, D)).astype(np.float32)
+    x_true = rng.normal(size=D).astype(np.float32)
+    bfix = np.einsum("mij,j->mi", Afix, x_true).astype(np.float32)
+    losses = []
+    for _ in range(40):
+        A = jnp.asarray(np.tile(Afix[None], (tau, 1, 1, 1)))
+        b = jnp.asarray(np.tile(bfix[None], (tau, 1, 1)))
+        state, ms = step(state, (A, b))
+        losses.append(float(ms["loss"].mean()))
+    assert losses[-1] < losses[0] * 0.1, (name, losses[0], losses[-1])

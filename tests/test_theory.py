@@ -1,6 +1,8 @@
 """Property tests for the paper's theory (§2, §5, Appendix A)."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import mixing

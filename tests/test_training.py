@@ -38,6 +38,23 @@ def test_microbatch_accumulation_matches_full_batch(rng):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
 
 
+def test_microbatch_metrics_average_over_microbatches(rng):
+    """The accumulation scan must report the mean of per-microbatch metrics,
+    not the last microbatch's (seed bug)."""
+    batch = _batch(rng, 2, 16)
+    s_full, step_full = _setup(microbatch=None)
+    s_micro, step_micro = _setup(microbatch=4)
+    _, ms_full = step_full(s_full, batch)
+    _, ms_micro = step_micro(s_micro, batch)
+    # equal-sized microbatches: mean of microbatch means == full-batch mean
+    np.testing.assert_allclose(
+        np.asarray(ms_micro["loss"]), np.asarray(ms_full["loss"]), rtol=2e-5, atol=2e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(ms_micro["acc"]), np.asarray(ms_full["acc"]), rtol=2e-5, atol=2e-5
+    )
+
+
 def test_schedule_applied_per_local_step(rng):
     params, axes = init_mlp(jax.random.PRNGKey(0), 8, 4)
     algo = make_algorithm(AlgoConfig(name="local_sgd", tau=3))
