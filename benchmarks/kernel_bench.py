@@ -5,6 +5,13 @@ On this CPU-only container the Pallas kernels execute in interpret mode
 numbers are the jnp reference paths under jit — the same code the dry-run
 lowers — plus derived arithmetic throughput. The Pallas variants are timed
 once in interpret mode purely to prove the harness runs them end-to-end.
+
+The ``boundary/*`` rows time one full Overlap-Local-SGD round boundary
+(eqs. 4–5 + anchor momentum) over a many-leaf synthetic parameter tree, on
+the packed flat-plane path vs the per-leaf reference path — the perf claim
+of the packed parameter plane (ISSUE 2), persisted into BENCH_kernels.json
+by benchmarks/run.py. ``REPRO_BENCH_QUICK=1`` shrinks shapes/iters for the
+CI smoke step.
 """
 from __future__ import annotations
 
@@ -14,7 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import QUICK, csv_row
+from repro.config import AlgoConfig
+from repro.core import make_strategy
 from repro.kernels.anchor_mix import ref as am_ref
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.rmsnorm import ref as rms_ref
@@ -32,7 +41,69 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def _synthetic_tree(rng, n_layers: int, width: int):
+    """A transformer-ish parameter tree: n_layers × {matrix, vector, norm}
+    (+ embedding) — ≥ 50 leaves of mixed, mostly lane-ragged shapes."""
+    p = {"embed": jnp.asarray(rng.normal(size=(width * 4, width)), np.float32)}
+    for i in range(n_layers):
+        p[f"layer{i}"] = {
+            "w": jnp.asarray(rng.normal(size=(width, width)), np.float32),
+            "b": jnp.asarray(rng.normal(size=(width,)), np.float32),
+            "scale": jnp.asarray(rng.normal(size=(width + 1,)), np.float32),
+        }
+    return p
+
+
+def boundary_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: int = 48):
+    """Packed plane vs per-leaf reference for one full round boundary, on a
+    production-depth tree (80 layers → 241 leaves): the regime the packed
+    plane targets, where per-leaf dispatch dominates the memory sweeps."""
+    if quick:
+        n_layers, width = 40, 32  # same dispatch-bound regime, 121 leaves, ~4× less data
+    rng = np.random.default_rng(0)
+    params = _synthetic_tree(rng, n_layers, width)
+    n_leaves = len(jax.tree.leaves(params))
+    n_elems = sum(l.size for l in jax.tree.leaves(params))
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
+    x = jax.tree.map(
+        lambda t: t + 0.01 * jnp.arange(m, dtype=np.float32).reshape((m,) + (1,) * (t.ndim - 1)), x
+    )
+    # useful bytes per boundary (f32, fused-pass model: read x+z+v, write
+    # x+z+v) — the SAME basis for both rows, so effective_gbps is directly
+    # comparable across modes (higher = better); the per-leaf path actually
+    # moves more than this (it re-reads x between sweeps)
+    nbytes = (2 * m * n_elems + 4 * n_elems) * 4
+
+    rows = []
+    us_by_mode = {}
+    for packed in (True, False):
+        cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=packed)
+        strat = make_strategy(cfg)
+        vars_ = strat.init_vars(x, None)
+        inflight = strat.init_inflight(x, vars_, None)
+        fn = jax.jit(lambda xx, vv, ff: strat.boundary_round(xx, vv, ff, None))
+        us = _time(fn, x, vars_, inflight, iters=3 if quick else 20)
+        us_by_mode[packed] = us
+        mode = "packed" if packed else "perleaf"
+        rows.append(
+            (
+                f"boundary/overlap_momentum_{mode}_{n_leaves}leaf",
+                us,
+                f"effective_gbps={nbytes/us/1e3:.1f} leaves={n_leaves} elems={n_elems} m={m}",
+            )
+        )
+    rows.append(
+        (
+            f"boundary/packed_speedup_{n_leaves}leaf",
+            us_by_mode[True],
+            f"speedup_x={us_by_mode[False]/us_by_mode[True]:.2f} baseline_us={us_by_mode[False]:.1f}",
+        )
+    )
+    return rows
+
+
 def run(quick: bool = False):
+    quick = quick or QUICK
     rng = np.random.default_rng(0)
     rows = []
 
@@ -69,11 +140,15 @@ def run(quick: bool = False):
     us = _time(f, r, kk, vv, w, u)
     rows.append(("kernel/rwkv6_wkv_256", us, "chunk=32"))
 
-    xa = jnp.asarray(rng.normal(size=(1 << 20,)).astype(np.float32))
-    za = jnp.asarray(rng.normal(size=(1 << 20,)).astype(np.float32))
+    n_mix = 1 << (17 if quick else 20)
+    xa = jnp.asarray(rng.normal(size=(n_mix,)).astype(np.float32))
+    za = jnp.asarray(rng.normal(size=(n_mix,)).astype(np.float32))
     f = jax.jit(lambda x, z: am_ref.anchor_mix(x, z, 0.6))
     us = _time(f, xa, za)
-    rows.append(("kernel/anchor_mix_1M", us, f"gbps={(3*xa.size*4)/us/1e3:.1f}"))
+    label = "1M" if n_mix == 1 << 20 else f"{n_mix >> 10}K"
+    rows.append((f"kernel/anchor_mix_{label}", us, f"gbps={(3*xa.size*4)/us/1e3:.1f}"))
+
+    rows.extend(boundary_rows(quick))
     return rows
 
 

@@ -11,6 +11,13 @@ templates built from the legacy ``Algorithm`` path (whose inflight is None);
 restoring them into a native-strategy template raises KeyError on the
 missing ``inflight`` paths. Retrain or re-save through the legacy shim to
 migrate.
+
+Note on the packed parameter plane (``AlgoConfig.packed``, default on):
+packed strategies store anchor-shaped state and inflight slots as flat
+``repro.parallel.packing.Packed`` buffers, which flatten to different
+checkpoint paths than the per-leaf pytrees. Checkpoints written by per-leaf
+strategies (or by pre-packed code) restore only into templates built with
+``packed=False``; packed checkpoints likewise need a packed template.
 """
 from __future__ import annotations
 

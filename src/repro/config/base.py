@@ -299,6 +299,11 @@ class AlgoConfig:
     delay_steps: int = 1  # delayed_avg: consume the average k steps into the next round
     sparse_k: float = 1.0  # sparse_anchor: top-k fraction of the anchor delta transmitted
     sync_router_stats: bool = True  # beyond-paper: all-reduce MoE router stats at boundaries
+    # run all round-boundary math over the packed parameter plane (one flat
+    # 128-lane-aligned buffer per dtype — one collective + one kernel launch
+    # per boundary regardless of leaf count). False = per-leaf reference
+    # path, kept as the bit-exact oracle for the golden tests.
+    packed: bool = True
 
 
 @dataclass(frozen=True)

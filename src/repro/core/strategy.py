@@ -36,6 +36,19 @@ The round engine (``repro.training.train_loop``) drives, per round:
 State layout matches the legacy module (DESIGN.md §3): per-worker
 quantities carry a leading worker axis m; anchor-shaped quantities are
 unstacked and pinned to the fully-sharded anchor layout.
+
+Packed boundary (default, ``AlgoConfig.packed``): eqs. (4)-(5) are pure
+memory-bound sweeps, yet a pytree-shaped boundary pays one op per *leaf* —
+per-leaf means, per-leaf sharding constraints, one padded kernel launch per
+tensor. With ``packed=True`` the round boundary instead runs on the packed
+parameter plane (:mod:`repro.parallel.packing`): x is flattened into one
+128-lane-aligned buffer per dtype, anchor-shaped state (z, v, error
+feedback) and avg-rebase inflight slots *live* packed between boundaries,
+and the whole boundary issues one worker-mean collective and one fused
+pullback(+momentum) kernel launch regardless of leaf count. The per-leaf
+``boundary_apply``/``boundary_launch`` implementations are kept as the
+bit-exact reference oracle (``packed=False``); golden tests pin the packed
+path to them.
 """
 from __future__ import annotations
 
@@ -43,10 +56,12 @@ from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config.base import AlgoConfig
 from repro.kernels.anchor_mix import ops as anchor_ops
 from repro.parallel import anchor_axes, current_mesh
+from repro.parallel.packing import Packed, buffer_map, leaf_segments, pack, packed_like, unpack
 from repro.utils.tree import tree_lerp
 
 
@@ -65,8 +80,10 @@ class AlgoVars(NamedTuple):
 
 def _worker_mean(x_stacked):
     """Average over the worker axis; on a mesh this is the paper's model
-    all-reduce (lowered as reduce-scatter when the consumer is sharded)."""
-    return jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0).astype(t.dtype), x_stacked)
+    all-reduce (lowered as reduce-scatter when the consumer is sharded).
+    The fp32 accumulation is fused into the reduction (``dtype=``) so XLA
+    never materializes an fp32 copy of the full stacked params."""
+    return jax.tree.map(lambda t: jnp.mean(t, axis=0, dtype=jnp.float32).astype(t.dtype), x_stacked)
 
 
 def _broadcast_like(z, x_stacked):
@@ -112,6 +129,67 @@ def _stacked_axes(axes_tree):
 
 
 # ---------------------------------------------------------------------------
+# packed-plane primitives (AlgoConfig.packed boundary path)
+# ---------------------------------------------------------------------------
+
+# Logical axes for packed flat buffers (see repro.parallel.sharding rules):
+# the per-worker plane shards over fsdp; the anchor plane — identical across
+# workers — additionally shards over the worker axis (ZeRO-3 layout).
+PACKED_STACKED_AXES = ("worker", "flat_param")
+PACKED_ANCHOR_AXES = ("anchor_flat",)
+
+
+def _pack_anchor(x_stacked) -> Packed:
+    """Worker 0's model as a packed anchor plane (all workers start equal)."""
+    return pack(jax.tree.map(lambda t: t[0], x_stacked))
+
+
+def _packed_worker_mean(p: Packed) -> Packed:
+    """One mean per dtype bucket over the stacked plane — the boundary's
+    single worker-mean collective (vs one per leaf on the tree path)."""
+    return buffer_map(lambda b: jnp.mean(b, axis=0, dtype=jnp.float32).astype(b.dtype), p)
+
+
+def _constrain_anchor_packed(p: Packed, axes_tree=None) -> Packed:
+    """Packed-axes story for the anchor constraint: one sharding constraint
+    per buffer (``anchor_flat`` → worker+fsdp) instead of one per leaf."""
+    mesh = current_mesh()
+    if mesh is None or axes_tree is None:
+        return p
+    from jax.sharding import NamedSharding
+
+    from repro.parallel.sharding import fit_spec, spec_for
+
+    def one(b):
+        spec = fit_spec(spec_for(PACKED_ANCHOR_AXES), b.shape, mesh)
+        return jax.lax.with_sharding_constraint(b, NamedSharding(mesh, spec))
+
+    return buffer_map(one, p)
+
+
+def _packed_thresholds(delta_buf, layout, bucket: int, k: float):
+    """Per-leaf |top-k| quantile thresholds, broadcast to a per-element plane.
+
+    The quantiles are inherently per-leaf (scalar work, O(leaves)); the
+    heavy where/error-feedback sweeps that consume the result stay packed.
+    Leaves with ≤1 element are kept dense (threshold −inf), matching
+    :func:`sparsify_topk`; padding lanes hold zeros throughout, so the kept
+    padding contributes nothing.
+    """
+    vals, reps = [], []
+    for slot in leaf_segments(layout, bucket):
+        if slot.size <= 1:
+            t = jnp.float32(-jnp.inf)
+        else:
+            seg = jax.lax.slice_in_dim(delta_buf, slot.offset, slot.offset + slot.size, axis=0)
+            t = jnp.quantile(jnp.abs(seg.reshape(-1)), 1.0 - k)
+        vals.append(t)
+        reps.append(slot.stride)
+    total = int(sum(reps))
+    return jnp.repeat(jnp.stack(vals), np.asarray(reps), total_repeat_length=total)
+
+
+# ---------------------------------------------------------------------------
 # protocol
 # ---------------------------------------------------------------------------
 
@@ -139,6 +217,9 @@ class CommStrategy:
     def __init__(self, cfg: AlgoConfig):
         self.cfg = cfg
         self.tau = cfg.tau
+        # packed boundary (the default): boundary math runs on the packed
+        # parameter plane — see module docstring. False = per-leaf oracle.
+        self.packed = bool(getattr(cfg, "packed", True))
 
     # ---- state ----
     def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
@@ -169,6 +250,32 @@ class CommStrategy:
         ``(vars, inflight)`` with the launched value carried to the next
         consumption point."""
         return vars, None
+
+    def boundary_round(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        """One full round boundary: the apply phase then the launch phase.
+
+        This is what the round engine calls. The two-phase contract is
+        unchanged — apply may not start a collective, launch's value is
+        consumed a round later — but routing both phases through one hook
+        lets packed strategies fuse them (the launch-side mean/momentum
+        reads the exact plane the apply-side pullback just wrote, so one
+        kernel covers both without re-reading x from HBM).
+        """
+        if self.packed:
+            return self._packed_boundary(x_stacked, vars, inflight, axes_tree)
+        return self._boundary_phases(x_stacked, vars, inflight, axes_tree)
+
+    def _boundary_phases(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        """The shared two-phase composition: apply, then launch."""
+        x_stacked, vars = self.boundary_apply(x_stacked, vars, inflight, axes_tree)
+        vars, inflight = self.boundary_launch(x_stacked, vars, axes_tree)
+        return x_stacked, vars, inflight
+
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        """Packed-plane boundary; strategies with boundary math override.
+        The default is the per-leaf composition (correct for strategies
+        whose collectives live per-step: base, sync_sgd, powersgd)."""
+        return self._boundary_phases(x_stacked, vars, inflight, axes_tree)
 
     # ---- AOT spec support (launch/specs.py) ----
     def state_axes(self, axes_tree) -> Tuple[Optional[AlgoVars], Any]:
@@ -222,6 +329,12 @@ class LocalSGDStrategy(CommStrategy):
         avg = _worker_mean(x_stacked)
         return _broadcast_like(avg, x_stacked), vars
 
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
+        px = pack(x_stacked, lead=1)
+        avg = _packed_worker_mean(px)
+        x_new = buffer_map(lambda a, b: jnp.broadcast_to(a[None], b.shape), avg, px, layout=px.layout)
+        return unpack(x_new), vars, None
+
 
 class OverlapLocalSGDStrategy(CommStrategy):
     """The paper's algorithm (+ momentum variant when ``anchor_beta`` > 0).
@@ -244,12 +357,18 @@ class OverlapLocalSGDStrategy(CommStrategy):
     def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
         if not self.momentum:
             return AlgoVars()
+        if self.packed:
+            z = _constrain_anchor_packed(_pack_anchor(x_stacked), axes_tree)
+            return AlgoVars(z=z, v=packed_like(z, 0.0))
         z = jax.tree.map(lambda t: t[0], x_stacked)
         z = _constrain_anchor(z, axes_tree)
         return AlgoVars(z=z, v=jax.tree.map(jnp.zeros_like, z))
 
     def init_inflight(self, x_stacked, vars, axes_tree=None):
-        z = jax.tree.map(lambda t: t[0], x_stacked)  # all workers start equal
+        # all workers start equal
+        if self.packed:
+            return _constrain_anchor_packed(_pack_anchor(x_stacked), axes_tree)
+        z = jax.tree.map(lambda t: t[0], x_stacked)
         return _constrain_anchor(z, axes_tree)
 
     def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
@@ -277,7 +396,35 @@ class OverlapLocalSGDStrategy(CommStrategy):
             z_new = mean_x
         return vars, _constrain_anchor(z_new, axes_tree)
 
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        """Both phases in one fused kernel per dtype bucket: the pullback
+        (eq. 4) writes the plane whose worker mean (eq. 5, + momentum
+        eqs. 10-11) is computed in the same HBM pass."""
+        alpha = self.cfg.alpha
+        px = pack(x_stacked, lead=1)
+        if self.momentum:
+            beta = self.cfg.anchor_beta
+            outs = [
+                anchor_ops.pullback_mean_momentum(bx, bz, bv, alpha, beta)
+                for bx, bz, bv in zip(px.buffers, inflight.buffers, vars.v.buffers)
+            ]
+            x_new = Packed(tuple(o[0] for o in outs), px.layout)
+            z_next = Packed(tuple(o[1] for o in outs), inflight.layout)
+            v_new = Packed(tuple(o[2] for o in outs), vars.v.layout)
+            vars = AlgoVars(z=inflight, v=v_new, extra=vars.extra)
+        else:
+            outs = [
+                anchor_ops.pullback_mean(bx, bz, alpha)
+                for bx, bz in zip(px.buffers, inflight.buffers)
+            ]
+            x_new = Packed(tuple(o[0] for o in outs), px.layout)
+            z_next = Packed(tuple(o[1] for o in outs), inflight.layout)
+        return unpack(x_new), vars, _constrain_anchor_packed(z_next, axes_tree)
+
     def state_axes(self, axes_tree):
+        if self.packed:
+            vars_axes = AlgoVars(z=PACKED_ANCHOR_AXES, v=PACKED_ANCHOR_AXES) if self.momentum else None
+            return vars_axes, PACKED_ANCHOR_AXES
         a = anchor_axes(axes_tree)
         vars_axes = AlgoVars(z=a, v=a) if self.momentum else None
         return vars_axes, a
@@ -292,6 +439,8 @@ class EASGDStrategy(CommStrategy):
     needs_anchor = True
 
     def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        if self.packed:
+            return AlgoVars(z=_constrain_anchor_packed(_pack_anchor(x_stacked), axes_tree))
         z = jax.tree.map(lambda t: t[0], x_stacked)
         return AlgoVars(z=_constrain_anchor(z, axes_tree))
 
@@ -306,7 +455,27 @@ class EASGDStrategy(CommStrategy):
         z_new = _constrain_anchor(tree_lerp(z, mean_x, rate), axes_tree)
         return x_new, AlgoVars(z=z_new, v=vars.v, extra=vars.extra)
 
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        alpha = self.cfg.alpha
+        rate = min(alpha * x_stacked_leading(x_stacked), 1.0)
+        px = pack(x_stacked, lead=1)
+        # fused pullback + pre-pullback mean (EASGD's symmetric W) per bucket
+        outs = [
+            anchor_ops.pullback_mean(bx, bz, alpha, mean_pre=True)
+            for bx, bz in zip(px.buffers, vars.z.buffers)
+        ]
+        x_new = Packed(tuple(o[0] for o in outs), px.layout)
+        # z lerp runs at native dtype, mirroring tree_lerp on the tree path
+        z_new = Packed(
+            tuple(((1.0 - rate) * bz + rate * o[1]).astype(bz.dtype) for o, bz in zip(outs, vars.z.buffers)),
+            vars.z.layout,
+        )
+        z_new = _constrain_anchor_packed(z_new, axes_tree)
+        return unpack(x_new), AlgoVars(z=z_new, v=vars.v, extra=vars.extra), None
+
     def state_axes(self, axes_tree):
+        if self.packed:
+            return AlgoVars(z=PACKED_ANCHOR_AXES), None
         return AlgoVars(z=anchor_axes(axes_tree)), None
 
 
@@ -320,20 +489,34 @@ class _AvgRebaseStrategy(CommStrategy):
         x0: Any  # per-worker launch-time models (local correction term)
 
     def init_inflight(self, x_stacked, vars, axes_tree=None):
+        if self.packed:
+            px = pack(x_stacked, lead=1)
+            return self.Inflight(avg=_packed_worker_mean(px), x0=px)
         return self.Inflight(avg=_worker_mean(x_stacked), x0=jax.tree.map(jnp.copy, x_stacked))
 
+    @staticmethod
+    def _rebase_leaf(xi, xs, av):
+        """x_i ← avg(x₀) + (x_i − x₀ᵢ); one cast chain shared by the tree
+        and packed paths (it is pinned bitwise by the golden tests)."""
+        return (av[None].astype(jnp.float32) + xi.astype(jnp.float32) - xs.astype(jnp.float32)).astype(xi.dtype)
+
     def _rebase(self, x_stacked, inflight):
-        return jax.tree.map(
-            lambda xi, xs, av: (av[None].astype(jnp.float32) + xi.astype(jnp.float32) - xs.astype(jnp.float32)).astype(xi.dtype),
-            x_stacked,
-            inflight.x0,
-            inflight.avg,
-        )
+        return jax.tree.map(self._rebase_leaf, x_stacked, inflight.x0, inflight.avg)
+
+    def _rebase_packed(self, px: Packed, inflight) -> Packed:
+        return buffer_map(self._rebase_leaf, px, inflight.x0, inflight.avg, layout=px.layout)
+
+    def _packed_launch(self, px: Packed):
+        """Launch from an already-packed plane: one mean per dtype bucket;
+        the plane itself doubles as the x₀ correction term (no extra copy)."""
+        return self.Inflight(avg=_packed_worker_mean(px), x0=px)
 
     def boundary_launch(self, x_stacked, vars, axes_tree=None):
         return vars, self.Inflight(avg=_worker_mean(x_stacked), x0=jax.tree.map(jnp.copy, x_stacked))
 
     def state_axes(self, axes_tree):
+        if self.packed:
+            return None, self.Inflight(avg=PACKED_ANCHOR_AXES, x0=PACKED_STACKED_AXES)
         return None, self.Inflight(avg=anchor_axes(axes_tree), x0=_stacked_axes(axes_tree))
 
 
@@ -349,6 +532,10 @@ class CoCoDStrategy(_AvgRebaseStrategy):
 
     def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
         return self._rebase(x_stacked, inflight), vars
+
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
+        x_new = self._rebase_packed(pack(x_stacked, lead=1), inflight)
+        return unpack(x_new), vars, self._packed_launch(x_new)
 
 
 class PowerSGDStrategy(CommStrategy):
@@ -409,12 +596,22 @@ class DelayedAveragingStrategy(_AvgRebaseStrategy):
             return x_stacked
         # cond, not where: the rebase only materializes on the arrival step
         arrived = k_in_round == self.delay - 1  # after the delay-th local update
+        if self.packed:
+            rebase = lambda x: unpack(self._rebase_packed(pack(x, lead=1), inflight))
+            return jax.lax.cond(arrived, rebase, lambda x: x, x_stacked)
         return jax.lax.cond(arrived, lambda x: self._rebase(x, inflight), lambda x: x, x_stacked)
 
     def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
         if self.delay >= self.tau:
             return self._rebase(x_stacked, inflight), vars
         return x_stacked, vars
+
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
+        if self.delay >= self.tau:
+            x_new = self._rebase_packed(pack(x_stacked, lead=1), inflight)
+            return unpack(x_new), vars, self._packed_launch(x_new)
+        # mid-round consumption already happened; launch from the live plane
+        return x_stacked, vars, self._packed_launch(pack(x_stacked, lead=1))
 
 
 def sparsify_topk(delta, k: float):
@@ -461,11 +658,18 @@ class SparseAnchorStrategy(CommStrategy):
         self.k = cfg.sparse_k
 
     def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        if self.packed:
+            z = _constrain_anchor_packed(_pack_anchor(x_stacked), axes_tree)
+            # f32 shadow of the anchor plane: same bucketing/offsets, so the
+            # error feedback stays element-aligned with z across dtypes
+            return AlgoVars(z=z, extra=packed_like(z, 0.0, dtype=jnp.float32))
         z = _constrain_anchor(jax.tree.map(lambda t: t[0], x_stacked), axes_tree)
         err = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), z)
         return AlgoVars(z=z, extra=err)
 
     def init_inflight(self, x_stacked, vars, axes_tree=None):
+        if self.packed:
+            return _constrain_anchor_packed(_pack_anchor(x_stacked), axes_tree)
         return _constrain_anchor(jax.tree.map(lambda t: t[0], x_stacked), axes_tree)
 
     def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
@@ -488,7 +692,39 @@ class SparseAnchorStrategy(CommStrategy):
         z_new = _constrain_anchor(z_new, axes_tree)
         return AlgoVars(z=vars.z, v=vars.v, extra=err), z_new
 
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+        px = pack(x_stacked, lead=1)
+        # fused pullback + post-pullback mean; the consumed anchor (inflight)
+        # is the base of this round's launched delta
+        outs = [
+            anchor_ops.pullback_mean(bx, bz, self.cfg.alpha)
+            for bx, bz in zip(px.buffers, inflight.buffers)
+        ]
+        x_new = Packed(tuple(o[0] for o in outs), px.layout)
+        mean_bufs = tuple(o[1] for o in outs)
+        if self.k >= 1.0:  # dense: z' = mean(x), nothing truncated
+            z_next = Packed(mean_bufs, inflight.layout)
+            err = vars.extra
+        else:
+            # Δ + e in f32 (one sweep per bucket); top-k thresholds per leaf
+            # via static slices of the plane; the where/error-feedback
+            # sweeps stay packed
+            s_bufs, err_bufs, z_bufs = [], [], []
+            for bi, (bm, bz, be) in enumerate(zip(mean_bufs, inflight.buffers, vars.extra.buffers)):
+                delta = bm.astype(jnp.float32) - bz.astype(jnp.float32) + be
+                thresh = _packed_thresholds(delta, inflight.layout, bi, self.k)
+                s = jnp.where(jnp.abs(delta) >= thresh, delta, jnp.zeros_like(delta))
+                s_bufs.append(s)
+                err_bufs.append(delta - s)
+                z_bufs.append((bz.astype(jnp.float32) + s).astype(bz.dtype))
+            z_next = Packed(tuple(z_bufs), inflight.layout)
+            err = Packed(tuple(err_bufs), vars.extra.layout)
+        z_next = _constrain_anchor_packed(z_next, axes_tree)
+        return unpack(x_new), AlgoVars(z=inflight, v=vars.v, extra=err), z_next
+
     def state_axes(self, axes_tree):
+        if self.packed:
+            return AlgoVars(z=PACKED_ANCHOR_AXES, extra=PACKED_ANCHOR_AXES), PACKED_ANCHOR_AXES
         a = anchor_axes(axes_tree)
         return AlgoVars(z=a, extra=a), a
 
@@ -511,6 +747,7 @@ class LegacyStrategy(CommStrategy):
         self.tau = algorithm.tau
         self.name = algorithm.name
         self.needs_anchor = algorithm.needs_anchor
+        self.packed = False  # legacy semantics are the per-leaf reference
 
     def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
         return self.algorithm.init_vars(x_stacked, axes_tree)

@@ -1,14 +1,23 @@
-"""Fused anchor-pullback Pallas TPU kernel — the paper's core update, eq. (4):
+"""Anchor-mix Pallas TPU kernels — the paper's round-boundary updates.
 
-    x ← (1 − α)·x + α·z
+``anchor_mix_flat`` is the plain eq. (4) pullback x ← (1−α)·x + α·z over one
+flat buffer: one read of x, one of z, one write, tiled through VMEM in
+lane-aligned blocks. The op is purely memory-bound (arithmetic intensity
+3 flops / 6 bytes in bf16), so the kernel's value is guaranteeing exactly
+3·bytes traffic at the round boundary.
 
-applied to every parameter shard at a round boundary. XLA would emit two
-elementwise passes (scale + add) over HBM for naive code, or one fused pass
-if it fuses — we make the single pass *structural*: one read of x, one read
-of z, one write, tiled through VMEM in (8·128)-aligned blocks. The op is
-purely memory-bound (arithmetic intensity 3 flops / 6 bytes in bf16), so the
-kernel's value is guaranteeing exactly 3·bytes traffic at the round boundary
-(the pullback sits on the critical path between rounds — see §Perf).
+``pullback_mean_flat`` / ``pullback_momentum_flat`` are the *fused boundary*
+kernels for the packed parameter plane: they take the worker-stacked flat
+buffer x (m, n) plus the anchor plane z (n,) and produce the pullback AND
+the eq. (5) anchor(/momentum, eqs. 10–11) update in a single HBM pass —
+one read of x, one of z (and v), instead of the back-to-back sweeps XLA
+emits for pullback-then-mean-then-momentum (which re-reads the freshly
+written x). The worker mean is computed per block entirely in VMEM: the
+worker axis m lives inside the block, so no cross-program reduction is
+needed and each grid step writes its (block,) slice of every output.
+
+All cast chains mirror ``ref.py`` exactly — the packed boundary must stay
+bitwise identical to the per-leaf reference path.
 """
 from __future__ import annotations
 
@@ -42,3 +51,84 @@ def anchor_mix_flat(x, z, *, alpha: float, block: int = 1 << 16, interpret: bool
         out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
         interpret=interpret,
     )(x, z)
+
+
+def _pullback_mean_kernel(x_ref, z_ref, xo_ref, mo_ref, *, alpha: float, mean_pre: bool):
+    z = z_ref[...].astype(jnp.float32)  # (block,)
+    x = x_ref[...]  # (m, block)
+    x_new = ((1.0 - alpha) * x.astype(jnp.float32) + alpha * z[None, :]).astype(xo_ref.dtype)
+    xo_ref[...] = x_new
+    src = x if mean_pre else x_new
+    # mean over the worker axis lives inside the block — matches
+    # jnp.mean(src, axis=0, dtype=f32).astype(param dtype) of the ref path
+    mo_ref[...] = jnp.mean(src.astype(jnp.float32), axis=0).astype(mo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "mean_pre", "block", "interpret"))
+def pullback_mean_flat(x, z, *, alpha: float, mean_pre: bool = False, block: int = 1 << 13, interpret: bool = False):
+    """x: (m, n) stacked plane, z: (n,) anchor plane; n % 128 == 0.
+
+    Returns (x_new, worker_mean) in one HBM pass.
+    """
+    m, n = x.shape
+    block = min(block, n)
+    grid = (pl.cdiv(n, block),)
+    return pl.pallas_call(
+        functools.partial(_pullback_mean_kernel, alpha=alpha, mean_pre=mean_pre),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, z)
+
+
+def _pullback_momentum_kernel(x_ref, z_ref, v_ref, xo_ref, zo_ref, vo_ref, *, alpha: float, beta: float):
+    z = z_ref[...].astype(jnp.float32)  # (block,)
+    x_new = ((1.0 - alpha) * x_ref[...].astype(jnp.float32) + alpha * z[None, :]).astype(xo_ref.dtype)
+    xo_ref[...] = x_new
+    mean = jnp.mean(x_new.astype(jnp.float32), axis=0).astype(x_ref.dtype)
+    v_new = (beta * v_ref[...].astype(jnp.float32) + (mean.astype(jnp.float32) - z)).astype(vo_ref.dtype)
+    vo_ref[...] = v_new
+    zo_ref[...] = (z + v_new.astype(jnp.float32)).astype(zo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "block", "interpret"))
+def pullback_momentum_flat(x, z, v, *, alpha: float, beta: float, block: int = 1 << 13, interpret: bool = False):
+    """x: (m, n), z/v: (n,); n % 128 == 0.
+
+    Returns (x_new, z_next, v_new): eq. (4) pullback + eqs. (10)-(11) anchor
+    momentum, one read of each input, one write of each output.
+    """
+    m, n = x.shape
+    block = min(block, n)
+    grid = (pl.cdiv(n, block),)
+    return pl.pallas_call(
+        functools.partial(_pullback_momentum_kernel, alpha=alpha, beta=beta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((n,), z.dtype),
+            jax.ShapeDtypeStruct((n,), v.dtype),
+        ],
+        interpret=interpret,
+    )(x, z, v)

@@ -1,10 +1,16 @@
-"""Public wrapper for the anchor-mix kernel: pytree-level pullback.
+"""Public wrappers for the anchor-mix kernel family.
 
 ``pullback_tree(x_tree, z_tree, alpha)`` applies the paper's eq. (4) to every
-leaf. On TPU each leaf is flattened, padded to the 128-lane boundary and run
-through the fused kernel; elsewhere the jnp oracle is used (and XLA fuses it
-into the surrounding round program — important for the dry-run, where the
-pullback must stay fusable with the anchor all-gather).
+leaf — the per-leaf reference path. The packed parameter plane instead calls
+the flat-buffer ops directly: ``anchor_mix`` on one plane, or the fused
+``pullback_mean`` / ``pullback_mean_momentum`` boundary ops that compute
+eq. (4) and the eq. (5) anchor(/momentum) update in a single HBM pass.
+
+On TPU the ops run through the Pallas kernels; elsewhere the jnp oracles are
+used (and XLA fuses them into the surrounding round program — important for
+the dry-run, where the pullback must stay fusable with the anchor
+all-gather). Buffers already on the 128-lane boundary skip the pad+slice
+round-trip entirely (packed planes always do).
 """
 from __future__ import annotations
 
@@ -16,16 +22,57 @@ from repro.kernels.anchor_mix import kernel as _k
 from repro.kernels.anchor_mix import ref as _ref
 
 
+def _pad_last(a, pad: int):
+    if pad == 0:
+        return a
+    width = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    return jnp.pad(a, width)
+
+
 def anchor_mix(x, z, alpha: float):
     if not flags.use_pallas():
         return _ref.anchor_mix(x, z, alpha)
     shape = x.shape
     n = x.size
     pad = (-n) % 128
-    xf = jnp.pad(x.reshape(-1), (0, pad))
-    zf = jnp.pad(z.reshape(-1), (0, pad))
+    xf = _pad_last(x.reshape(-1), pad)
+    zf = _pad_last(z.reshape(-1), pad)
     out = _k.anchor_mix_flat(xf, zf, alpha=float(alpha), interpret=flags.interpret_mode())
-    return out[:n].reshape(shape)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)
+
+
+def pullback_mean(x, z, alpha: float, mean_pre: bool = False):
+    """Fused eq. (4) + worker mean on a stacked plane. x: (m, n), z: (n,).
+    Returns (x_new, mean). Aligned buffers (n % 128 == 0) run pad-free."""
+    if not flags.use_pallas():
+        return _ref.pullback_mean(x, z, alpha, mean_pre=mean_pre)
+    n = x.shape[-1]
+    pad = (-n) % 128
+    x_new, mean = _k.pullback_mean_flat(
+        _pad_last(x, pad), _pad_last(z, pad),
+        alpha=float(alpha), mean_pre=mean_pre, interpret=flags.interpret_mode(),
+    )
+    if pad:
+        x_new, mean = x_new[:, :n], mean[:n]
+    return x_new, mean
+
+
+def pullback_mean_momentum(x, z, v, alpha: float, beta: float):
+    """Fused eq. (4) + eqs. (10)-(11) on a stacked plane. x: (m, n), z/v: (n,).
+    Returns (x_new, z_next, v_new)."""
+    if not flags.use_pallas():
+        return _ref.pullback_mean_momentum(x, z, v, alpha, beta)
+    n = x.shape[-1]
+    pad = (-n) % 128
+    x_new, z_next, v_new = _k.pullback_momentum_flat(
+        _pad_last(x, pad), _pad_last(z, pad), _pad_last(v, pad),
+        alpha=float(alpha), beta=float(beta), interpret=flags.interpret_mode(),
+    )
+    if pad:
+        x_new, z_next, v_new = x_new[:, :n], z_next[:n], v_new[:n]
+    return x_new, z_next, v_new
 
 
 def pullback_tree(x_tree, z_tree, alpha: float):

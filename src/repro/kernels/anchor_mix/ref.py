@@ -1,5 +1,12 @@
-"""Pure-jnp oracle for the anchor-pullback mix (paper eq. (4)):
-    out = (1 - alpha) * x + alpha * z
+"""Pure-jnp oracles for the anchor-mix kernel family.
+
+``anchor_mix`` is the paper's eq. (4) pullback; the ``pullback_mean*``
+variants are the *fused round-boundary* ops used by the packed parameter
+plane: eq. (4) plus the eq. (5) anchor (/momentum) update in one logical
+pass over worker-stacked flat buffers. Every cast in these oracles mirrors
+the historical per-leaf tree ops bit for bit — the packed boundary is pinned
+to the per-leaf path by golden tests, so the cast chains here are load-
+bearing, not style.
 """
 from __future__ import annotations
 
@@ -7,6 +14,44 @@ import jax.numpy as jnp
 
 
 def anchor_mix(x: jnp.ndarray, z: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """out = (1 - alpha) * x + alpha * z (paper eq. 4)."""
     xf = x.astype(jnp.float32)
     zf = z.astype(jnp.float32)
     return ((1.0 - alpha) * xf + alpha * zf).astype(x.dtype)
+
+
+def pullback_mean(x, z, alpha: float, mean_pre: bool = False):
+    """Fused eq. (4) + worker mean over a stacked flat buffer.
+
+    x: (m, n) worker-stacked plane, z: (n,) anchor plane.
+    Returns (x_new, mean) where mean averages the pulled-back plane (or the
+    pre-pullback plane when ``mean_pre`` — EASGD's symmetric W).
+
+    Kept shape-for-shape identical to the per-leaf tree ops (no rows
+    reshape, no reassociation): XLA's fusion/FMA choices are shape-
+    sensitive, and any deviation breaks the bitwise pin to the per-leaf
+    oracle that the golden tests enforce.
+    """
+    xf = x.astype(jnp.float32)
+    zf = z.astype(jnp.float32)
+    x_new = ((1.0 - alpha) * xf + alpha * zf[None]).astype(x.dtype)
+    src = x if mean_pre else x_new
+    mean = jnp.mean(src, axis=0, dtype=jnp.float32).astype(x.dtype)
+    return x_new, mean
+
+
+def pullback_mean_momentum(x, z, v, alpha: float, beta: float):
+    """Fused eq. (4) + eqs. (10)-(11) anchor momentum in one pass.
+
+    x: (m, n), z: (n,) consumed anchor, v: (n,) anchor momentum.
+    Returns (x_new, z_next, v_new):
+        x_new  = (1-α)·x + α·z                 (pullback, eq. 4)
+        mean   = mean_i(x_new_i)               (eq. 5 collective)
+        v_new  = β·v + (mean − z)              (eq. 10)
+        z_next = z + v_new                     (eq. 11)
+    """
+    x_new, mean = pullback_mean(x, z, alpha)
+    zf = z.astype(jnp.float32)
+    v_new = (beta * v.astype(jnp.float32) + (mean.astype(jnp.float32) - zf)).astype(v.dtype)
+    z_next = (zf + v_new.astype(jnp.float32)).astype(z.dtype)
+    return x_new, z_next, v_new

@@ -139,7 +139,9 @@ def batch_shardings(batch_specs, mesh: Mesh, rules: dict):
 def _axes_tree_shardings(ax_tree, sds_tree, mesh: Mesh, rules: dict):
     """Map a logical-axes tree (leaves = axes tuples, mirroring ``sds_tree``)
     to NamedShardings. A ``None`` node — the whole tree or any subtree —
-    replicates the corresponding specs."""
+    replicates the corresponding specs. An axes tuple facing a *subtree* of
+    specs (e.g. the packed plane's ``("anchor_flat",)`` facing a ``Packed``
+    of flat buffers) applies to every leaf of that subtree."""
     replicate = lambda sub: jax.tree.map(lambda s: NamedSharding(mesh, P()), sub)
     if ax_tree is None:
         return replicate(sds_tree)
@@ -147,7 +149,9 @@ def _axes_tree_shardings(ax_tree, sds_tree, mesh: Mesh, rules: dict):
     def one(ax, sub):
         if ax is None:
             return replicate(sub)
-        return NamedSharding(mesh, sh.fit_spec(sh.spec_for(ax, rules), sub.shape, mesh))
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, sh.fit_spec(sh.spec_for(ax, rules), s.shape, mesh)), sub
+        )
 
     is_leaf = lambda t: t is None or (
         isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t)

@@ -1,0 +1,248 @@
+"""Packed parameter plane: one flat buffer per dtype, static layout table.
+
+The round boundary (paper eqs. 4–5) is a pure memory-bound sweep over the
+parameters, yet a pytree-shaped boundary pays one op *per leaf*: per-leaf
+means, per-leaf sharding constraints, and a separate padded kernel launch
+per leaf in the pullback. This module collapses the plane the boundary
+sweeps over into one (or a few, dtype-bucketed) contiguous 128-lane-aligned
+flat buffers with a *static* layout table, so the whole boundary becomes one
+collective plus one kernel launch regardless of how many tensors the model
+has.
+
+Layout rules
+------------
+* Leaves are bucketed by dtype (buckets ordered by dtype name) — mixing
+  dtypes in one buffer would force upcasts; bucketing keeps every boundary
+  op at its native width.
+* Within a bucket, leaves keep their ``jax.tree`` flatten order. Each leaf
+  occupies ``stride = ceil(size / 128) * 128`` elements starting at a
+  128-aligned ``offset``; the tail padding is written as zeros by ``pack``
+  and never read back by ``unpack``. Every leaf therefore starts on a TPU
+  lane boundary and a buffer slice is directly kernel-feedable.
+* The table (:class:`Layout`) is built from shapes/dtypes only — it works
+  identically on concrete arrays and ``ShapeDtypeStruct`` stand-ins, is
+  hashable, and rides as pytree aux data, so a :class:`Packed` value can be
+  a ``jit``/``scan``/``eval_shape`` carry.
+
+``pack``/``unpack`` are pure layout changes (XLA fuses the pads into one
+concatenate per bucket); all boundary *math* then runs on the buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128  # TPU lane width: every leaf segment is padded to this boundary
+
+
+def _round_up(n: int, mult: int = LANE) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Static placement of one pytree leaf inside its dtype bucket."""
+
+    index: int  # position in jax.tree flatten order (across all buckets)
+    bucket: int  # which dtype bucket the leaf lives in
+    shape: Tuple[int, ...]  # leaf shape (without any stacked lead dims)
+    dtype: str  # canonical dtype name
+    offset: int  # element offset of the leaf inside its bucket buffer
+    size: int  # number of real elements
+    stride: int  # padded extent (size rounded up to the lane boundary)
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Static layout table: where every leaf of a pytree lives in the packed
+    plane. Hashable (usable as jit-static / pytree aux data)."""
+
+    treedef: Any  # jax PyTreeDef of the packed tree
+    slots: Tuple[LeafSlot, ...]  # one per leaf, in flatten order
+    bucket_dtypes: Tuple[str, ...]  # dtype name per bucket (sorted)
+    bucket_sizes: Tuple[int, ...]  # padded total elements per bucket
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.bucket_dtypes)
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.slots)
+
+    def total_elements(self) -> int:
+        return sum(self.bucket_sizes)
+
+    def with_dtype(self, dtype) -> "Layout":
+        """Same bucketing/offsets, every slot retagged to ``dtype`` — used
+        for f32 shadows (error feedback) that must stay element-aligned with
+        the param-dtype plane."""
+        name = jnp.dtype(dtype).name
+        slots = tuple(dataclasses.replace(s, dtype=name) for s in self.slots)
+        return Layout(
+            treedef=self.treedef,
+            slots=slots,
+            bucket_dtypes=tuple(name for _ in self.bucket_dtypes),
+            bucket_sizes=self.bucket_sizes,
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+class Packed:
+    """A pytree flattened into per-dtype flat buffers + its static layout.
+
+    ``buffers[b]`` has shape ``lead + (layout.bucket_sizes[b],)`` where
+    ``lead`` is any stacked prefix (e.g. the worker axis m). Registered as a
+    pytree whose children are the buffers and whose aux data is the layout,
+    so it carries through jit/scan/vmap/eval_shape unchanged.
+    """
+
+    __slots__ = ("buffers", "layout")
+
+    def __init__(self, buffers: Tuple[Any, ...], layout: Layout):
+        self.buffers = tuple(buffers)
+        self.layout = layout
+
+    def tree_flatten(self):
+        return self.buffers, self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, buffers):
+        return cls(tuple(buffers), layout)
+
+    @property
+    def lead_shape(self) -> Tuple[int, ...]:
+        return tuple(self.buffers[0].shape[:-1]) if self.buffers else ()
+
+    def __repr__(self):
+        shapes = ", ".join(f"{b.shape}:{self.layout.bucket_dtypes[i]}" for i, b in enumerate(self.buffers))
+        return f"Packed([{shapes}], {self.layout.num_leaves} leaves)"
+
+
+def layout_of(tree, lead: int = 0) -> Layout:
+    """Build the static layout table for ``tree``. ``lead`` leading dims of
+    every leaf (e.g. the stacked worker axis) are excluded from the layout —
+    they become the buffers' lead shape at ``pack`` time."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [tuple(int(s) for s in l.shape[lead:]) for l in leaves]
+    dtypes = [jnp.dtype(l.dtype).name for l in leaves]
+    bucket_dtypes = tuple(sorted(set(dtypes)))
+    bucket_index = {d: i for i, d in enumerate(bucket_dtypes)}
+    offsets = [0] * len(bucket_dtypes)
+    slots = []
+    for i, (shape, dname) in enumerate(zip(shapes, dtypes)):
+        b = bucket_index[dname]
+        size = _prod(shape)
+        stride = _round_up(max(size, 1))
+        slots.append(
+            LeafSlot(index=i, bucket=b, shape=shape, dtype=dname, offset=offsets[b], size=size, stride=stride)
+        )
+        offsets[b] += stride
+    return Layout(
+        treedef=treedef,
+        slots=tuple(slots),
+        bucket_dtypes=bucket_dtypes,
+        bucket_sizes=tuple(offsets),
+    )
+
+
+def pack(tree, layout: Optional[Layout] = None, lead: int = 0) -> Packed:
+    """Flatten ``tree`` into the packed plane (one buffer per dtype bucket).
+
+    The first ``lead`` dims of every leaf are carried through as the
+    buffers' lead shape (all leaves must agree on them). Padding lanes are
+    zero-filled.
+
+    The plane is built by static-offset ``dynamic_update_slice`` into a
+    zeros buffer rather than ``jnp.concatenate``: XLA fuses the chain into
+    one write either way, padding comes for free — and, load-bearing on
+    jax 0.4.x meshes, the SPMD partitioner miscompiles partially-sharded
+    values downstream of a flat concatenate (partial sums across replicated
+    mesh axes are double-counted) while the update-slice chain partitions
+    correctly. Pinned by the packed mesh golden test in
+    tests/test_dryrun_small.py.
+    """
+    if layout is None:
+        layout = layout_of(tree, lead=lead)
+    leaves = jax.tree_util.tree_leaves(tree)
+    lead_shape = tuple(leaves[0].shape[:lead]) if (leaves and lead) else ()
+    # offsets are dynamic_update_slice start indices: int32 unless the plane
+    # outgrows it (>2^31 elements in one dtype bucket — int64 needs x64 mode)
+    int32_max = jnp.iinfo(jnp.int32).max
+    if max(layout.bucket_sizes, default=0) > int32_max and not jax.config.jax_enable_x64:
+        raise ValueError(
+            f"packed plane bucket of {max(layout.bucket_sizes)} elements exceeds the "
+            "int32 index range; enable jax_enable_x64 or run with packed=False"
+        )
+    idx_dtype = jnp.int64 if max(layout.bucket_sizes, default=0) > int32_max else jnp.int32
+    zero_idx = (jnp.zeros((), idx_dtype),) * len(lead_shape)
+    buffers = [
+        jnp.zeros(lead_shape + (n,), jnp.dtype(d))
+        for n, d in zip(layout.bucket_sizes, layout.bucket_dtypes)
+    ]
+    for slot, leaf in zip(layout.slots, leaves):
+        flat = jnp.reshape(leaf, lead_shape + (slot.size,))
+        buffers[slot.bucket] = jax.lax.dynamic_update_slice(
+            buffers[slot.bucket], flat, zero_idx + (jnp.asarray(slot.offset, idx_dtype),)
+        )
+    return Packed(tuple(buffers), layout)
+
+
+def unpack(packed: Packed):
+    """Inverse of :func:`pack`: rebuild the pytree (padding lanes dropped)."""
+    layout = packed.layout
+    lead_shape = packed.lead_shape
+    axis = len(lead_shape)
+    leaves = []
+    for slot in layout.slots:
+        buf = packed.buffers[slot.bucket]
+        seg = jax.lax.slice_in_dim(buf, slot.offset, slot.offset + slot.size, axis=axis)
+        leaves.append(jnp.reshape(seg, lead_shape + slot.shape))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def view_leaf(packed: Packed, index: int):
+    """Cheap view of one leaf (by flatten-order index) without a full unpack."""
+    slot = packed.layout.slots[index]
+    buf = packed.buffers[slot.bucket]
+    axis = len(packed.lead_shape)
+    seg = jax.lax.slice_in_dim(buf, slot.offset, slot.offset + slot.size, axis=axis)
+    return jnp.reshape(seg, packed.lead_shape + slot.shape)
+
+
+def packed_like(packed: Packed, fill=0.0, dtype=None) -> Packed:
+    """A packed plane with the same layout, filled with ``fill`` (optionally
+    retagged to ``dtype`` — see :meth:`Layout.with_dtype`)."""
+    layout = packed.layout if dtype is None else packed.layout.with_dtype(dtype)
+    lead = packed.lead_shape
+    buffers = tuple(
+        jnp.full(lead + (n,), fill, jnp.dtype(d))
+        for n, d in zip(layout.bucket_sizes, layout.bucket_dtypes)
+    )
+    return Packed(buffers, layout)
+
+
+def buffer_map(fn, *packeds: Packed, layout: Optional[Layout] = None) -> Packed:
+    """Apply ``fn`` buffer-wise across packed planes (all must share bucket
+    structure element-for-element — e.g. a plane and its f32 shadow). The
+    result takes ``layout`` (default: the first plane's)."""
+    first = packeds[0]
+    out = tuple(fn(*bufs) for bufs in zip(*(p.buffers for p in packeds)))
+    return Packed(out, layout or first.layout)
+
+
+def leaf_segments(layout: Layout, bucket: int) -> Tuple[LeafSlot, ...]:
+    """The slots living in ``bucket``, in offset order — the per-leaf walk
+    for the rare boundary ops that are inherently per-leaf (top-k quantile
+    thresholds), while the sweeps stay packed."""
+    return tuple(s for s in layout.slots if s.bucket == bucket)

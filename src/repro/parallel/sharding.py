@@ -67,6 +67,19 @@ LOGICAL_RULES = {
     # the worker axis (ZeRO-3-style; see DESIGN.md §2).
     "anchor_embed": ("worker", "fsdp"),
     "anchor_experts": ("worker", "fsdp"),
+    # packed parameter plane (repro.parallel.packing): flat 128-lane-aligned
+    # buffers carry one logical axis instead of per-leaf axes. The per-worker
+    # plane shards over fsdp; the anchor plane is identical across workers so
+    # it shards over EVERY mesh axis (ZeRO-3 taken to its limit — each device
+    # owns a disjoint 128-multiple slice of the plane, minimal memory and a
+    # pure reduce-scatter boundary). Full sharding is also load-bearing on
+    # jax 0.4.x: the SPMD partitioner miscompiles *partially* sharded
+    # constraints downstream of the plane's concatenate (values multiply by
+    # the product of the replicated axes — pinned by the packed mesh golden
+    # test in tests/test_dryrun_small.py); fully-sharded and replicated
+    # layouts have no replica bookkeeping to get wrong.
+    "flat_param": ("fsdp",),
+    "anchor_flat": ("worker", "fsdp", "tensor"),
 }
 
 

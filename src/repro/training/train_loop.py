@@ -1,11 +1,17 @@
 """Round-based training engine for two-phase communication strategies.
 
-One *round* = τ local steps (lax.scan) + the strategy's two boundary phases:
+One *round* = τ local steps (lax.scan) + the strategy's two boundary phases,
+driven through the combined ``boundary_round`` hook:
 
     boundary_apply(x, vars, inflight)      consume the collective launched at
                                            the PREVIOUS boundary (eq. 4)
     boundary_launch(x, vars) -> inflight   start this round's collective
                                            (eq. 5), carried in TrainState
+
+Packed strategies (``AlgoConfig.packed``, the default) override
+``boundary_round`` to run both phases fused over the packed parameter plane
+— anchor-shaped state and inflight slots are then flat
+:class:`repro.parallel.packing.Packed` buffers rather than pytrees.
 
 Because launch and consume are distinct phases separated by τ local steps,
 the anchor collective's consumer lies a full round downstream when several
@@ -97,8 +103,10 @@ def make_round_step(
             (state.x, state.opt, state.vars, state.step),
             (round_batch, jnp.arange(tau)),
         )
-        x, vars = strategy.boundary_apply(x, vars, inflight, axes_tree)
-        vars, inflight = strategy.boundary_launch(x, vars, axes_tree)
+        # apply + launch in one hook: per-leaf strategies run the two phases
+        # back to back; packed strategies fuse them over the flat parameter
+        # plane (one collective + one kernel launch per boundary)
+        x, vars, inflight = strategy.boundary_round(x, vars, inflight, axes_tree)
         new_state = TrainState(x=x, opt=opt, vars=vars, step=step, inflight=inflight)
         return new_state, metrics
 

@@ -4,6 +4,12 @@
 launched at the previous round boundary and not yet consumed (the anchor
 mean for Overlap-Local-SGD). Strategies without an overlapped collective
 (blocking algorithms, pure gradient-space methods) carry ``None`` there.
+
+Under the packed boundary (``AlgoConfig.packed``, the default) the inflight
+slot and anchor-shaped strategy vars are :class:`repro.parallel.packing.Packed`
+flat buffers — they live packed for their whole launch→consume life, so no
+repacking happens between boundaries. ``repro.parallel.packing.unpack``
+recovers the pytree view when needed.
 """
 from __future__ import annotations
 
@@ -45,13 +51,6 @@ def worker_params(state: TrainState, i: int = 0):
 
 
 def consensus_params(state: TrainState):
-    """The virtual/averaged model used for evaluation (paper's y_k when the
-    algorithm has an anchor, plain mean otherwise)."""
-    mean = jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0), state.x)
-    if state.vars.z is not None:
-        return jax.tree.map(
-            lambda m_, z: m_.astype(jnp.float32),  # evaluation uses mean of locals
-            mean,
-            state.vars.z,
-        )
-    return mean
+    """The virtual/averaged model used for evaluation (paper's y_k): the
+    mean of the local models — anchor or not, packed or per-leaf."""
+    return jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0), state.x)

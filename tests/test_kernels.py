@@ -161,3 +161,59 @@ def test_pullback_tree(rng):
     out = am_ops.pullback_tree(x, z, 0.25)
     for k in x:
         np.testing.assert_allclose(np.asarray(out[k]), 0.75 * np.asarray(x[k]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,n", [(2, 128), (4, 384), (3, 257), (8, 1)])
+@pytest.mark.parametrize("mean_pre", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pullback_mean_fused_sweep(rng, m, n, mean_pre, dtype):
+    """Fused pullback+mean kernel vs oracle, aligned and ragged planes."""
+    from repro.kernels.anchor_mix import ops as ops_
+    from repro.kernels.anchor_mix import ref as ref_
+
+    x = jnp.asarray(rng.normal(size=(m, n)), dtype)
+    z = jnp.asarray(rng.normal(size=(n,)), dtype)
+    with flags.force_pallas():
+        xn, mean = ops_.pullback_mean(x, z, 0.6, mean_pre=mean_pre)
+    xn_r, mean_r = ref_.pullback_mean(x, z, 0.6, mean_pre=mean_pre)
+    np.testing.assert_allclose(np.asarray(xn, np.float32), np.asarray(xn_r, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(mean, np.float32), np.asarray(mean_r, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("m,n", [(2, 256), (4, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pullback_mean_momentum_fused_sweep(rng, m, n, dtype):
+    """Fused pullback+momentum kernel (eqs. 4,10,11 in one pass) vs oracle."""
+    from repro.kernels.anchor_mix import ops as ops_
+    from repro.kernels.anchor_mix import ref as ref_
+
+    x = jnp.asarray(rng.normal(size=(m, n)), dtype)
+    z = jnp.asarray(rng.normal(size=(n,)), dtype)
+    v = jnp.asarray(rng.normal(size=(n,)), dtype)
+    with flags.force_pallas():
+        out = ops_.pullback_mean_momentum(x, z, v, 0.6, 0.7)
+    ref_out = ref_.pullback_mean_momentum(x, z, v, 0.6, 0.7)
+    for a, b in zip(out, ref_out):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32), **tol(dtype))
+
+
+def test_anchor_mix_aligned_skips_pad(rng):
+    """n % 128 == 0 must not pay the pad+slice round-trip: the traced
+    program contains no pad primitive (and stays correct)."""
+    x = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
+    with flags.force_pallas():
+        jaxpr = jax.make_jaxpr(lambda a, b: am_ops.anchor_mix(a, b, 0.5))(x, z)
+        out = am_ops.anchor_mix(x, z, 0.5)
+    assert "pad" not in [e.primitive.name for e in jaxpr.jaxpr.eqns]
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(am_ref.anchor_mix(x, z, 0.5)), rtol=4e-4, atol=4e-4
+    )
+    # ragged sizes still pad (and still match the oracle)
+    xr = jnp.asarray(rng.normal(size=(7, 13)), jnp.float32)
+    zr = jnp.asarray(rng.normal(size=(7, 13)), jnp.float32)
+    with flags.force_pallas():
+        out_r = am_ops.anchor_mix(xr, zr, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(out_r), np.asarray(am_ref.anchor_mix(xr, zr, 0.5)), rtol=4e-4, atol=4e-4
+    )

@@ -1,0 +1,148 @@
+"""Packed parameter plane: layout-table properties, pack∘unpack identity,
+alignment invariants, mixed dtypes, stacked lead dims, and jit/scan
+carry-ability of the Packed pytree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel import packing as pk
+
+LANE = pk.LANE
+
+
+def _tree(rng, dtype=jnp.float32):
+    return {
+        "scalar": jnp.asarray(rng.normal(), dtype),
+        "vec": jnp.asarray(rng.normal(size=(300,)), dtype),
+        "mat": jnp.asarray(rng.normal(size=(17, 33)), dtype),
+        "aligned": jnp.asarray(rng.normal(size=(2, LANE)), dtype),
+        "nested": {"a": jnp.asarray(rng.normal(size=(3, 5, 7)), dtype)},
+    }
+
+
+def test_pack_unpack_identity(rng):
+    tree = _tree(rng)
+    packed = pk.pack(tree)
+    out = pk.unpack(packed)
+    assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_layout_alignment_invariants(rng):
+    layout = pk.layout_of(_tree(rng))
+    for slot in layout.slots:
+        assert slot.offset % LANE == 0  # every leaf starts on a lane boundary
+        assert slot.stride % LANE == 0
+        assert slot.stride >= max(slot.size, 1)
+        assert slot.stride - slot.size < LANE  # minimal padding
+    for n in layout.bucket_sizes:
+        assert n % LANE == 0
+    # segments tile each bucket exactly
+    for b in range(layout.num_buckets):
+        segs = pk.leaf_segments(layout, b)
+        assert sum(s.stride for s in segs) == layout.bucket_sizes[b]
+        offs = [s.offset for s in segs]
+        assert offs == sorted(offs)
+
+
+def test_mixed_dtypes_bucket_separately(rng):
+    tree = {
+        "f32": jnp.asarray(rng.normal(size=(10,)), jnp.float32),
+        "bf16": jnp.asarray(rng.normal(size=(200,)), jnp.bfloat16),
+        "i32": jnp.arange(7, dtype=jnp.int32),
+    }
+    packed = pk.pack(tree)
+    assert packed.layout.bucket_dtypes == ("bfloat16", "float32", "int32")
+    assert [b.dtype.name for b in packed.buffers] == ["bfloat16", "float32", "int32"]
+    out = pk.unpack(packed)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(tree[k], np.float32), np.asarray(out[k], np.float32))
+
+
+def test_stacked_lead_dims_roundtrip(rng):
+    m = 4
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(m, 6, 9)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(m, 11)), jnp.float32),
+    }
+    packed = pk.pack(tree, lead=1)
+    assert packed.lead_shape == (m,)
+    assert all(b.shape[0] == m for b in packed.buffers)
+    out = pk.unpack(packed)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]), np.asarray(out[k]))
+
+
+def test_view_leaf_matches_unpack(rng):
+    tree = _tree(rng)
+    packed = pk.pack(tree)
+    leaves = jax.tree.leaves(tree)
+    for i, leaf in enumerate(leaves):
+        np.testing.assert_array_equal(np.asarray(pk.view_leaf(packed, i)), np.asarray(leaf))
+
+
+def test_padding_lanes_are_zero(rng):
+    tree = {"v": jnp.asarray(rng.normal(size=(5,)), jnp.float32)}
+    packed = pk.pack(tree)
+    buf = np.asarray(packed.buffers[0])
+    assert buf.shape == (LANE,)
+    assert np.all(buf[5:] == 0.0)
+
+
+def test_layout_is_static_and_shape_only(rng):
+    tree = _tree(rng)
+    concrete = pk.layout_of(tree)
+    abstract = pk.layout_of(jax.eval_shape(lambda: tree))
+    assert concrete == abstract
+    assert hash(concrete) == hash(abstract)
+    # different shapes -> different table
+    other = dict(tree, vec=jnp.zeros((301,), jnp.float32))
+    assert pk.layout_of(other) != concrete
+
+
+def test_packed_is_jit_and_scan_carryable(rng):
+    tree = _tree(rng)
+    packed = pk.pack(tree)
+
+    @jax.jit
+    def scale(p):
+        return pk.buffer_map(lambda b: b * 2.0, p)
+
+    out = pk.unpack(scale(packed))
+    np.testing.assert_allclose(np.asarray(out["mat"]), 2.0 * np.asarray(tree["mat"]), rtol=1e-6)
+
+    def body(carry, _):
+        return pk.buffer_map(lambda b: b + 1.0, carry), None
+
+    carried, _ = jax.lax.scan(body, packed, None, length=3)
+    np.testing.assert_allclose(
+        np.asarray(pk.unpack(carried)["vec"]), np.asarray(tree["vec"]) + 3.0, rtol=1e-6
+    )
+
+
+def test_packed_like_f32_shadow(rng):
+    tree = {"w": jnp.asarray(rng.normal(size=(9,)), jnp.bfloat16)}
+    packed = pk.pack(tree)
+    shadow = pk.packed_like(packed, 0.0, dtype=jnp.float32)
+    assert shadow.buffers[0].dtype == jnp.float32
+    assert shadow.buffers[0].shape == packed.buffers[0].shape
+    # same slots element-for-element: offsets/strides preserved
+    assert [s.offset for s in shadow.layout.slots] == [s.offset for s in packed.layout.slots]
+
+
+def test_empty_tree_packs_to_no_buffers():
+    packed = pk.pack({})
+    assert packed.buffers == ()
+    assert pk.unpack(packed) == {}
+
+
+@pytest.mark.parametrize("sizes", [(1,), (127,), (128,), (129,), (128 * 7,)])
+def test_single_leaf_sizes_property(rng, sizes):
+    tree = {"x": jnp.asarray(rng.normal(size=sizes), jnp.float32)}
+    packed = pk.pack(tree)
+    n = int(np.prod(sizes))
+    assert packed.layout.bucket_sizes[0] == ((n + LANE - 1) // LANE) * LANE
+    np.testing.assert_array_equal(np.asarray(pk.unpack(packed)["x"]), np.asarray(tree["x"]))

@@ -1,6 +1,10 @@
 """Two-phase CommStrategy protocol: golden equivalence against the seed
 single-hook Algorithm path, plus semantics of the two strategies the old
-API could not express (delayed averaging, sparse anchor averaging)."""
+API could not express (delayed averaging, sparse anchor averaging), plus
+the packed-boundary path (flat parameter plane) pinned bitwise to the
+per-leaf reference oracle."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,12 +13,19 @@ import pytest
 from repro.config import AlgoConfig, get_arch
 from repro.core import make_algorithm, make_strategy, sparsify_topk
 from repro.core.strategy import LegacyStrategy
+from repro.kernels import flags
 from repro.models import transformer as T
 from repro.optim import schedules, sgd
+from repro.parallel.packing import Packed, unpack
 from repro.training import make_round_step, make_train_state
 
 D = 6
 M = 4
+
+
+def _unp(v):
+    """Pytree view of a state slot: unpack flat planes, pass trees through."""
+    return unpack(v) if isinstance(v, Packed) else v
 
 
 def quad_loss(params, batch):
@@ -73,7 +84,7 @@ def test_native_port_bitwise_matches_legacy(name, beta):
     if name == "overlap_local_sgd":
         # legacy carries the pending anchor in vars.z; natively it is the
         # explicit in-flight collective
-        np.testing.assert_array_equal(np.asarray(s_l.vars.z["x"]), np.asarray(s_n.inflight["x"]))
+        np.testing.assert_array_equal(np.asarray(s_l.vars.z["x"]), np.asarray(_unp(s_n.inflight)["x"]))
 
 
 def test_overlap_golden_qwen2_reduced_bitwise():
@@ -101,8 +112,8 @@ def test_overlap_golden_qwen2_reduced_bitwise():
     s_legacy, s_native = states
     for a, b in zip(jax.tree.leaves(s_legacy.x), jax.tree.leaves(s_native.x)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # pending anchor: legacy vars.z ≡ native inflight
-    for a, b in zip(jax.tree.leaves(s_legacy.vars.z), jax.tree.leaves(s_native.inflight)):
+    # pending anchor: legacy vars.z ≡ native inflight (a packed plane)
+    for a, b in zip(jax.tree.leaves(s_legacy.vars.z), jax.tree.leaves(_unp(s_native.inflight))):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -200,7 +211,9 @@ def test_sparse_anchor_dense_matches_overlap_bitwise():
         s_s, _ = step_s(s_s, batch)
         s_o, _ = step_o(s_o, batch)
     np.testing.assert_array_equal(np.asarray(s_s.x["x"]), np.asarray(s_o.x["x"]))
-    np.testing.assert_array_equal(np.asarray(s_s.inflight["x"]), np.asarray(s_o.inflight["x"]))
+    np.testing.assert_array_equal(
+        np.asarray(_unp(s_s.inflight)["x"]), np.asarray(_unp(s_o.inflight)["x"])
+    )
 
 
 def test_sparsify_topk_keeps_top_fraction():
@@ -220,10 +233,10 @@ def test_sparse_anchor_error_feedback_conserves_delta():
     rng = np.random.default_rng(8)
     # after one round: z_new − z_old (the transmitted sparse payload) plus
     # the carried error must equal the dense delta mean(x) − z_old
-    z_old = np.asarray(state.inflight["x"])  # anchor consumed in round 1
+    z_old = np.asarray(_unp(state.inflight)["x"])  # anchor consumed in round 1
     state, _ = step(state, _quad_batches(rng, tau))
-    z_new = np.asarray(state.inflight["x"])
-    err = np.asarray(state.vars.extra["x"])
+    z_new = np.asarray(_unp(state.inflight)["x"])
+    err = np.asarray(_unp(state.vars.extra)["x"])
     dense_delta = np.asarray(state.x["x"]).mean(0) - z_old  # x is post-pullback
     np.testing.assert_allclose((z_new - z_old) + err, dense_delta, rtol=1e-5, atol=1e-6)
     assert np.any(err != 0)  # something was actually truncated
@@ -249,3 +262,180 @@ def test_new_strategies_converge_on_quadratic(name, kw):
         state, ms = step(state, (A, b))
         losses.append(float(ms["loss"].mean()))
     assert losses[-1] < losses[0] * 0.1, (name, losses[0], losses[-1])
+
+
+# ---------------------------------------------------------------------------
+# packed parameter plane: golden parity vs the per-leaf oracle
+# ---------------------------------------------------------------------------
+
+# a deliberately leafy tree: many shapes, aligned and ragged, plus scalars
+def _leafy_params(rng, n_mats=6):
+    p = {"s": jnp.float32(rng.normal())}
+    for i in range(n_mats):
+        p[f"w{i}"] = jnp.asarray(rng.normal(size=(3 + i, 5 + 2 * i)), jnp.float32)
+        p[f"b{i}"] = jnp.asarray(rng.normal(size=(5 + 2 * i,)), jnp.float32)
+    p["aligned"] = jnp.asarray(rng.normal(size=(2, 128)), jnp.float32)
+    return p
+
+
+def leafy_loss(params, batch):
+    A, b = batch
+    flat = jnp.concatenate([jnp.ravel(l) for l in jax.tree.leaves(params)])
+    r = A @ flat - b
+    loss = 0.5 * jnp.sum(r * r)
+    return loss, dict(loss=loss)
+
+
+ALL_PACKABLE = [
+    ("overlap_local_sgd", dict(anchor_beta=0.0)),
+    ("overlap_local_sgd", dict(anchor_beta=0.7)),
+    ("local_sgd", {}),
+    ("sync_sgd", {}),
+    ("easgd", {}),
+    ("cocod", {}),
+    ("powersgd", {}),
+    ("delayed_avg", dict(delay_steps=2)),  # mid-round consume (delay < tau)
+    ("delayed_avg", dict(delay_steps=3)),  # boundary consume (delay = tau)
+    ("sparse_anchor", dict(sparse_k=0.5)),  # error feedback active
+    ("sparse_anchor", dict(sparse_k=1.0)),
+]
+
+
+@pytest.mark.parametrize("name,kw", ALL_PACKABLE, ids=[f"{n}-{v}" for n, v in ALL_PACKABLE])
+def test_packed_boundary_bitwise_matches_perleaf(name, kw, rng):
+    """ISSUE golden test: the packed flat-plane boundary is numerically
+    identical to the per-leaf reference path, for every strategy, on a
+    many-leaf mixed-shape tree — x, carried inflight, and strategy vars."""
+    tau = 3
+    cfg = AlgoConfig(name=name, tau=tau, alpha=0.6, packed=True, **kw)
+    cfg_ref = dataclasses.replace(cfg, packed=False)
+    params = _leafy_params(rng)
+    n_flat = sum(l.size for l in jax.tree.leaves(params))
+    opt = sgd(momentum=0.9, nesterov=True, weight_decay=1e-4)
+
+    states, steps, strats = [], [], []
+    for c in (cfg, cfg_ref):
+        strat = make_strategy(c)
+        strats.append(strat)
+        states.append(make_train_state(params, M, opt, strat, None))
+        steps.append(jax.jit(make_round_step(leafy_loss, opt, strat, schedules.constant(0.03), None)))
+    assert strats[0].packed and not strats[1].packed
+
+    for r in range(3):
+        A = jnp.asarray(rng.normal(size=(strats[0].tau, M, 4, n_flat)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(strats[0].tau, M, 4)), jnp.float32)
+        states = [step(s, (A, b))[0] for step, s in zip(steps, states)]
+
+    s_p, s_r = states
+    for a, b_ in zip(jax.tree.leaves(s_p.x), jax.tree.leaves(s_r.x)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_), err_msg=name)
+    # carried collective and strategy vars agree through the pytree view
+    for slot in ("inflight",):
+        pv, rv = _unp(getattr(s_p, slot)), getattr(s_r, slot)
+        if isinstance(pv, tuple) and hasattr(pv, "_fields"):  # Inflight NamedTuple
+            pv = type(pv)(*(_unp(f) for f in pv))
+        for a, b_ in zip(jax.tree.leaves(pv), jax.tree.leaves(rv)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_), err_msg=f"{name}.{slot}")
+    for f in ("z", "v", "extra"):
+        pv, rv = _unp(getattr(s_p.vars, f)), getattr(s_r.vars, f)
+        if pv is None or rv is None:
+            assert (pv is None) == (rv is None) or name == "powersgd"
+            continue
+        for a, b_ in zip(jax.tree.leaves(pv), jax.tree.leaves(rv)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_), err_msg=f"{name}.vars.{f}")
+
+
+def test_packed_boundary_bitwise_matches_perleaf_bf16(rng):
+    """Mixed-dtype plane: bf16 params bucket separately and the packed cast
+    chains still match the per-leaf oracle bit for bit."""
+    tau = 2
+    params = {
+        "w16": jnp.asarray(rng.normal(size=(17, 33)), jnp.bfloat16),
+        "w32": jnp.asarray(rng.normal(size=(9, 11)), jnp.float32),
+        "b16": jnp.asarray(rng.normal(size=(257,)), jnp.bfloat16),
+    }
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=tau, alpha=0.6, anchor_beta=0.7, packed=True)
+    strat_p = make_strategy(cfg)
+    strat_r = make_strategy(dataclasses.replace(cfg, packed=False))
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (M,) + (1,) * t.ndim), params)
+    # drift workers apart deterministically, then compare one full boundary
+    x = jax.tree.map(lambda t: t + jnp.arange(M, dtype=jnp.float32).reshape((M,) + (1,) * (t.ndim - 1)).astype(t.dtype), x)
+    out = []
+    for strat in (strat_p, strat_r):
+        vars_ = strat.init_vars(x, None)
+        inflight = strat.init_inflight(x, vars_, None)
+        xb, vb, fb = jax.jit(lambda xx, vv, ff: strat.boundary_round(xx, vv, ff, None))(x, vars_, inflight)
+        out.append((xb, _unp(fb), _unp(vb.v)))
+    for a, b_ in zip(jax.tree.leaves(out[0]), jax.tree.leaves(out[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+# ---------------------------------------------------------------------------
+# packed boundary op counts: one collective + one kernel launch per boundary
+# ---------------------------------------------------------------------------
+
+
+def _count_primitives(jaxpr, names, _inside_pallas=False):
+    """Count equation primitives by name, recursing through sub-jaxprs but
+    not into pallas_call bodies (their internal reduces are in-VMEM, not
+    HBM collectives)."""
+    counts = dict.fromkeys(names, 0)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in counts:
+            counts[eqn.primitive.name] += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            sub = None
+            if isinstance(v, jax.extend.core.ClosedJaxpr):
+                sub = v.jaxpr
+            elif hasattr(v, "eqns"):
+                sub = v
+            if sub is not None:
+                for k, c in _count_primitives(sub, names).items():
+                    counts[k] += c
+    return counts
+
+
+def _boundary_jaxpr(cfg, params, force_pallas):
+    strat = make_strategy(cfg)
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (M,) + (1,) * t.ndim), params)
+    vars_ = strat.init_vars(x, None)
+    inflight = strat.init_inflight(x, vars_, None)
+    fn = lambda xx, vv, ff: strat.boundary_round(xx, vv, ff, None)
+    if force_pallas:
+        with flags.force_pallas():
+            return jax.make_jaxpr(fn)(x, vars_, inflight)
+    return jax.make_jaxpr(fn)(x, vars_, inflight)
+
+
+@pytest.mark.parametrize("beta", [0.0, 0.7])
+def test_packed_boundary_single_kernel_launch(rng, beta):
+    """ISSUE acceptance: regardless of leaf count, the packed overlap
+    boundary issues exactly ONE fused anchor-mix kernel launch (jaxpr
+    inspection under forced Pallas dispatch)."""
+    params = _leafy_params(rng)  # 14 leaves
+    assert len(jax.tree.leaves(params)) >= 10
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=beta, packed=True)
+    jaxpr = _boundary_jaxpr(cfg, params, force_pallas=True)
+    n = _count_primitives(jaxpr.jaxpr, ["pallas_call"])["pallas_call"]
+    assert n == 1, f"expected 1 fused kernel launch, jaxpr has {n}"
+
+
+@pytest.mark.parametrize("beta", [0.0, 0.7])
+def test_packed_boundary_single_worker_mean(rng, beta):
+    """One worker-mean reduction per boundary on the packed plane vs one per
+    leaf on the reference path (ref dispatch: the mean is the only
+    reduce_sum in the boundary program)."""
+    params = _leafy_params(rng)
+    n_leaves = len(jax.tree.leaves(params))
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=beta, packed=True)
+    packed_counts = _count_primitives(
+        _boundary_jaxpr(cfg, params, force_pallas=False).jaxpr, ["reduce_sum"]
+    )
+    assert packed_counts["reduce_sum"] == 1, packed_counts
+    ref_counts = _count_primitives(
+        _boundary_jaxpr(dataclasses.replace(cfg, packed=False), params, force_pallas=False).jaxpr,
+        ["reduce_sum"],
+    )
+    assert ref_counts["reduce_sum"] == n_leaves  # the per-leaf path pays one per tensor
