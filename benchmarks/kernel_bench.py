@@ -10,11 +10,27 @@ The ``boundary/*`` rows time one full Overlap-Local-SGD round boundary
 (eqs. 4–5 + anchor momentum) over a many-leaf synthetic parameter tree, on
 the packed flat-plane path vs the per-leaf reference path — the perf claim
 of the packed parameter plane (ISSUE 2), persisted into BENCH_kernels.json
-by benchmarks/run.py. ``REPRO_BENCH_QUICK=1`` shrinks shapes/iters for the
-CI smoke step.
+by benchmarks/run.py.
+
+The ``localstep/*`` rows (ISSUE 3) time one local optimizer step the same
+two ways: per-leaf (vmapped tree optimizer, O(leaves) ops) vs packed (the
+plane carried through the scan — unpack view + gradient pack + one fused
+``kernels/opt_step`` update per dtype bucket). Both sides include an
+identical cheap gradient oracle so the packed side's unpack is a live
+dependency, exactly as in the round engine.
+
+The ``boundary/<arch>/*`` rows time the round boundary per architecture on
+the 8-device dry-run (host) smoke mesh via a subprocess (the device-count
+XLA flag must be set before jax initializes) — sharded lowering included,
+so the per-arch packed-vs-per-leaf trajectory tracks what the dry-run
+actually compiles. ``REPRO_BENCH_QUICK=1`` shrinks shapes/iters/arch count
+for the CI smoke step.
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -29,6 +45,8 @@ from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.rmsnorm import ref as rms_ref
 from repro.kernels.rwkv6_wkv import ref as wkv_ref
 from repro.kernels.ssd_scan import ref as ssd_ref
+from repro.optim import adamw, sgd
+from repro.parallel.packing import pack, unpack
 
 
 def _time(fn, *args, iters=5):
@@ -102,6 +120,150 @@ def boundary_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: in
     return rows
 
 
+def local_step_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: int = 48):
+    """Packed vs per-leaf local optimizer step at the production-depth
+    241-leaf config (ISSUE 3 acceptance: packed ≥ 1.5× faster here).
+
+    Both modes run the full per-step chain the round engine executes after
+    the backward pass — per-leaf: vmapped tree step; packed: pytree view of
+    the carried plane → gradient pack → one fused update per dtype bucket —
+    plus an identical elementwise gradient oracle standing in for the
+    backward output (it keeps the packed side's unpack live, as in the real
+    scan, without diluting the rows with model-dependent grad compute)."""
+    if quick:
+        n_layers, width = 40, 32
+    rng = np.random.default_rng(0)
+    params = _synthetic_tree(rng, n_layers, width)
+    n_leaves = len(jax.tree.leaves(params))
+    n_elems = sum(l.size for l in jax.tree.leaves(params))
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
+    lr = jnp.float32(0.05)
+    iters = 5 if quick else 30
+
+    # useful f32 bytes per fused step (same basis both modes): sgd reads
+    # x,g,mom and writes x,mom; adamw reads x,g,mu,nu and writes x,mu,nu
+    opts = {
+        "sgd": (sgd(momentum=0.9, nesterov=True, weight_decay=1e-4), 5),
+        "adamw": (adamw(weight_decay=1e-4), 7),
+    }
+    rows = []
+    for opt_name, (opt, passes) in opts.items():
+        nbytes = passes * m * n_elems * 4
+
+        def f_leaf(o, xx):
+            gg = jax.tree.map(lambda t: t * 0.01, xx)
+            return jax.vmap(lambda oi, xi, gi: opt.step(oi, xi, gi, lr))(o, xx, gg)
+
+        def f_packed(o, pxx):
+            xx = unpack(pxx)  # the view the forward pass consumes
+            gg = jax.tree.map(lambda t: t * 0.01, xx)
+            return opt.step_packed(o, pxx, pack(gg, layout=pxx.layout, lead=1), lr)
+
+        px = pack(x, lead=1)
+        us_by_mode = {}
+        for mode, fn, args in (
+            ("packed", jax.jit(f_packed), (opt.init_packed(px), px)),
+            ("perleaf", jax.jit(f_leaf), (jax.vmap(opt.init)(x), x)),
+        ):
+            us = _time(fn, *args, iters=iters)
+            us_by_mode[mode] = us
+            rows.append(
+                (
+                    f"localstep/{opt_name}_{mode}_{n_leaves}leaf",
+                    us,
+                    f"effective_gbps={nbytes/us/1e3:.1f} leaves={n_leaves} elems={n_elems} m={m}",
+                )
+            )
+        rows.append(
+            (
+                f"localstep/{opt_name}_packed_speedup_{n_leaves}leaf",
+                us_by_mode["packed"],
+                f"speedup_x={us_by_mode['perleaf']/us_by_mode['packed']:.2f} baseline_us={us_by_mode['perleaf']:.1f}",
+            )
+        )
+    return rows
+
+
+_ARCH_BOUNDARY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, jax.numpy as jnp
+from repro.config import AlgoConfig, get_arch, InputShape
+from repro.core import make_strategy
+from repro.launch import specs
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import transformer as T
+from repro.parallel import mesh_context
+
+arch, iters = "{arch}", {iters}
+mesh = make_smoke_mesh()
+cfg = get_arch(arch).model.reduced()
+shape = InputShape("small_train", seq_len=32, global_batch=8, mode="train")
+with mesh_context(mesh, specs.rules_for(shape)):
+    params, axes = T.init_model(cfg, jax.random.PRNGKey(0))
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (2,) + (1,) * t.ndim), params)
+    n_leaves = len(jax.tree.leaves(params))
+    us_by_mode = {{}}
+    for packed in (True, False):
+        acfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=packed)
+        strat = make_strategy(acfg)
+        vars_ = strat.init_vars(x, axes)
+        inflight = strat.init_inflight(x, vars_, axes)
+        fn = jax.jit(lambda xx, vv, ff: strat.boundary_round(xx, vv, ff, axes))
+        out = fn(x, vars_, inflight)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(x, vars_, inflight)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        mode = "packed" if packed else "perleaf"
+        us_by_mode[packed] = us
+        print(f"ROW boundary/{arch}/overlap_momentum_" + mode + f",{{us:.1f}},leaves={{n_leaves}} mesh=2x2x2 note=host_sim")
+    # NOTE: on the host-simulated mesh collectives run on CPU threads and the
+    # fully-sharded anchor plane pays resharding a real interconnect hides, so
+    # packed can lose here; the row tracks the dry-run-mesh trajectory (e.g.
+    # for the jax>=0.5 partial-sharding re-evaluation), not TPU-relative perf.
+    print(f"ROW boundary/{arch}/packed_speedup,{{us_by_mode[True]:.1f}},"
+          f"speedup_x={{us_by_mode[False]/us_by_mode[True]:.2f}} baseline_us={{us_by_mode[False]:.1f}} note=host_sim")
+"""
+
+
+def arch_boundary_rows(quick: bool = False):
+    """Per-arch round-boundary timings on the 8-device dry-run (host) smoke
+    mesh — ROADMAP item. Subprocess per arch: the device-count flag must be
+    set before jax initializes, and the bench process must stay
+    single-device for the other rows."""
+    archs = ["h2o-danube-1.8b"] if quick else ["h2o-danube-1.8b", "qwen2-7b"]
+    iters = 3 if quick else 10
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.pop("XLA_FLAGS", None)
+    rows = []
+    for arch in archs:
+        script = _ARCH_BOUNDARY_SCRIPT.format(arch=arch, iters=iters)
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-c", script], env=env, capture_output=True, text=True, timeout=900
+            )
+        except subprocess.TimeoutExpired:
+            rows.append((f"boundary/{arch}/error", 0.0, "timeout"))
+            continue
+        if proc.returncode != 0:
+            # keep a trimmed stderr tail in the derived field (commas would
+            # break the CSV/JSON row parsing) so CI failures are debuggable
+            tail = " ".join(proc.stderr[-300:].replace(",", ";").split())
+            rows.append((f"boundary/{arch}/error", 0.0, f"rc={proc.returncode} stderr={tail}"))
+            continue
+        for line in proc.stdout.splitlines():
+            if line.startswith("ROW "):
+                name, us, derived = line[4:].split(",", 2)
+                rows.append((name, float(us), derived))
+    return rows
+
+
 def run(quick: bool = False):
     quick = quick or QUICK
     rng = np.random.default_rng(0)
@@ -149,6 +311,8 @@ def run(quick: bool = False):
     rows.append((f"kernel/anchor_mix_{label}", us, f"gbps={(3*xa.size*4)/us/1e3:.1f}"))
 
     rows.extend(boundary_rows(quick))
+    rows.extend(local_step_rows(quick))
+    rows.extend(arch_boundary_rows(quick))
     return rows
 
 

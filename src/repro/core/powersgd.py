@@ -16,14 +16,17 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config.base import AlgoConfig
 from repro.core.algorithms import Algorithm, AlgoVars, _broadcast_like, _worker_mean
+from repro.parallel.packing import Packed, buffer_map, leaf_segments, pack, packed_like, view_leaf
 
 
 class PowerState(NamedTuple):
     q: Any  # per-leaf (b, r) factors — shared across workers
-    err: Any  # per-leaf per-worker error feedback (stacked)
+    err: Any  # error feedback: per-leaf stacked tree, or (packed path) an
+    #           f32 Packed shadow of the worker-stacked gradient plane
 
 
 def _mat_shape(shape) -> tuple:
@@ -42,7 +45,7 @@ class PowerSGD(Algorithm):
         self.tau = 1
         self.rank = cfg.powersgd_rank
 
-    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+    def _init_q(self, x_stacked):
         r = self.rank
 
         def init_q(t):
@@ -53,9 +56,18 @@ class PowerSGD(Algorithm):
             key = jax.random.PRNGKey(hash(shape) % (2**31))
             return jax.random.normal(key, (b, min(r, a, b)), jnp.float32)
 
-        q = jax.tree.map(init_q, x_stacked)
+        return jax.tree.map(init_q, x_stacked)
+
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
         err = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), x_stacked)
-        return AlgoVars(extra=PowerState(q=q, err=err))
+        return AlgoVars(extra=PowerState(q=self._init_q(x_stacked), err=err))
+
+    def init_vars_packed(self, x_stacked, axes_tree=None) -> AlgoVars:
+        """Packed-plane state: q factors stay per-leaf (they ARE the rank-r
+        compression), the error feedback lives as an f32 shadow of the
+        worker-stacked gradient plane (same buckets/offsets as the params)."""
+        err = packed_like(pack(x_stacked, lead=1), 0.0, dtype=jnp.float32)
+        return AlgoVars(extra=PowerState(q=self._init_q(x_stacked), err=err))
 
     def transform_grads(self, grads_stacked, vars: AlgoVars):
         st: PowerState = vars.extra
@@ -85,5 +97,84 @@ class PowerSGD(Algorithm):
         new_e = tdef.unflatten([o[2] for o in outs])
         return new_g, AlgoVars(z=vars.z, v=vars.v, extra=PowerState(q=new_q, err=new_e))
 
+    def transform_grads_packed(self, pg: Packed, vars: AlgoVars):
+        """PowerSGD over the packed gradient plane.
+
+        The rank-r factor math (power iteration, QR, the two factor
+        collectives) is *inherently* per-matrix — that per-leaf work is the
+        compression itself and stays. Everything elementwise around it is
+        rerouted over the plane:
+
+        * error-feedback add  M = g + e      — one f32 sweep per bucket;
+        * decode cast + error update  e' = M − ĝ  — one masked sweep per
+          bucket (the static mask marks compressed slots; uncompressed slots
+          carry zero error, as in the per-leaf path).
+
+        The plain all-reduce of the uncompressed (1-D/scalar) leaves stays
+        *per-leaf*, like the factor collectives: those leaves are the small
+        tail of the plane, and a single per-bucket mean would sweep (and,
+        on a mesh, all-reduce) the whole gradient plane — full-plane traffic
+        for an algorithm whose point is rank-r traffic compression. Factor
+        reads go through :func:`view_leaf` (static slices of the plane) and
+        decoded ĝ blocks are scattered into a zeroed decode plane with
+        static-offset ``dynamic_update_slice`` — layout ops, not kernel
+        launches. Numerics are bitwise identical to :meth:`transform_grads`;
+        pinned by the golden differential suite.
+        """
+        st: PowerState = vars.extra  # q: per-leaf factors, err: f32 Packed
+        layout = pg.layout
+        m = int(pg.lead_shape[0])
+        f32 = st.err.layout
+        # (1) error-feedback add, one sweep per bucket
+        M = buffer_map(lambda g, e: g.astype(jnp.float32) + e, pg, st.err, layout=f32)
+        # (2) assemble the decode plane ĝ: rank-r decodes for ≥2-D leaves,
+        #     per-leaf worker-means (the oracle's plain all-reduce) for the
+        #     uncompressed tail. The scatter back onto the plane is pack()
+        #     itself — one mechanism (and one copy of the jax-0.4.x
+        #     DUS-not-concatenate partitioning workaround) for every plane
+        #     build in the repo; padding lanes stay zero
+        flat_q = layout.treedef.flatten_up_to(st.q)
+        new_q = list(flat_q)
+        gh_leaves = []
+        for slot, q in zip(layout.slots, flat_q):
+            if q is None:  # 1-D/scalar: mean of the raw gradient, no error
+                gi = view_leaf(pg, slot.index).reshape(m, slot.size)
+                mean = jnp.mean(gi.astype(jnp.float32), axis=0)
+                gh = jnp.broadcast_to(mean[None], (m, slot.size))
+            else:
+                a, b = _mat_shape(slot.shape)
+                Mi = view_leaf(M, slot.index).reshape(m, a, b)
+                P = jnp.mean(Mi @ q, axis=0)  # (a, r) — all-reduce of rank-r factor
+                P, _ = jnp.linalg.qr(P)
+                Qn = jnp.mean(jnp.einsum("mab,ar->mbr", Mi, P), axis=0)  # (b, r) — all-reduce
+                gh = jnp.broadcast_to((P @ Qn.T)[None], (m, a, b)).reshape(m, slot.size)
+                new_q[slot.index] = Qn
+            gh_leaves.append(gh.reshape((m,) + slot.shape))
+        ghat = pack(layout.treedef.unflatten(gh_leaves), layout=f32, lead=1)
+        masks = _compressed_masks(layout, flat_q)
+        new_g = buffer_map(lambda gh, g: gh.astype(g.dtype), ghat, pg, layout=layout)
+        err_bufs = tuple(
+            jnp.where(mk, Mb - gb, 0.0) for mk, Mb, gb in zip(masks, M.buffers, ghat.buffers)
+        )
+        new_err = Packed(err_bufs, f32)
+        return new_g, AlgoVars(
+            z=vars.z, v=vars.v, extra=PowerState(q=layout.treedef.unflatten(new_q), err=new_err)
+        )
+
     def compressed_bytes(self, param_bytes_2d: int, a: int, b: int) -> int:
         return 4 * self.rank * (a + b)
+
+
+def _compressed_masks(layout, flat_q):
+    """Per-bucket element masks: True where the element belongs to a
+    rank-compressed (≥2-D) leaf. Built as a runtime ``jnp.repeat`` of
+    O(slots) per-slot flags (the ``_packed_thresholds`` pattern) — a
+    trace-time full-plane bool literal would embed a plane-sized constant
+    in the HLO at exactly the model scale the packed path targets."""
+    masks = []
+    for b in range(layout.num_buckets):
+        segs = leaf_segments(layout, b)
+        vals = jnp.asarray(np.array([flat_q[s.index] is not None for s in segs], bool))
+        reps = np.array([s.stride for s in segs], np.int64)
+        masks.append(jnp.repeat(vals, np.asarray(reps), total_repeat_length=int(reps.sum())))
+    return tuple(masks)

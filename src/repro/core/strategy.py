@@ -49,6 +49,15 @@ pullback(+momentum) kernel launch regardless of leaf count. The per-leaf
 ``boundary_apply``/``boundary_launch`` implementations are kept as the
 bit-exact reference oracle (``packed=False``); golden tests pin the packed
 path to them.
+
+The per-local-step hooks have packed forms too (``transform_grads_packed``,
+``local_post_update_packed``): the round engine's packed local step hands
+strategies the worker-stacked gradient/parameter planes directly, so
+per-step gradient collectives (sync-SGD), compression sweeps (PowerSGD
+error feedback) and mid-round consumption (DaSGD rebase) cost O(dtype
+buckets) dispatch as well. The base-class defaults fall back through the
+pytree view, so a strategy that only implements the per-leaf hooks stays
+correct.
 """
 from __future__ import annotations
 
@@ -119,8 +128,17 @@ def _pullback(x_stacked, z, alpha: float):
 
 
 def x_stacked_leading(x_stacked) -> int:
+    if isinstance(x_stacked, Packed):
+        return int(x_stacked.lead_shape[0]) if x_stacked.lead_shape else 1
     leaves = jax.tree.leaves(x_stacked)
     return int(leaves[0].shape[0]) if leaves else 1
+
+
+def _as_plane(x_stacked) -> Packed:
+    """The worker-stacked plane view of x: pass a ``Packed`` through, pack a
+    pytree. The round engine hands packed strategies the plane it already
+    carries through the scan, so packed boundaries avoid a re-pack."""
+    return x_stacked if isinstance(x_stacked, Packed) else pack(x_stacked, lead=1)
 
 
 def _stacked_axes(axes_tree):
@@ -234,11 +252,38 @@ class CommStrategy:
         """Gradient-space hook (sync-SGD averaging / PowerSGD compression)."""
         return grads_stacked, vars
 
+    def transform_grads_packed(self, pg: Packed, vars: AlgoVars):
+        """Packed-plane form of :meth:`transform_grads`, used by the packed
+        local step (``AlgoConfig.packed`` + a packed-capable optimizer):
+        grads arrive as one worker-stacked flat buffer per dtype bucket, so
+        gradient-space collectives cost O(buckets) ops instead of O(leaves).
+
+        The default is correct for any subclass: if ``transform_grads`` is
+        the base identity this is a no-op; otherwise it round-trips through
+        the pytree view, so a subclass that only overrides the per-leaf hook
+        still gets its semantics (at per-leaf cost) until it provides a
+        packed override.
+        """
+        if type(self).transform_grads is CommStrategy.transform_grads:
+            return pg, vars
+        grads, vars = self.transform_grads(unpack(pg), vars)
+        return pack(grads, layout=pg.layout, lead=1), vars
+
     def local_post_update(self, x_stacked, vars: AlgoVars, inflight, k_in_round):
         """Mid-round consumption point: called after the optimizer update of
         local step ``k_in_round`` (0-based, traced). Delayed-averaging
         strategies consume ``inflight`` here instead of at the boundary."""
         return x_stacked
+
+    def local_post_update_packed(self, px: Packed, vars: AlgoVars, inflight, k_in_round) -> Packed:
+        """Packed-plane form of :meth:`local_post_update`: the packed local
+        step keeps x on the plane through the optimizer update, so mid-round
+        consumers (DaSGD) rebase the plane directly — no pack/unpack pair
+        per local step. Same correct-by-default fallback as
+        :meth:`transform_grads_packed`."""
+        if type(self).local_post_update is CommStrategy.local_post_update:
+            return px
+        return pack(self.local_post_update(unpack(px), vars, inflight, k_in_round), layout=px.layout, lead=1)
 
     # ---- round-boundary phases ----
     def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
@@ -260,6 +305,11 @@ class CommStrategy:
         lets packed strategies fuse them (the launch-side mean/momentum
         reads the exact plane the apply-side pullback just wrote, so one
         kernel covers both without re-reading x from HBM).
+
+        Packed strategies accept ``x_stacked`` either as a pytree or as the
+        already-packed plane (the engine's packed local step carries the
+        plane through its scan and hands it over directly — no re-pack at
+        the scan→boundary seam). The returned x is always a pytree.
         """
         if self.packed:
             return self._packed_boundary(x_stacked, vars, inflight, axes_tree)
@@ -274,7 +324,11 @@ class CommStrategy:
     def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
         """Packed-plane boundary; strategies with boundary math override.
         The default is the per-leaf composition (correct for strategies
-        whose collectives live per-step: base, sync_sgd, powersgd)."""
+        whose collectives live per-step: base, sync_sgd, powersgd), so a
+        plane handed over by the engine is materialized as its pytree view
+        first."""
+        if isinstance(x_stacked, Packed):
+            x_stacked = unpack(x_stacked)
         return self._boundary_phases(x_stacked, vars, inflight, axes_tree)
 
     # ---- AOT spec support (launch/specs.py) ----
@@ -318,6 +372,12 @@ class SyncSGDStrategy(CommStrategy):
         g = _worker_mean(grads_stacked)
         return _broadcast_like(g, grads_stacked), vars
 
+    def transform_grads_packed(self, pg: Packed, vars):
+        """The per-step gradient all-reduce as ONE mean per dtype bucket
+        (vs one per leaf): the packed local step's only collective."""
+        g = _packed_worker_mean(pg)
+        return buffer_map(lambda a, b: jnp.broadcast_to(a[None], b.shape), g, pg, layout=pg.layout), vars
+
 
 class LocalSGDStrategy(CommStrategy):
     """Periodic model averaging — eq. (2). Blocking: the average is both
@@ -330,7 +390,7 @@ class LocalSGDStrategy(CommStrategy):
         return _broadcast_like(avg, x_stacked), vars
 
     def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
-        px = pack(x_stacked, lead=1)
+        px = _as_plane(x_stacked)
         avg = _packed_worker_mean(px)
         x_new = buffer_map(lambda a, b: jnp.broadcast_to(a[None], b.shape), avg, px, layout=px.layout)
         return unpack(x_new), vars, None
@@ -401,7 +461,7 @@ class OverlapLocalSGDStrategy(CommStrategy):
         (eq. 4) writes the plane whose worker mean (eq. 5, + momentum
         eqs. 10-11) is computed in the same HBM pass."""
         alpha = self.cfg.alpha
-        px = pack(x_stacked, lead=1)
+        px = _as_plane(x_stacked)
         if self.momentum:
             beta = self.cfg.anchor_beta
             outs = [
@@ -458,7 +518,7 @@ class EASGDStrategy(CommStrategy):
     def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
         alpha = self.cfg.alpha
         rate = min(alpha * x_stacked_leading(x_stacked), 1.0)
-        px = pack(x_stacked, lead=1)
+        px = _as_plane(x_stacked)
         # fused pullback + pre-pullback mean (EASGD's symmetric W) per bucket
         outs = [
             anchor_ops.pullback_mean(bx, bz, alpha, mean_pre=True)
@@ -490,7 +550,7 @@ class _AvgRebaseStrategy(CommStrategy):
 
     def init_inflight(self, x_stacked, vars, axes_tree=None):
         if self.packed:
-            px = pack(x_stacked, lead=1)
+            px = _as_plane(x_stacked)
             return self.Inflight(avg=_packed_worker_mean(px), x0=px)
         return self.Inflight(avg=_worker_mean(x_stacked), x0=jax.tree.map(jnp.copy, x_stacked))
 
@@ -534,7 +594,7 @@ class CoCoDStrategy(_AvgRebaseStrategy):
         return self._rebase(x_stacked, inflight), vars
 
     def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
-        x_new = self._rebase_packed(pack(x_stacked, lead=1), inflight)
+        x_new = self._rebase_packed(_as_plane(x_stacked), inflight)
         return unpack(x_new), vars, self._packed_launch(x_new)
 
 
@@ -555,10 +615,20 @@ class PowerSGDStrategy(CommStrategy):
         self.rank = self._impl.rank
 
     def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        if self.packed:
+            return self._impl.init_vars_packed(x_stacked, axes_tree)
         return self._impl.init_vars(x_stacked, axes_tree)
 
     def transform_grads(self, grads_stacked, vars: AlgoVars):
+        if vars.extra is not None and isinstance(vars.extra.err, Packed):
+            # packed state but a per-leaf caller (e.g. an optimizer without a
+            # packed step): route through the plane so the state layout holds
+            pg, vars = self._impl.transform_grads_packed(pack(grads_stacked, lead=1), vars)
+            return unpack(pg), vars
         return self._impl.transform_grads(grads_stacked, vars)
+
+    def transform_grads_packed(self, pg, vars: AlgoVars):
+        return self._impl.transform_grads_packed(pg, vars)
 
 
 # ---------------------------------------------------------------------------
@@ -601,17 +671,27 @@ class DelayedAveragingStrategy(_AvgRebaseStrategy):
             return jax.lax.cond(arrived, rebase, lambda x: x, x_stacked)
         return jax.lax.cond(arrived, lambda x: self._rebase(x, inflight), lambda x: x, x_stacked)
 
+    def local_post_update_packed(self, px: Packed, vars, inflight, k_in_round) -> Packed:
+        """Mid-round consume directly on the plane the packed optimizer step
+        just wrote — the rebase sweeps stay per-bucket, no repacking."""
+        if self.delay >= self.tau:
+            return px
+        arrived = k_in_round == self.delay - 1
+        return jax.lax.cond(arrived, lambda p: self._rebase_packed(p, inflight), lambda p: p, px)
+
     def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
         if self.delay >= self.tau:
             return self._rebase(x_stacked, inflight), vars
         return x_stacked, vars
 
     def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
+        px = _as_plane(x_stacked)
         if self.delay >= self.tau:
-            x_new = self._rebase_packed(pack(x_stacked, lead=1), inflight)
+            x_new = self._rebase_packed(px, inflight)
             return unpack(x_new), vars, self._packed_launch(x_new)
         # mid-round consumption already happened; launch from the live plane
-        return x_stacked, vars, self._packed_launch(pack(x_stacked, lead=1))
+        # (the returned x is always the pytree view)
+        return unpack(px) if isinstance(x_stacked, Packed) else x_stacked, vars, self._packed_launch(px)
 
 
 def sparsify_topk(delta, k: float):
@@ -693,7 +773,7 @@ class SparseAnchorStrategy(CommStrategy):
         return AlgoVars(z=vars.z, v=vars.v, extra=err), z_new
 
     def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
-        px = pack(x_stacked, lead=1)
+        px = _as_plane(x_stacked)
         # fused pullback + post-pullback mean; the consumed anchor (inflight)
         # is the base of this round's launched delta
         outs = [

@@ -1,0 +1,3 @@
+"""Fused local-optimizer-step kernels for the packed parameter plane:
+one launch per dtype bucket covers weight decay + momentum/moments +
+parameter write in a single HBM pass (see kernel.py)."""

@@ -1,0 +1,69 @@
+"""Public wrappers for the fused optimizer-step kernel family.
+
+``sgd_step`` / ``adamw_step`` take one dtype bucket of the packed parameter
+plane (worker-stacked (w, n) buffers) plus the matching gradient and
+optimizer-state buffers and apply one full local optimizer update in a
+single fused pass. On TPU they run through the Pallas kernels; elsewhere
+the shared jnp formulas in ``ref.py`` are used and XLA fuses them into the
+surrounding round program. Packed-plane buffers are always 128-lane
+aligned, so the TPU path is pad-free; ragged direct calls pay a pad+slice
+round-trip like the anchor-mix ops.
+
+``lr`` must be an f32 scalar (the schedule always emits one); Adam's bias
+corrections are computed here — once per step from the single shared count,
+not per leaf or per worker — and ride into the kernel through SMEM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import flags
+from repro.kernels.opt_step import kernel as _k
+from repro.kernels.opt_step import ref as _ref
+
+
+def _pad_last(a, pad: int):
+    if pad == 0:
+        return a
+    width = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    return jnp.pad(a, width)
+
+
+def sgd_step(x, g, m, lr, *, momentum: float, nesterov: bool, weight_decay: float):
+    """Fused SGD(+Nesterov) step on one bucket. x, g, m: (w, n).
+    Returns (x_new, m_new)."""
+    if not flags.use_pallas():
+        return _ref.sgd_update(x, g, m, lr, momentum=momentum, nesterov=nesterov, weight_decay=weight_decay)
+    n = x.shape[-1]
+    pad = (-n) % 128
+    scalars = jnp.reshape(jnp.asarray(lr, jnp.float32), (1,))
+    x_new, m_new = _k.sgd_step_flat(
+        _pad_last(x, pad), _pad_last(g, pad), _pad_last(m, pad), scalars,
+        momentum=float(momentum), nesterov=bool(nesterov), weight_decay=float(weight_decay),
+        interpret=flags.interpret_mode(),
+    )
+    if pad:
+        x_new, m_new = x_new[..., :n], m_new[..., :n]
+    return x_new, m_new
+
+
+def adamw_step(x, g, mu, nu, lr, c1, c2, *, b1: float, b2: float, eps: float, weight_decay: float):
+    """Fused AdamW step on one bucket. x, g: (w, n) param dtype; mu, nu:
+    (w, n) f32; lr/c1/c2: f32 scalars. Returns (x_new, mu_new, nu_new)."""
+    if not flags.use_pallas():
+        return _ref.adamw_update(x, g, mu, nu, lr, c1, c2, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+    n = x.shape[-1]
+    pad = (-n) % 128
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32), jnp.asarray(c1, jnp.float32), jnp.asarray(c2, jnp.float32)])
+    x_new, mu_new, nu_new = _k.adamw_step_flat(
+        _pad_last(x, pad), _pad_last(g, pad), _pad_last(mu, pad), _pad_last(nu, pad), scalars,
+        b1=float(b1), b2=float(b2), eps=float(eps), weight_decay=float(weight_decay),
+        interpret=flags.interpret_mode(),
+    )
+    if pad:
+        x_new, mu_new, nu_new = x_new[..., :n], mu_new[..., :n], nu_new[..., :n]
+    return x_new, mu_new, nu_new
+
+
+sgd_reference = _ref.sgd_update
+adamw_reference = _ref.adamw_update

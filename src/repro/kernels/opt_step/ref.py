@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the fused local-optimizer-step kernel family.
+
+``sgd_update`` / ``adamw_update`` are the single-HBM-pass forms of the
+per-leaf optimizer steps in :mod:`repro.optim.optimizers` — weight decay +
+momentum (+ Nesterov) or the AdamW moment/bias-correction chain plus the
+parameter write, expressed once over worker-stacked flat buffers. They are
+shared verbatim by the Pallas kernel bodies (``kernel.py``) and by the
+non-TPU dispatch path, so the three implementations (per-leaf tree, packed
+jnp, packed Pallas) cannot drift apart numerically.
+
+Every cast in these formulas mirrors ``repro.optim.optimizers`` bit for bit
+— the packed local step is pinned to the per-leaf path by the golden
+differential suite (tests/test_packed_optim.py), so the cast chains here are
+load-bearing, not style:
+
+* weight decay is applied in the *gradient* dtype (``wd * x.astype(g)``);
+* the SGD momentum buffer stays in the parameter dtype;
+* AdamW moments are f32 regardless of parameter dtype;
+* ``lr`` (and the Adam bias corrections) are f32 scalars — the schedule
+  always emits f32, so for bf16 parameters the final ``x - lr*u`` runs in
+  f32 before the cast back, exactly like the per-leaf path.
+
+Padding lanes stay zero through every update: g=0, m=0 ⇒ u=0 ⇒ x stays 0
+(AdamW: nu=0 ⇒ denominator = eps, u = 0/eps = 0), so packed buffers never
+leak padding into real lanes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgd_update(x, g, m, lr, *, momentum: float, nesterov: bool, weight_decay: float):
+    """One fused SGD(+Nesterov momentum) step over flat buffers.
+
+    x, g, m: same-shape buffers (any lead dims); lr: f32 scalar.
+    Returns (x_new, m_new). Mirrors ``repro.optim.optimizers.sgd.step``.
+    """
+    if weight_decay:
+        g = g + weight_decay * x.astype(g.dtype)
+    m_new = (momentum * m + g).astype(m.dtype)
+    u = momentum * m_new + g if nesterov else m_new
+    x_new = (x - lr * u).astype(x.dtype)
+    return x_new, m_new
+
+
+def adamw_update(x, g, mu, nu, lr, c1, c2, *, b1: float, b2: float, eps: float, weight_decay: float):
+    """One fused AdamW step over flat buffers.
+
+    x, g: parameter-dtype buffers; mu, nu: f32 moment buffers; lr, c1, c2:
+    f32 scalars (c1/c2 are the bias corrections ``1 - b**count``, computed
+    once per step from the shared scalar count — not per leaf, not per
+    worker). Returns (x_new, mu_new, nu_new). Mirrors
+    ``repro.optim.optimizers.adamw.step``.
+    """
+    mu_new = b1 * mu + (1 - b1) * g.astype(jnp.float32)
+    nu_new = b2 * nu + (1 - b2) * jnp.square(g.astype(jnp.float32))
+    u = (mu_new / c1) / (jnp.sqrt(nu_new / c2) + eps)
+    if weight_decay:
+        u = u + weight_decay * x.astype(jnp.float32)
+    x_new = (x - lr * u).astype(x.dtype)
+    return x_new, mu_new, nu_new

@@ -23,9 +23,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import AlgoConfig, ArchConfig, InputShape, ModelConfig, OptimizerConfig, ParallelPlan
 from repro.core.algorithms import AlgoVars, make_algorithm
-from repro.core.strategy import CommStrategy, _stacked_axes
+from repro.core.strategy import CommStrategy, PACKED_STACKED_AXES, _stacked_axes
 from repro.models import transformer as T
 from repro.optim import optimizers as opt_mod
+from repro.parallel import packing as pk
 from repro.parallel import sharding as sh
 from repro.training.train_state import TrainState
 
@@ -159,6 +160,36 @@ def _axes_tree_shardings(ax_tree, sds_tree, mesh: Mesh, rules: dict):
     return jax.tree.map(one, ax_tree, sds_tree, is_leaf=is_leaf)
 
 
+def opt_state_specs(optimizer, strategy_packed: bool, x_sds, x_sh, mesh: Mesh, rules: dict):
+    """Abstract optimizer state + shardings, mirroring the layout
+    ``make_train_state`` actually builds.
+
+    Packed (packed strategy + packed-capable optimizer): the state is flat
+    worker-stacked buffers — one spec per dtype bucket under the
+    ``("worker", "flat_param")`` rule (worker axis stacked, plane sharded
+    over fsdp within a worker) instead of one per leaf; AdamW's f32 moment
+    buckets follow the same rule and its single scalar count replicates.
+    Per-leaf: momentum/moments mirror the stacked-parameter shardings
+    leaf-for-leaf; the per-worker (m,) Adam count replicates.
+    """
+    packed = strategy_packed and opt_mod.packed_capable(optimizer)
+    if packed:
+        opt_sds = jax.eval_shape(lambda xs: optimizer.init_packed(pk.pack(xs, lead=1)), x_sds)
+
+        def one(s):
+            if len(s.shape) == 0:  # the shared scalar count
+                return NamedSharding(mesh, P())
+            return NamedSharding(mesh, sh.fit_spec(sh.spec_for(PACKED_STACKED_AXES, rules), s.shape, mesh))
+
+        return opt_sds, jax.tree.map(one, opt_sds)
+    opt_sds = jax.eval_shape(lambda xs: jax.vmap(optimizer.init)(xs), x_sds)
+    if isinstance(opt_sds, opt_mod.AdamState):
+        opt_sh = opt_mod.AdamState(mu=x_sh, nu=x_sh, count=NamedSharding(mesh, P()))
+    else:
+        opt_sh = opt_mod.SGDState(momentum=x_sh)
+    return opt_sds, opt_sh
+
+
 def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mesh: Mesh, rules: dict):
     """Abstract TrainState + shardings for ``algo`` — a legacy ``Algorithm``
     or a two-phase ``CommStrategy`` (whose ``state_axes`` hook supplies the
@@ -167,9 +198,9 @@ def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mes
     m = plan.workers
 
     x_sds = jax.tree.map(lambda s: _sds((m,) + tuple(s.shape), s.dtype), params_sds)
-    opt_sds = opt_mod.SGDState(momentum=x_sds)
     x_sh = _axes_tree_shardings(_stacked_axes(axes), x_sds, mesh, rules)
-    opt_sh = opt_mod.SGDState(momentum=x_sh)
+    strategy_packed = isinstance(algo, CommStrategy) and getattr(algo, "packed", False)
+    opt_sds, opt_sh = opt_state_specs(optimizer, strategy_packed, x_sds, x_sh, mesh, rules)
 
     if isinstance(algo, CommStrategy):
         vars_sds = jax.eval_shape(lambda xs: algo.init_vars(xs, None), x_sds)

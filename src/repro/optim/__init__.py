@@ -2,22 +2,28 @@ from repro.optim import schedules
 from repro.optim.optimizers import (
     AdamState,
     Optimizer,
+    PackedAdamState,
+    PackedSGDState,
     SGDState,
     adamw,
     clip_by_global_norm,
     from_config,
     global_norm,
+    packed_capable,
     sgd,
 )
 
 __all__ = [
     "AdamState",
     "Optimizer",
+    "PackedAdamState",
+    "PackedSGDState",
     "SGDState",
     "adamw",
     "clip_by_global_norm",
     "from_config",
     "global_norm",
+    "packed_capable",
     "schedules",
     "sgd",
 ]

@@ -8,16 +8,32 @@ Adam).
 Functional style: ``init(params) -> state``, ``step(state, params, grads, lr)
 -> (state, params)``. All states preserve parameter dtype; Adam moments are
 kept in f32.
+
+Packed path (``init_packed``/``step_packed``): the τ local updates that
+dominate each round are pure memory-bound sweeps, yet the per-leaf step pays
+~5 XLA ops *per pytree leaf*. The packed path instead keeps the optimizer
+state as :class:`repro.parallel.packing.Packed` flat buffers between round
+boundaries — SGD momentum in the parameter-dtype buckets, AdamW mu/nu as f32
+shadow buckets element-aligned with the parameter plane, and a *single*
+scalar step count shared by all workers (they step in lockstep, so the
+per-leaf path's vmapped per-worker count is redundant bookkeeping) — and
+applies the whole update chain through the fused ``kernels/opt_step`` ops:
+one kernel launch per dtype bucket per local step instead of O(leaves) ops.
+The per-leaf ``init``/``step`` stay as the bit-exact oracle; the golden
+differential suite (tests/test_packed_optim.py) pins packed to per-leaf for
+every optimizer × dtype × strategy combination.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config.base import OptimizerConfig
+from repro.kernels.opt_step import ops as opt_ops
+from repro.parallel.packing import Packed, packed_like
 
 
 class SGDState(NamedTuple):
@@ -30,10 +46,30 @@ class AdamState(NamedTuple):
     count: jnp.ndarray
 
 
+class PackedSGDState(NamedTuple):
+    momentum: Packed  # worker-stacked parameter-dtype plane, like packed x
+
+
+class PackedAdamState(NamedTuple):
+    mu: Packed  # f32 shadow of the worker-stacked parameter plane
+    nu: Packed
+    count: jnp.ndarray  # ONE scalar for all workers/leaves (lockstep steps)
+
+
 @dataclass(frozen=True)
 class Optimizer:
     init: Callable
     step: Callable  # (state, params, grads, lr) -> (state, params)
+    # packed-plane variants (None = per-leaf only):
+    #   init_packed(px: Packed) -> packed state
+    #   step_packed(state, px: Packed, pg: Packed, lr) -> (state, px_new)
+    init_packed: Optional[Callable] = None
+    step_packed: Optional[Callable] = None
+
+
+def packed_capable(opt: Optimizer) -> bool:
+    """Whether ``opt`` supports the packed local-step path."""
+    return opt.init_packed is not None and opt.step_packed is not None
 
 
 def _apply_weight_decay(grads, params, wd):
@@ -56,7 +92,19 @@ def sgd(momentum: float = 0.9, nesterov: bool = True, weight_decay: float = 0.0)
         new_p = jax.tree.map(lambda p, u: (p - lr * u).astype(p.dtype), params, upd)
         return SGDState(momentum=new_m), new_p
 
-    return Optimizer(init=init, step=step)
+    def init_packed(px: Packed) -> PackedSGDState:
+        return PackedSGDState(momentum=packed_like(px, 0.0))
+
+    def step_packed(state: PackedSGDState, px: Packed, pg: Packed, lr):
+        outs = [
+            opt_ops.sgd_step(bx, bg, bm, lr, momentum=momentum, nesterov=nesterov, weight_decay=weight_decay)
+            for bx, bg, bm in zip(px.buffers, pg.buffers, state.momentum.buffers)
+        ]
+        px_new = Packed(tuple(o[0] for o in outs), px.layout)
+        m_new = Packed(tuple(o[1] for o in outs), state.momentum.layout)
+        return PackedSGDState(momentum=m_new), px_new
+
+    return Optimizer(init=init, step=step, init_packed=init_packed, step_packed=step_packed)
 
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
@@ -80,7 +128,32 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: fl
         new_p = jax.tree.map(upd, params, mu, nu)
         return AdamState(mu=mu, nu=nu, count=count), new_p
 
-    return Optimizer(init=init, step=step)
+    def init_packed(px: Packed) -> PackedAdamState:
+        # f32 moment buckets element-aligned with the parameter plane (same
+        # offsets/strides, retagged dtype) — for bf16 params this is the
+        # clean form of the per-leaf path's awkward mixed-dtype moment trees
+        return PackedAdamState(
+            mu=packed_like(px, 0.0, dtype=jnp.float32),
+            nu=packed_like(px, 0.0, dtype=jnp.float32),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def step_packed(state: PackedAdamState, px: Packed, pg: Packed, lr):
+        count = state.count + 1
+        # bias corrections: scalar work, computed ONCE per step (the per-leaf
+        # path recomputes them per worker under vmap — same values)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        outs = [
+            opt_ops.adamw_step(bx, bg, bmu, bnu, lr, c1, c2, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+            for bx, bg, bmu, bnu in zip(px.buffers, pg.buffers, state.mu.buffers, state.nu.buffers)
+        ]
+        px_new = Packed(tuple(o[0] for o in outs), px.layout)
+        mu_new = Packed(tuple(o[1] for o in outs), state.mu.layout)
+        nu_new = Packed(tuple(o[2] for o in outs), state.nu.layout)
+        return PackedAdamState(mu=mu_new, nu=nu_new, count=count), px_new
+
+    return Optimizer(init=init, step=step, init_packed=init_packed, step_packed=step_packed)
 
 
 def global_norm(tree) -> jnp.ndarray:

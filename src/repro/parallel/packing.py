@@ -9,6 +9,33 @@ flat buffers with a *static* layout table, so the whole boundary becomes one
 collective plus one kernel launch regardless of how many tensors the model
 has.
 
+Local-step dispatch model (PR 3)
+--------------------------------
+The plane covers the τ *local steps* of each round, not just the boundary.
+The round engine carries the packed plane through its scan; per local step
+the work is, for a model with L leaves and B dtype buckets (B is 1–2 in
+practice, L is hundreds):
+
+    =====================  ==============  ===========================
+    per local step          per-leaf path   packed path
+    =====================  ==============  ===========================
+    optimizer update        ~5·L ops        B fused kernel launches
+    sync-SGD all-reduce     L means         B means
+    PowerSGD elementwise    ~3·L ops        B sweeps (+ inherently
+                                            per-leaf factor math and
+                                            uncompressed-leaf means)
+    DaSGD mid-round rebase  L lerps         B sweeps
+    layout ops              0               1 unpack (fused into the
+                                            forward's leaf consumers)
+                                            + 1 gradient pack
+    =====================  ==============  ===========================
+
+Optimizer state (SGD momentum, AdamW f32 moments) lives as flat buffers in
+``TrainState.opt`` between boundaries — ``pack``/``unpack`` never touch it
+mid-round. The fused update kernels are in ``repro.kernels.opt_step``; the
+per-leaf optimizer remains the bit-exact oracle (``AlgoConfig.packed`` off),
+pinned by tests/test_packed_optim.py.
+
 Layout rules
 ------------
 * Leaves are bucketed by dtype (buckets ordered by dtype name) — mixing

@@ -13,6 +13,25 @@ Packed strategies (``AlgoConfig.packed``, the default) override
 — anchor-shaped state and inflight slots are then flat
 :class:`repro.parallel.packing.Packed` buffers rather than pytrees.
 
+The τ *local steps* run packed too (when the optimizer is packed-capable):
+the scan carries the *packed* parameter plane — packed once at round start,
+materialized as a pytree view only where the model's forward pass needs
+leaves (an ``unpack`` whose slices XLA fuses into the leaf consumers) —
+gradients are flattened onto the plane once per step, the gradient-space
+hook runs as ``transform_grads_packed`` (one collective per dtype bucket
+for sync-SGD; PowerSGD's elementwise error feedback per-bucket, with only
+its inherently per-leaf work — rank-r factor math and the small
+uncompressed-leaf all-reduces — left per-leaf), the optimizer update is one
+fused
+``kernels/opt_step`` launch per bucket against flat optimizer-state buffers
+carried in ``TrainState.opt``, and mid-round consumers (DaSGD) rebase the
+plane in place via ``local_post_update_packed``. Per-leaf dispatch inside a
+local step is thereby O(dtype buckets), not O(leaves); the per-leaf path
+remains intact as the bit-exact oracle (``packed=False``). Gradient
+clipping, when enabled, stays per-leaf in both paths (it is O(leaves)
+*scalar* reductions feeding one global scale — cheap, and keeping it
+shared preserves the bitwise pin).
+
 Because launch and consume are distinct phases separated by τ local steps,
 the anchor collective's consumer lies a full round downstream when several
 rounds are scanned into one program (``rounds_per_call > 1``, the production
@@ -37,7 +56,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.strategy import as_strategy
-from repro.optim.optimizers import Optimizer, clip_by_global_norm
+from repro.optim.optimizers import Optimizer, clip_by_global_norm, packed_capable
+from repro.parallel.packing import pack, unpack
 from repro.training.train_state import TrainState
 
 
@@ -52,6 +72,10 @@ def make_round_step(
 ):
     strategy = as_strategy(strategy)
     grad_fn = jax.grad(loss_fn, has_aux=True)
+    # packed local step: grads/params ride the flat plane through the
+    # gradient hook + fused optimizer launch; opt state stays packed in the
+    # scan carry (must match make_train_state's choice of opt layout)
+    packed_step = strategy.packed and packed_capable(optimizer)
 
     def stacked_grads(x, micro):
         """Per-worker grads, with optional gradient accumulation over
@@ -87,25 +111,36 @@ def make_round_step(
         def local_step(carry, scanned):
             micro, k_in_round = scanned
             x, opt, vars, step = carry
+            if packed_step:  # the carry is the plane; leaves are a view
+                px, x = x, unpack(x)
             lr = schedule(step)
             grads, metrics = stacked_grads(x, micro)
             if grad_clip > 0.0:
                 grads = jax.vmap(lambda g: clip_by_global_norm(g, grad_clip)[0])(grads)
-            grads, vars = strategy.transform_grads(grads, vars)
-            opt, x = jax.vmap(lambda o, xi, gi: optimizer.step(o, xi, gi, lr))(opt, x, grads)
-            x = strategy.local_post_update(x, vars, inflight, k_in_round)
+            if packed_step:
+                pg, vars = strategy.transform_grads_packed(pack(grads, layout=px.layout, lead=1), vars)
+                opt, px = optimizer.step_packed(opt, px, pg, lr)
+                x = strategy.local_post_update_packed(px, vars, inflight, k_in_round)
+            else:
+                grads, vars = strategy.transform_grads(grads, vars)
+                opt, x = jax.vmap(lambda o, xi, gi: optimizer.step(o, xi, gi, lr))(opt, x, grads)
+                x = strategy.local_post_update(x, vars, inflight, k_in_round)
             metrics = dict(metrics, lr=jnp.broadcast_to(lr, metrics["loss"].shape))
             return (x, opt, vars, step + 1), metrics
 
         tau = jax.tree.leaves(round_batch)[0].shape[0]
+        x0 = pack(state.x, lead=1) if packed_step else state.x
         (x, opt, vars, step), metrics = jax.lax.scan(
             local_step,
-            (state.x, state.opt, state.vars, state.step),
+            (x0, state.opt, state.vars, state.step),
             (round_batch, jnp.arange(tau)),
         )
         # apply + launch in one hook: per-leaf strategies run the two phases
         # back to back; packed strategies fuse them over the flat parameter
-        # plane (one collective + one kernel launch per boundary)
+        # plane (one collective + one kernel launch per boundary). With the
+        # packed local step, x is still the plane here — boundary_round
+        # consumes it directly (no re-pack at the scan→boundary seam) and
+        # always returns the pytree view.
         x, vars, inflight = strategy.boundary_round(x, vars, inflight, axes_tree)
         new_state = TrainState(x=x, opt=opt, vars=vars, step=step, inflight=inflight)
         return new_state, metrics

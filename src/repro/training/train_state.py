@@ -10,6 +10,13 @@ slot and anchor-shaped strategy vars are :class:`repro.parallel.packing.Packed`
 flat buffers — they live packed for their whole launch→consume life, so no
 repacking happens between boundaries. ``repro.parallel.packing.unpack``
 recovers the pytree view when needed.
+
+The local optimizer state follows the same rule: with a packed strategy and
+a packed-capable optimizer, ``opt`` is a ``PackedSGDState``/``PackedAdamState``
+of worker-stacked flat buffers (AdamW moments as f32 shadow buckets, one
+scalar count) that lives packed across the whole round — the τ local steps
+read and write it through the fused ``kernels/opt_step`` ops, one launch per
+dtype bucket per step.
 """
 from __future__ import annotations
 
@@ -19,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.strategy import AlgoVars, CommStrategy, as_strategy
-from repro.optim.optimizers import Optimizer
+from repro.optim.optimizers import Optimizer, packed_capable
+from repro.parallel.packing import pack
 
 
 class TrainState(NamedTuple):
@@ -40,7 +48,10 @@ def make_train_state(
     """All workers start at the same point (Theorem 1's initialization)."""
     strategy = as_strategy(algorithm)
     x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
-    opt = jax.vmap(optimizer.init)(x)
+    if strategy.packed and packed_capable(optimizer):
+        opt = optimizer.init_packed(pack(x, lead=1))
+    else:
+        opt = jax.vmap(optimizer.init)(x)
     vars = strategy.init_vars(x, axes_tree)
     inflight = strategy.init_inflight(x, vars, axes_tree)
     return TrainState(x=x, opt=opt, vars=vars, step=jnp.zeros((), jnp.int32), inflight=inflight)

@@ -13,3 +13,16 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def unpack_view(v):
+    """Pytree view of a state slot: unpack flat packed planes (recursing
+    through NamedTuple containers like Inflight/PowerState), pass trees
+    through. Shared by the packed-vs-per-leaf differential suites."""
+    from repro.parallel.packing import Packed, unpack
+
+    if isinstance(v, Packed):
+        return unpack(v)
+    if isinstance(v, tuple) and hasattr(v, "_fields"):
+        return type(v)(*(unpack_view(f) for f in v))
+    return v

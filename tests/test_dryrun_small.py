@@ -169,6 +169,91 @@ print("PACKED MESH OK")
 """
 
 
+OPT_PLANE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import AlgoConfig, get_arch, InputShape, ParallelPlan
+from repro.core import make_strategy
+from repro.launch import specs, roofline as rl
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import transformer as T
+from repro.optim import schedules, sgd, PackedSGDState
+from repro.parallel import mesh_context
+from repro.parallel.packing import Packed, unpack
+from repro.training import make_round_step, make_train_state
+
+mesh = make_smoke_mesh()
+cfg = get_arch("h2o-danube-1.8b").model.reduced()
+plan = ParallelPlan(workers=2, fsdp=2, tensor=2)
+shape = InputShape("small_train", seq_len=32, global_batch=8, mode="train")
+rules = specs.rules_for(shape)
+acfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=True)
+opt = sgd(momentum=0.9, nesterov=True, weight_decay=1e-4)
+
+# 1) AOT specs: the flat optimizer-state buffers get worker-stacked
+# flat-plane shardings ((worker, fsdp) — the jax-0.4.x partially-sharded
+# regime the DUS-built plane exists for)
+with mesh_context(mesh, rules):
+    strat = make_strategy(acfg)
+    state_sds, state_sh, axes = specs.train_state_specs(cfg, plan, strat, opt, mesh, rules)
+    assert isinstance(state_sds.opt, PackedSGDState), type(state_sds.opt)
+    assert isinstance(state_sh.opt.momentum, Packed)
+    sh_specs = {s.spec for s in jax.tree.leaves(state_sh.opt)}
+    assert any("worker" in str(sp) and "fsdp" in str(sp) for sp in sh_specs), sh_specs
+    batch_sds = specs.train_batch_specs(cfg, shape, plan, tau=2)
+    batch_sh = specs.batch_shardings(batch_sds, mesh, rules)
+    loss_fn = lambda p, b: T.lm_loss(cfg, p, b, remat=True)
+    step = make_round_step(loss_fn, opt, strat, schedules.constant(0.1), axes)
+    compiled = jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(state_sds, batch_sds).compile()
+    stats = rl.collective_stats(compiled.as_text())
+    assert any(k in stats for k in ("all-reduce", "all-gather", "reduce-scatter")), stats
+
+# 2) executed parity on 8 host devices: a full round with the packed local
+# step (flat momentum carried in the scan) matches the per-leaf oracle.
+# Tolerance is a few ULPs — the two programs shard/fuse differently through
+# the ENTIRE local step now, so XLA may reassociate f32 math per step; the
+# update math itself is pinned bitwise by the no-mesh suite.
+rng = np.random.default_rng(0)
+batch = dict(
+    tokens=jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 2, 4, 32)), jnp.int32),
+    targets=jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 2, 4, 32)), jnp.int32),
+)
+finals = []
+with mesh_context(mesh, rules):
+    params, axes = T.init_model(cfg, jax.random.PRNGKey(0))
+    for c in (acfg, dataclasses.replace(acfg, packed=False)):
+        strat = make_strategy(c)
+        state = make_train_state(params, 2, opt, strat, axes)
+        step = jax.jit(make_round_step(lambda p, b: T.lm_loss(cfg, p, b), opt, strat, schedules.constant(1e-2), axes))
+        state, ms = step(state, batch)
+        assert np.isfinite(np.asarray(ms["loss"])).all()
+        finals.append(state)
+assert isinstance(finals[0].opt, PackedSGDState) and not isinstance(finals[1].opt, PackedSGDState)
+for a, b in zip(jax.tree.leaves(finals[0].x), jax.tree.leaves(finals[1].x)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=5e-7)
+for a, b in zip(jax.tree.leaves(unpack(finals[0].opt.momentum)), jax.tree.leaves(finals[1].opt.momentum)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=5e-7)
+print("OPT PLANE MESH OK")
+"""
+
+
+def test_packed_opt_state_lowers_and_matches_on_8_devices():
+    """Satellite (ISSUE 3): flat optimizer-state buckets get the
+    (worker, fsdp) flat-plane shardings in the AOT specs, the round program
+    compiles on the 8-device host mesh, and an executed round matches the
+    per-leaf oracle — pinning the jax-0.4.x partially-sharded-concat
+    workaround (DUS-built planes) for the optimizer buckets."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", OPT_PLANE_SCRIPT], env=env, capture_output=True, text=True, timeout=600
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OPT PLANE MESH OK" in proc.stdout
+
+
 def test_packed_boundary_lowers_and_matches_on_8_devices():
     """Packed-plane boundary on a real (host) mesh: the AOT specs give the
     flat inflight/vars buffers anchor-plane shardings, the program lowers

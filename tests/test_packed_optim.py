@@ -1,0 +1,341 @@
+"""Packed local step: golden differential suite + launch-budget regression.
+
+The packed parameter plane now covers the *entire* local step — flat
+optimizer state (``PackedSGDState``/``PackedAdamState``) carried in
+``TrainState.opt``, fused ``kernels/opt_step`` updates, and packed
+``transform_grads``/``local_post_update`` hooks. This suite pins it three
+ways:
+
+1. differential: packed vs per-leaf full rounds are bit-exact (≤1-ulp for
+   f32 AdamW, whose division/sqrt chain XLA may FMA-contract differently)
+   across all optimizers × {f32, mixed-bf16 params} × all 11 strategy
+   variants, including mid-round DaSGD consume and LOSCAR error feedback;
+2. budget: jaxpr launch/collective counts for a full τ-step round stay at
+   the packed budget *regardless of leaf count*, so later PRs cannot
+   silently reintroduce per-leaf dispatch;
+3. numerics: packed bf16-param AdamW against an f64 NumPy reference, and
+   the Pallas kernels (interpret mode) against the shared jnp formulas.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AlgoConfig
+from repro.core import make_strategy
+from repro.kernels import flags
+from repro.kernels.opt_step import ops as opt_ops
+from repro.kernels.opt_step import ref as opt_ref
+from repro.optim import PackedAdamState, PackedSGDState, adamw, packed_capable, schedules, sgd
+from repro.parallel.packing import pack, unpack
+from repro.training import make_round_step, make_train_state
+
+M = 4
+
+
+from conftest import unpack_view as _unp  # packed-state pytree view
+
+
+def _params(rng, bf16: bool):
+    """Mixed-shape tree; ``bf16`` adds a second dtype bucket (bf16 matrices
+    alongside f32 leaves) so the packed path must keep buckets separate."""
+    mat = jnp.bfloat16 if bf16 else jnp.float32
+    return {
+        "w0": jnp.asarray(rng.normal(size=(3, 5)), mat),
+        "w1": jnp.asarray(rng.normal(size=(4, 6)), mat),
+        "vec": jnp.asarray(rng.normal(size=(7,)), jnp.float32),
+        "scalar": jnp.float32(rng.normal()),
+        "b0": jnp.asarray(rng.normal(size=(5,)), mat),
+    }
+
+
+def _loss(params, batch):
+    A, b = batch
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(params)])
+    r = A @ flat - b
+    loss = 0.5 * jnp.sum(r * r)
+    return loss, dict(loss=loss)
+
+
+def _run_pair(cfg: AlgoConfig, optimizer, params, rounds=2, lr=0.03, seed=1):
+    """Run packed and per-leaf configurations on identical batches; return
+    the two final TrainStates."""
+    n_flat = sum(l.size for l in jax.tree.leaves(params))
+    states, steps, strats = [], [], []
+    for c in (cfg, dataclasses.replace(cfg, packed=False)):
+        strat = make_strategy(c)
+        strats.append(strat)
+        states.append(make_train_state(params, M, optimizer, strat, None))
+        steps.append(jax.jit(make_round_step(_loss, optimizer, strat, schedules.constant(lr), None)))
+    assert strats[0].packed and not strats[1].packed
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        A = jnp.asarray(rng.normal(size=(strats[0].tau, M, 4, n_flat)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(strats[0].tau, M, 4)), jnp.float32)
+        states = [step(s, (A, b))[0] for step, s in zip(steps, states)]
+    return states
+
+
+ALL_VARIANTS = [
+    ("overlap_local_sgd", dict(anchor_beta=0.0)),
+    ("overlap_local_sgd", dict(anchor_beta=0.7)),
+    ("local_sgd", {}),
+    ("sync_sgd", {}),
+    ("easgd", {}),
+    ("cocod", {}),
+    ("powersgd", {}),
+    ("delayed_avg", dict(delay_steps=2)),  # mid-round consume (delay < tau)
+    ("delayed_avg", dict(delay_steps=3)),  # boundary consume (delay = tau)
+    ("sparse_anchor", dict(sparse_k=0.5)),  # error feedback active
+    ("sparse_anchor", dict(sparse_k=1.0)),
+]
+
+OPTIMIZERS = {
+    "sgd": lambda: sgd(momentum=0.9, nesterov=True, weight_decay=1e-4),
+    "adamw": lambda: adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=1e-4),
+}
+
+
+def _assert_tree(tp, tr, opt_name, msg):
+    """sgd: bitwise; adamw: ≤1-ulp on f32 (FMA-contraction slack)."""
+    for a, b in zip(jax.tree.leaves(tp), jax.tree.leaves(tr)):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        if opt_name == "sgd":
+            np.testing.assert_array_equal(a, b, err_msg=msg)
+        else:
+            np.testing.assert_allclose(a, b, rtol=3e-7, atol=1e-7, err_msg=msg)
+
+
+@pytest.mark.parametrize("bf16", [False, True], ids=["f32", "bf16"])
+@pytest.mark.parametrize("opt_name", sorted(OPTIMIZERS))
+@pytest.mark.parametrize("name,kw", ALL_VARIANTS, ids=[f"{n}-{v}" for n, v in ALL_VARIANTS])
+def test_packed_local_step_matches_perleaf(name, kw, opt_name, bf16, rng):
+    """ISSUE golden suite: the packed local step (flat opt state + fused
+    update + packed gradient hooks) reproduces the per-leaf oracle for every
+    strategy × optimizer × param-dtype combination — params, optimizer
+    state, carried inflight, and strategy vars."""
+    cfg = AlgoConfig(name=name, tau=3, alpha=0.6, packed=True, **kw)
+    optimizer = OPTIMIZERS[opt_name]()
+    s_p, s_r = _run_pair(cfg, optimizer, _params(rng, bf16))
+
+    # the packed run must actually have used the packed opt-state layout
+    assert isinstance(s_p.opt, (PackedSGDState, PackedAdamState))
+    _assert_tree(s_p.x, s_r.x, opt_name, f"{name}.x")
+
+    # optimizer state agrees through the pytree view (per-leaf Adam carries
+    # one count per worker; packed carries the single shared scalar)
+    po, ro = _unp(s_p.opt), s_r.opt
+    if opt_name == "sgd":
+        _assert_tree(po.momentum, ro.momentum, opt_name, f"{name}.opt.momentum")
+    else:
+        _assert_tree(po.mu, ro.mu, opt_name, f"{name}.opt.mu")
+        _assert_tree(po.nu, ro.nu, opt_name, f"{name}.opt.nu")
+        assert po.count.shape == ()
+        np.testing.assert_array_equal(np.asarray(po.count), np.asarray(ro.count[0]))
+
+    pv, rv = _unp(s_p.inflight), _unp(s_r.inflight)
+    _assert_tree(pv, rv, opt_name, f"{name}.inflight")
+    for f in ("z", "v", "extra"):
+        pv, rv = _unp(getattr(s_p.vars, f)), _unp(getattr(s_r.vars, f))
+        if pv is None or rv is None:
+            assert (pv is None) == (rv is None)
+            continue
+        _assert_tree(pv, rv, opt_name, f"{name}.vars.{f}")
+
+
+def test_packed_opt_state_layout(rng):
+    """Satellite fix: packed AdamW keeps ONE scalar count and f32 moment
+    buckets element-aligned with the (possibly bf16) parameter plane; packed
+    SGD momentum stays in the parameter dtype bucket-for-bucket."""
+    params = _params(rng, bf16=True)
+    px = pack(jax.tree.map(lambda t: jnp.tile(t[None], (M,) + (1,) * t.ndim), params), lead=1)
+
+    st = adamw().init_packed(px)
+    assert st.count.shape == () and st.count.dtype == jnp.int32
+    assert all(b.dtype == jnp.float32 for b in st.mu.buffers + st.nu.buffers)
+    # element-aligned: same bucket sizes/offsets as the param plane
+    assert st.mu.layout.bucket_sizes == px.layout.bucket_sizes
+    assert [s.offset for s in st.mu.layout.slots] == [s.offset for s in px.layout.slots]
+
+    ss = sgd().init_packed(px)
+    assert tuple(b.dtype for b in ss.momentum.buffers) == tuple(b.dtype for b in px.buffers)
+
+
+# ---------------------------------------------------------------------------
+# launch/collective budget: O(dtype buckets), not O(leaves)
+# ---------------------------------------------------------------------------
+
+
+def _count_primitives(jaxpr, names):
+    """Count equation primitives by name, recursing through sub-jaxprs but
+    not into pallas_call bodies (their internal ops are in-VMEM)."""
+    counts = dict.fromkeys(names, 0)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in counts:
+            counts[eqn.primitive.name] += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            sub = None
+            if isinstance(v, jax.extend.core.ClosedJaxpr):
+                sub = v.jaxpr
+            elif hasattr(v, "eqns"):
+                sub = v
+            if sub is not None:
+                for k, c in _count_primitives(sub, names).items():
+                    counts[k] += c
+    return counts
+
+
+def _round_jaxpr(params, opt_name="sgd", tau=3, beta=0.7):
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=tau, alpha=0.6, anchor_beta=beta, packed=True)
+    strat = make_strategy(cfg)
+    optimizer = OPTIMIZERS[opt_name]()
+    state = make_train_state(params, M, optimizer, strat, None)
+    step = make_round_step(_loss, optimizer, strat, schedules.constant(0.03), None)
+    n_flat = sum(l.size for l in jax.tree.leaves(params))
+    A = jnp.zeros((tau, M, 4, n_flat), jnp.float32)
+    b = jnp.zeros((tau, M, 4), jnp.float32)
+    with flags.force_pallas():
+        return jax.make_jaxpr(step)(state, (A, b))
+
+
+def _wide_params(rng, n_mats, bf16=False):
+    mat = jnp.bfloat16 if bf16 else jnp.float32
+    p = {"s": jnp.float32(rng.normal())}
+    for i in range(n_mats):
+        p[f"w{i}"] = jnp.asarray(rng.normal(size=(3 + i % 4, 5 + i % 3)), mat)
+        p[f"b{i}"] = jnp.asarray(rng.normal(size=(5 + i % 3,)), jnp.float32)
+    return p
+
+
+@pytest.mark.parametrize("opt_name", sorted(OPTIMIZERS))
+def test_round_launch_budget_independent_of_leaf_count(rng, opt_name):
+    """ISSUE acceptance: one fused kernel launch per dtype bucket per local
+    optimizer step. The τ local steps are a lax.scan, so the traced round
+    program contains exactly buckets launches in the scan body (re-executed
+    τ times at runtime) + buckets at the fused boundary — independent of
+    how many leaves the model has."""
+    counts = []
+    for n_mats in (4, 12):
+        params = _wide_params(rng, n_mats)
+        assert len(jax.tree.leaves(params)) == 1 + 2 * n_mats
+        jaxpr = _round_jaxpr(params, opt_name, tau=3)
+        counts.append(_count_primitives(jaxpr.jaxpr, ["pallas_call"])["pallas_call"])
+    # single f32 bucket: 1 fused opt step (scan body) + 1 fused boundary
+    assert counts[0] == counts[1] == 2, counts
+
+
+def test_round_launch_budget_two_buckets(rng):
+    """Mixed {bf16, f32} params: the budget doubles with the bucket count,
+    not with the leaf count."""
+    params = _wide_params(rng, 6, bf16=True)  # bf16 mats + f32 vecs/scalar
+    jaxpr = _round_jaxpr(params, "sgd", tau=2)
+    n = _count_primitives(jaxpr.jaxpr, ["pallas_call"])["pallas_call"]
+    assert n == 2 * 2, n  # 2 buckets × (opt step + boundary)
+
+
+def test_sync_sgd_collective_budget(rng):
+    """The per-step gradient all-reduce is ONE mean per dtype bucket on the
+    packed path vs one per leaf on the reference path."""
+    params = _wide_params(rng, 8)
+    n_leaves = len(jax.tree.leaves(params))
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (M,) + (1,) * t.ndim), params)
+    grads = jax.tree.map(jnp.ones_like, x)
+    strat = make_strategy(AlgoConfig(name="sync_sgd", packed=True))
+    vars_ = strat.init_vars(x, None)
+
+    packed_jaxpr = jax.make_jaxpr(lambda g: strat.transform_grads_packed(pack(g, lead=1), vars_)[0])(grads)
+    n_packed = _count_primitives(packed_jaxpr.jaxpr, ["reduce_sum"])["reduce_sum"]
+    assert n_packed == 1, n_packed  # single f32 bucket
+
+    leaf_jaxpr = jax.make_jaxpr(lambda g: strat.transform_grads(g, vars_)[0])(grads)
+    n_leaf = _count_primitives(leaf_jaxpr.jaxpr, ["reduce_sum"])["reduce_sum"]
+    assert n_leaf == n_leaves
+
+
+# ---------------------------------------------------------------------------
+# bf16-param AdamW numerics vs an f64 reference (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_packed_adamw_bf16_vs_f64_reference(rng):
+    """The packed path's f32 moment buckets + shared scalar count keep
+    bf16-param AdamW within bf16 resolution of an all-f64 oracle (and the
+    f32 moments within f32 resolution)."""
+    n, steps = 257, 5  # lane-ragged on purpose
+    b1, b2, eps, wd, lr = 0.9, 0.95, 1e-8, 1e-4, 0.02
+    x0 = rng.normal(size=(M, n)).astype(np.float32)
+    gs = rng.normal(size=(steps, M, n)).astype(np.float32)
+
+    params = {"w": jnp.asarray(x0, jnp.bfloat16)}
+    opt = adamw(b1=b1, b2=b2, eps=eps, weight_decay=wd)
+    px = pack(params, lead=1)
+    st = opt.init_packed(px)
+    for k in range(steps):
+        g = pack({"w": jnp.asarray(gs[k]).astype(jnp.bfloat16)}, lead=1)
+        st, px = opt.step_packed(st, px, g, jnp.float32(lr))
+
+    # f64 oracle fed the same bf16-rounded inputs
+    x = np.asarray(jnp.asarray(x0, jnp.bfloat16), np.float64)
+    mu = np.zeros_like(x)
+    nu = np.zeros_like(x)
+    for k in range(steps):
+        g = np.asarray(jnp.asarray(gs[k]).astype(jnp.bfloat16), np.float64)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        c1, c2 = 1 - b1 ** (k + 1), 1 - b2 ** (k + 1)
+        u = (mu / c1) / (np.sqrt(nu / c2) + eps) + wd * x
+        x = np.asarray(jnp.asarray(x - lr * u, jnp.bfloat16), np.float64)
+
+    got_x = np.asarray(unpack(px)["w"], np.float64)
+    np.testing.assert_allclose(got_x, x, rtol=0, atol=2 * 2.0 ** -8 * np.abs(x).max())  # ≤2 bf16 ulps
+    got_mu = np.asarray(unpack(st.mu)["w"], np.float64)
+    np.testing.assert_allclose(got_mu, mu, rtol=3e-5, atol=3e-6)  # f32 moments vs f64
+    assert int(st.count) == steps
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret mode) vs the shared jnp formulas
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [256, 300])  # aligned + lane-ragged
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_opt_step_kernels_match_ref(rng, n, dtype):
+    x = jnp.asarray(rng.normal(size=(M, n)), dtype)
+    g = jnp.asarray(rng.normal(size=(M, n)), dtype)
+    mom = jnp.asarray(rng.normal(size=(M, n)), dtype)
+    mu = jnp.asarray(rng.normal(size=(M, n)), jnp.float32)
+    nu = jnp.abs(jnp.asarray(rng.normal(size=(M, n)), jnp.float32))
+    lr, c1, c2 = jnp.float32(0.05), jnp.float32(0.1), jnp.float32(0.05)
+    tol = dict(rtol=3e-7, atol=3e-7) if dtype == jnp.float32 else dict(rtol=1e-2, atol=1e-2)
+
+    ref_out = opt_ref.sgd_update(x, g, mom, lr, momentum=0.9, nesterov=True, weight_decay=1e-4)
+    with flags.force_pallas():
+        k_out = opt_ops.sgd_step(x, g, mom, lr, momentum=0.9, nesterov=True, weight_decay=1e-4)
+    for a, b in zip(ref_out, k_out):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32), **tol)
+
+    ref_out = opt_ref.adamw_update(x, g, mu, nu, lr, c1, c2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=1e-4)
+    with flags.force_pallas():
+        k_out = opt_ops.adamw_step(x, g, mu, nu, lr, c1, c2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=1e-4)
+    for a, b in zip(ref_out, k_out):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32), **tol)
+
+
+def test_packed_step_not_used_without_capability(rng):
+    """An optimizer without packed support must fall back to the per-leaf
+    local step even under a packed strategy (and still be correct)."""
+    from repro.optim.optimizers import Optimizer
+
+    base = sgd(momentum=0.9, nesterov=True, weight_decay=0.0)
+    crippled = Optimizer(init=base.init, step=base.step)  # no packed hooks
+    assert not packed_capable(crippled) and packed_capable(base)
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, packed=True)
+    params = _params(rng, bf16=False)
+    s_c, s_r = _run_pair(cfg, crippled, params)
+    assert not isinstance(s_c.opt, (PackedSGDState, PackedAdamState))
+    _assert_tree(s_c.x, s_r.x, "sgd", "fallback.x")

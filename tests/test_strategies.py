@@ -16,16 +16,13 @@ from repro.core.strategy import LegacyStrategy
 from repro.kernels import flags
 from repro.models import transformer as T
 from repro.optim import schedules, sgd
-from repro.parallel.packing import Packed, unpack
 from repro.training import make_round_step, make_train_state
 
 D = 6
 M = 4
 
 
-def _unp(v):
-    """Pytree view of a state slot: unpack flat planes, pass trees through."""
-    return unpack(v) if isinstance(v, Packed) else v
+from conftest import unpack_view as _unp  # packed-state pytree view
 
 
 def quad_loss(params, batch):
