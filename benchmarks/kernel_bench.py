@@ -12,12 +12,13 @@ the packed flat-plane path vs the per-leaf reference path — the perf claim
 of the packed parameter plane (ISSUE 2), persisted into BENCH_kernels.json
 by benchmarks/run.py.
 
-The ``localstep/*`` rows (ISSUE 3) time one local optimizer step the same
-two ways: per-leaf (vmapped tree optimizer, O(leaves) ops) vs packed (the
-plane carried through the scan — unpack view + gradient pack + one fused
-``kernels/opt_step`` update per dtype bucket). Both sides include an
-identical cheap gradient oracle so the packed side's unpack is a live
-dependency, exactly as in the round engine.
+The ``localstep/*`` rows time one local optimizer step the same two ways:
+per-leaf (vmapped tree optimizer, O(leaves) ops) vs packed (plane-resident
+training — flat bucket cotangents into one fused ``kernels/opt_step``
+update per dtype bucket). The ``fwdstep``/``gradflow`` rows time the AD
+chain itself: forward/grad with the plane as the primal (ParamView window
+reads, flat cotangents) vs the retired per-step pack/unpack chain (unpack →
+tree grad → DUS-scatter the gradient pytree back onto the plane).
 
 The ``boundary/<arch>/*`` rows time the round boundary per architecture on
 the 8-device dry-run (host) smoke mesh via a subprocess (the device-count
@@ -46,7 +47,7 @@ from repro.kernels.rmsnorm import ref as rms_ref
 from repro.kernels.rwkv6_wkv import ref as wkv_ref
 from repro.kernels.ssd_scan import ref as ssd_ref
 from repro.optim import adamw, sgd
-from repro.parallel.packing import pack, unpack
+from repro.parallel.packing import ParamView, pack, unpack
 
 
 def _time(fn, *args, iters=5):
@@ -122,14 +123,14 @@ def boundary_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: in
 
 def local_step_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: int = 48):
     """Packed vs per-leaf local optimizer step at the production-depth
-    241-leaf config (ISSUE 3 acceptance: packed ≥ 1.5× faster here).
+    241-leaf config.
 
     Both modes run the full per-step chain the round engine executes after
-    the backward pass — per-leaf: vmapped tree step; packed: pytree view of
-    the carried plane → gradient pack → one fused update per dtype bucket —
-    plus an identical elementwise gradient oracle standing in for the
-    backward output (it keeps the packed side's unpack live, as in the real
-    scan, without diluting the rows with model-dependent grad compute)."""
+    the backward pass — per-leaf: vmapped tree step; packed (plane-resident
+    training): gradients already live as flat bucket cotangents, so the
+    chain is just one fused update per dtype bucket — plus an identical
+    elementwise gradient oracle standing in for the backward output (the
+    fwdstep/gradflow rows time the AD chain itself)."""
     if quick:
         n_layers, width = 40, 32
     rng = np.random.default_rng(0)
@@ -155,9 +156,10 @@ def local_step_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: 
             return jax.vmap(lambda oi, xi, gi: opt.step(oi, xi, gi, lr))(o, xx, gg)
 
         def f_packed(o, pxx):
-            xx = unpack(pxx)  # the view the forward pass consumes
-            gg = jax.tree.map(lambda t: t * 0.01, xx)
-            return opt.step_packed(o, pxx, pack(gg, layout=pxx.layout, lead=1), lr)
+            # plane-resident: the backward hands over flat bucket cotangents
+            # directly — no pack/unpack in the step chain
+            gg = jax.tree.map(lambda b: b * 0.01, pxx)
+            return opt.step_packed(o, pxx, gg, lr)
 
         px = pack(x, lead=1)
         us_by_mode = {}
@@ -179,6 +181,69 @@ def local_step_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: 
                 f"localstep/{opt_name}_packed_speedup_{n_leaves}leaf",
                 us_by_mode["packed"],
                 f"speedup_x={us_by_mode['perleaf']/us_by_mode['packed']:.2f} baseline_us={us_by_mode['perleaf']:.1f}",
+            )
+        )
+    return rows
+
+
+def plane_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: int = 48):
+    """``fwdstep``/``gradflow`` rows (plane-resident training): forward pass
+    and gradient computation with the packed plane as the primal — params
+    read through ParamView windows, cotangents arriving as flat per-bucket
+    buffers — vs the per-step pack/unpack chain (unpack the plane, grad the
+    pytree, DUS-scatter the gradient tree back onto the plane) that the
+    round engine ran before the plane went end-to-end. Same 241-leaf
+    synthetic tree as the boundary/localstep rows; the loss touches every
+    leaf elementwise so both directions sweep the whole plane."""
+    if quick:
+        n_layers, width = 40, 32
+    rng = np.random.default_rng(0)
+    params = _synthetic_tree(rng, n_layers, width)
+    n_leaves = len(jax.tree.leaves(params))
+    n_elems = sum(l.size for l in jax.tree.leaves(params))
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
+    px = pack(x, lead=1)
+    iters = 5 if quick else 30
+
+    def tree_loss(p):  # touches every leaf; stands in for the model forward
+        return sum(0.5 * jnp.sum(jnp.square(l)) for l in jax.tree.leaves(p))
+
+    def plane_loss(pxx):  # the engine's formulation: stacked view, vmapped loss
+        view = ParamView(pxx).materialize()
+        return jnp.sum(jax.vmap(tree_loss)(view))
+
+    fwd = {
+        "plane": jax.jit(plane_loss),
+        "packunpack": jax.jit(lambda pxx: jnp.sum(jax.vmap(tree_loss)(unpack(pxx)))),
+    }
+    grad = {
+        "plane": jax.jit(jax.grad(plane_loss)),
+        "packunpack": jax.jit(
+            lambda pxx: pack(jax.vmap(jax.grad(tree_loss))(unpack(pxx)), layout=pxx.layout, lead=1)
+        ),
+    }
+    rows = []
+    for group, fns, nbytes in (
+        ("fwdstep", fwd, m * n_elems * 4),  # read the plane once
+        ("gradflow", grad, 2 * m * n_elems * 4),  # read plane, write cotangent plane
+    ):
+        us_by_mode = {}
+        for mode, fn in fns.items():
+            us = _time(fn, px, iters=iters)
+            us_by_mode[mode] = us
+            rows.append(
+                (
+                    f"{group}/{mode}_{n_leaves}leaf",
+                    us,
+                    f"effective_gbps={nbytes/us/1e3:.1f} leaves={n_leaves} elems={n_elems} m={m}",
+                )
+            )
+        rows.append(
+            (
+                f"{group}/plane_speedup_{n_leaves}leaf",
+                us_by_mode["plane"],
+                f"speedup_x={us_by_mode['packunpack']/us_by_mode['plane']:.2f} "
+                f"baseline_us={us_by_mode['packunpack']:.1f}",
             )
         )
     return rows
@@ -312,6 +377,7 @@ def run(quick: bool = False):
 
     rows.extend(boundary_rows(quick))
     rows.extend(local_step_rows(quick))
+    rows.extend(plane_rows(quick))
     rows.extend(arch_boundary_rows(quick))
     return rows
 

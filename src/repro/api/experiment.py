@@ -24,6 +24,12 @@ Two task families are supported:
 ``strategy`` accepts a name, an ``AlgoConfig``, a two-phase ``CommStrategy``
 instance, or a legacy ``Algorithm`` (wrapped transparently) — including the
 DaSGD-style ``delayed_avg`` and LOSCAR-style ``sparse_anchor`` strategies.
+
+With the default packed strategies (and a packed-capable optimizer) the
+fitted ``state.x`` is *plane-resident* — the worker-stacked flat
+``Packed`` parameter plane rather than a pytree; ``consensus()`` /
+``evaluate()`` / ``serve()`` read it through the pytree view transparently
+(``repro.training.params_view``).
 """
 from __future__ import annotations
 

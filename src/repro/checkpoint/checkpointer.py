@@ -1,8 +1,29 @@
 """Pytree checkpointing to .npz (path-keyed, dtype/shape-preserving).
 
-Handles the full TrainState (stacked params, optimizer state, anchor,
-counters). NamedTuples are stored with their field path; restore rebuilds
-into a caller-provided template tree so custom containers round-trip.
+Handles the full TrainState (stacked params — pytree or plane-resident
+``Packed`` — optimizer state, anchor, counters). NamedTuples are stored with
+their field path; restore rebuilds into a caller-provided template tree so
+custom containers round-trip.
+
+Packed planes (plane-resident ``TrainState.x``, flat optimizer/anchor
+state) round-trip natively: each :class:`repro.parallel.packing.Packed`
+node stores its buffers under ``<prefix>::<bucket>`` plus a
+``<prefix>::__layout__`` sidecar (the layout table as JSON) that makes the
+checkpoint self-describing. The sidecar enables **cross-format restore**:
+
+* a packed checkpoint restores into a ``packed=False`` template — each
+  stored buffer is sliced back into the template's per-leaf arrays using
+  the stored slot table (offset/size/shape/bucket per leaf, in the
+  template subtree's flatten order);
+* a per-leaf checkpoint restores into a packed template — the per-leaf
+  arrays are packed into fresh buffers using the *template's* layout;
+* the packed optimizer's single scalar step count and the per-leaf path's
+  per-worker ``(m,)`` counts convert in both directions (workers step in
+  lockstep, so the values agree).
+
+Checkpoints written before the sidecar existed (pre-plane PRs) still
+restore into same-format templates by direct path match; only cross-format
+conversion needs the sidecar.
 
 Note on the two-phase protocol migration: TrainState gained an ``inflight``
 slot, and overlapped strategies carry their pending anchor there instead of
@@ -11,36 +32,20 @@ templates built from the legacy ``Algorithm`` path (whose inflight is None);
 restoring them into a native-strategy template raises KeyError on the
 missing ``inflight`` paths. Retrain or re-save through the legacy shim to
 migrate.
-
-Note on the packed parameter plane (``AlgoConfig.packed``, default on):
-packed strategies store anchor-shaped state and inflight slots as flat
-``repro.parallel.packing.Packed`` buffers, which flatten to different
-checkpoint paths than the per-leaf pytrees. Checkpoints written by per-leaf
-strategies (or by pre-packed code) restore only into templates built with
-``packed=False``; packed checkpoints likewise need a packed template.
 """
 from __future__ import annotations
 
-import io
+import json
 import os
 from typing import Any
 
 import jax
 import numpy as np
 
+from repro.parallel.packing import Packed
+
 _SEP = "::"
-
-
-def _flatten_with_paths(tree):
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = {}
-    for path, leaf in flat:
-        key = _SEP.join(_path_str(p) for p in path)
-        arr = np.asarray(leaf)
-        if arr.dtype.name == "bfloat16":  # npz has no bf16: widen losslessly
-            arr = arr.astype(np.float32)
-        out[key] = arr
-    return out
+_LAYOUT_KEY = "__layout__"
 
 
 def _path_str(p) -> str:
@@ -53,27 +58,141 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _join(*parts: str) -> str:
+    return _SEP.join(p for p in parts if p)
+
+
+def _widen(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.name == "bfloat16":  # npz has no bf16: widen losslessly
+        return arr.astype(np.float32)
+    return arr
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {_join(*(_path_str(p) for p in path)): _widen(np.asarray(leaf)) for path, leaf in flat}
+
+
+def _encode_layout(layout) -> np.ndarray:
+    payload = json.dumps(
+        {
+            "slots": [
+                [s.index, s.bucket, list(s.shape), s.dtype, s.offset, s.size, s.stride]
+                for s in layout.slots
+            ],
+            "bucket_dtypes": list(layout.bucket_dtypes),
+            "bucket_sizes": [int(n) for n in layout.bucket_sizes],
+        }
+    )
+    return np.frombuffer(payload.encode("utf-8"), np.uint8)
+
+
+def _packed_prefixes(tree):
+    """(prefix, Packed) for every packed node, walked at Packed granularity."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=lambda t: isinstance(t, Packed))
+    return [
+        (_join(*(_path_str(p) for p in path)), node)
+        for path, node in flat
+        if isinstance(node, Packed)
+    ]
+
+
 def save(path: str, tree: Any) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     arrays = _flatten_with_paths(tree)
+    for prefix, node in _packed_prefixes(tree):
+        arrays[_join(prefix, _LAYOUT_KEY)] = _encode_layout(node.layout)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez(f, **arrays)
     os.replace(tmp, path)
 
 
+def _fit_leaf(arr: np.ndarray, leaf, key: str) -> np.ndarray:
+    arr = np.asarray(arr)
+    shape = tuple(getattr(leaf, "shape", arr.shape))
+    if arr.shape != shape:
+        # packed scalar step count ↔ per-leaf (m,) per-worker counts: the
+        # workers step in lockstep, so one value describes all of them
+        if shape == () and arr.ndim == 1:
+            arr = arr[0]
+        elif arr.shape == () and len(shape) == 1:
+            arr = np.broadcast_to(arr, shape).copy()
+        else:
+            raise ValueError(f"checkpoint leaf {key!r} has shape {arr.shape}; template wants {shape}")
+    if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+        arr = arr.astype(leaf.dtype)
+    return arr
+
+
+def _expand_stored_packed(arrays: dict, layouts: dict, nodes) -> None:
+    """Packed checkpoint → per-leaf template: slice each stored buffer back
+    into per-leaf entries, keyed by the template's leaf paths (slot order ==
+    the subtree's flatten order)."""
+    template_packed = {p for p, n in nodes if isinstance(n, Packed)}
+    for prefix, lay in layouts.items():
+        if prefix in template_packed or _join(prefix, "0") not in arrays:
+            continue
+        key_prefix = prefix + _SEP if prefix else ""
+        group = [(p, n) for p, n in nodes if p.startswith(key_prefix) and not isinstance(n, Packed)]
+        slots = lay["slots"]
+        if len(group) != len(slots):
+            raise KeyError(
+                f"packed checkpoint group {prefix!r} has {len(slots)} slots but the "
+                f"template subtree has {len(group)} leaves — structures must match"
+            )
+        bufs = [arrays[_join(prefix, str(b))] for b in range(len(lay["bucket_sizes"]))]
+        for (leaf_key, _), (_idx, bucket, shape, _dname, offset, size, _stride) in zip(group, slots):
+            buf = bufs[bucket]
+            lead = tuple(buf.shape[:-1])
+            arrays[leaf_key] = buf[..., offset : offset + size].reshape(lead + tuple(shape))
+
+
+def _pack_perleaf_into(arrays: dict, prefix: str, node: Packed):
+    """Per-leaf checkpoint → packed template: gather the subtree's per-leaf
+    arrays (paths derived from the template layout's treedef) and pack them
+    into buffers with the template's layout."""
+    lay = node.layout
+    dummy = jax.tree_util.tree_unflatten(lay.treedef, list(range(lay.num_leaves)))
+    flat, _ = jax.tree_util.tree_flatten_with_path(dummy)
+    key_by_index = {leaf: _join(*(_path_str(p) for p in path)) for path, leaf in flat}
+    lead = tuple(int(s) for s in node.buffers[0].shape[:-1])
+    bufs = [np.zeros(tuple(b.shape), jax.numpy.dtype(b.dtype)) for b in node.buffers]
+    for slot in lay.slots:
+        key = _join(prefix, key_by_index[slot.index])
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key!r} (needed to pack {prefix or '<root>'!r})")
+        arr = np.asarray(arrays[key]).reshape(lead + (slot.size,))
+        bufs[slot.bucket][..., slot.offset : slot.offset + slot.size] = arr.astype(bufs[slot.bucket].dtype)
+    return bufs
+
+
 def restore(path: str, template: Any) -> Any:
     with np.load(path) as z:
         arrays = {k: z[k] for k in z.files}
-    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    layouts = {}
+    for k in list(arrays):
+        if k == _LAYOUT_KEY or k.endswith(_SEP + _LAYOUT_KEY):
+            prefix = "" if k == _LAYOUT_KEY else k[: -(len(_LAYOUT_KEY) + len(_SEP))]
+            layouts[prefix] = json.loads(bytes(arrays.pop(k).tobytes()).decode("utf-8"))
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(template, is_leaf=lambda t: isinstance(t, Packed))
+    nodes = [(_join(*(_path_str(p) for p in path)), node) for path, node in flat]
+    _expand_stored_packed(arrays, layouts, nodes)
+
     leaves = []
-    for p, leaf in flat:
-        key = _SEP.join(_path_str(pp) for pp in p)
-        if key not in arrays:
-            raise KeyError(f"checkpoint missing {key!r}")
-        arr = arrays[key]
-        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
-            arr = arr.astype(leaf.dtype)
-        leaves.append(arr)
+    for prefix, node in nodes:
+        if isinstance(node, Packed):
+            bufkeys = [_join(prefix, str(i)) for i in range(len(node.buffers))]
+            if all(k in arrays for k in bufkeys):
+                leaves.extend(_fit_leaf(arrays[k], b, k) for k, b in zip(bufkeys, node.buffers))
+            else:
+                leaves.extend(
+                    _fit_leaf(a, b, prefix) for a, b in zip(_pack_perleaf_into(arrays, prefix, node), node.buffers)
+                )
+        else:
+            if prefix not in arrays:
+                raise KeyError(f"checkpoint missing {prefix!r}")
+            leaves.append(_fit_leaf(arrays[prefix], node, prefix))
     _, tdef = jax.tree_util.tree_flatten(template)
     return jax.tree_util.tree_unflatten(tdef, leaves)

@@ -304,6 +304,13 @@ class AlgoConfig:
     # per boundary regardless of leaf count). False = per-leaf reference
     # path, kept as the bit-exact oracle for the golden tests.
     packed: bool = True
+    # gradient clipping over the packed plane: per-bucket partial square
+    # sums feeding one global scale (O(buckets) reductions instead of
+    # O(leaves)). Off by default — the f32 summation *order* differs from
+    # the per-leaf walk, so enabling it trades the bitwise pin for ≤ a few
+    # ulps (tests/test_packed_optim.py pins the tolerance). Only consulted
+    # on the plane-resident local step; the per-leaf path ignores it.
+    packed_clip: bool = False
 
 
 @dataclass(frozen=True)

@@ -48,15 +48,19 @@ class PowerSGD(Algorithm):
     def _init_q(self, x_stacked):
         r = self.rank
 
-        def init_q(t):
-            shape = t.shape[1:]  # drop worker axis
+        def q_for(shape):
             if len(shape) < 2:
                 return None
             a, b = _mat_shape(shape)
             key = jax.random.PRNGKey(hash(shape) % (2**31))
             return jax.random.normal(key, (b, min(r, a, b)), jnp.float32)
 
-        return jax.tree.map(init_q, x_stacked)
+        if isinstance(x_stacked, Packed):
+            # plane-resident state: per-leaf shapes come from the layout
+            # table (slot shapes already exclude the worker lead)
+            lay = x_stacked.layout
+            return jax.tree_util.tree_unflatten(lay.treedef, [q_for(s.shape) for s in lay.slots])
+        return jax.tree.map(lambda t: q_for(t.shape[1:]), x_stacked)
 
     def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
         err = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), x_stacked)
@@ -65,8 +69,11 @@ class PowerSGD(Algorithm):
     def init_vars_packed(self, x_stacked, axes_tree=None) -> AlgoVars:
         """Packed-plane state: q factors stay per-leaf (they ARE the rank-r
         compression), the error feedback lives as an f32 shadow of the
-        worker-stacked gradient plane (same buckets/offsets as the params)."""
-        err = packed_like(pack(x_stacked, lead=1), 0.0, dtype=jnp.float32)
+        worker-stacked gradient plane (same buckets/offsets as the params).
+        Accepts the plane itself (plane-resident state) or the stacked
+        pytree."""
+        px = x_stacked if isinstance(x_stacked, Packed) else pack(x_stacked, lead=1)
+        err = packed_like(px, 0.0, dtype=jnp.float32)
         return AlgoVars(extra=PowerState(q=self._init_q(x_stacked), err=err))
 
     def transform_grads(self, grads_stacked, vars: AlgoVars):

@@ -158,8 +158,19 @@ PACKED_ANCHOR_AXES = ("anchor_flat",)
 
 
 def _pack_anchor(x_stacked) -> Packed:
-    """Worker 0's model as a packed anchor plane (all workers start equal)."""
+    """Worker 0's model as a packed anchor plane (all workers start equal).
+    Accepts the worker-stacked plane directly (plane-resident state): row 0
+    of each buffer *is* worker 0's packed model, padding included."""
+    if isinstance(x_stacked, Packed):
+        return Packed(tuple(b[0] for b in x_stacked.buffers), x_stacked.layout)
     return pack(jax.tree.map(lambda t: t[0], x_stacked))
+
+
+def _match_rep(x_in, x_new: Packed):
+    """Return the boundary's new x in the representation the engine handed
+    in: the plane-resident engine passes (and carries) the ``Packed`` plane,
+    per-leaf callers pass and get back the pytree view."""
+    return x_new if isinstance(x_in, Packed) else unpack(x_new)
 
 
 def _packed_worker_mean(p: Packed) -> Packed:
@@ -307,9 +318,10 @@ class CommStrategy:
         kernel covers both without re-reading x from HBM).
 
         Packed strategies accept ``x_stacked`` either as a pytree or as the
-        already-packed plane (the engine's packed local step carries the
-        plane through its scan and hands it over directly — no re-pack at
-        the scan→boundary seam). The returned x is always a pytree.
+        already-packed plane, and return x **in the same representation**:
+        the plane-resident engine hands over the plane its scan carries and
+        gets the plane back (no pack/unpack seam at round granularity);
+        per-leaf callers keep pytree-in/pytree-out semantics.
         """
         if self.packed:
             return self._packed_boundary(x_stacked, vars, inflight, axes_tree)
@@ -323,12 +335,19 @@ class CommStrategy:
 
     def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
         """Packed-plane boundary; strategies with boundary math override.
-        The default is the per-leaf composition (correct for strategies
-        whose collectives live per-step: base, sync_sgd, powersgd), so a
-        plane handed over by the engine is materialized as its pytree view
-        first."""
+
+        Strategies with *no* boundary math at all (base, sync_sgd,
+        powersgd — their collectives live per-step) pass the plane straight
+        through. A subclass that overrides only the per-leaf phases falls
+        back to the pytree composition, round-tripping a handed-over plane
+        through its view so the engine's carry representation is preserved."""
+        base_apply = type(self).boundary_apply is CommStrategy.boundary_apply
+        base_launch = type(self).boundary_launch is CommStrategy.boundary_launch
+        if base_apply and base_launch:
+            return x_stacked, vars, None  # launch phase would carry None
         if isinstance(x_stacked, Packed):
-            x_stacked = unpack(x_stacked)
+            x_tree, vars, inflight = self._boundary_phases(unpack(x_stacked), vars, inflight, axes_tree)
+            return pack(x_tree, layout=x_stacked.layout, lead=1), vars, inflight
         return self._boundary_phases(x_stacked, vars, inflight, axes_tree)
 
     # ---- AOT spec support (launch/specs.py) ----
@@ -393,7 +412,7 @@ class LocalSGDStrategy(CommStrategy):
         px = _as_plane(x_stacked)
         avg = _packed_worker_mean(px)
         x_new = buffer_map(lambda a, b: jnp.broadcast_to(a[None], b.shape), avg, px, layout=px.layout)
-        return unpack(x_new), vars, None
+        return _match_rep(x_stacked, x_new), vars, None
 
 
 class OverlapLocalSGDStrategy(CommStrategy):
@@ -479,7 +498,7 @@ class OverlapLocalSGDStrategy(CommStrategy):
             ]
             x_new = Packed(tuple(o[0] for o in outs), px.layout)
             z_next = Packed(tuple(o[1] for o in outs), inflight.layout)
-        return unpack(x_new), vars, _constrain_anchor_packed(z_next, axes_tree)
+        return _match_rep(x_stacked, x_new), vars, _constrain_anchor_packed(z_next, axes_tree)
 
     def state_axes(self, axes_tree):
         if self.packed:
@@ -531,7 +550,7 @@ class EASGDStrategy(CommStrategy):
             vars.z.layout,
         )
         z_new = _constrain_anchor_packed(z_new, axes_tree)
-        return unpack(x_new), AlgoVars(z=z_new, v=vars.v, extra=vars.extra), None
+        return _match_rep(x_stacked, x_new), AlgoVars(z=z_new, v=vars.v, extra=vars.extra), None
 
     def state_axes(self, axes_tree):
         if self.packed:
@@ -595,7 +614,7 @@ class CoCoDStrategy(_AvgRebaseStrategy):
 
     def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
         x_new = self._rebase_packed(_as_plane(x_stacked), inflight)
-        return unpack(x_new), vars, self._packed_launch(x_new)
+        return _match_rep(x_stacked, x_new), vars, self._packed_launch(x_new)
 
 
 class PowerSGDStrategy(CommStrategy):
@@ -688,10 +707,10 @@ class DelayedAveragingStrategy(_AvgRebaseStrategy):
         px = _as_plane(x_stacked)
         if self.delay >= self.tau:
             x_new = self._rebase_packed(px, inflight)
-            return unpack(x_new), vars, self._packed_launch(x_new)
+            return _match_rep(x_stacked, x_new), vars, self._packed_launch(x_new)
         # mid-round consumption already happened; launch from the live plane
-        # (the returned x is always the pytree view)
-        return unpack(px) if isinstance(x_stacked, Packed) else x_stacked, vars, self._packed_launch(px)
+        # (x passes through in the caller's representation)
+        return x_stacked, vars, self._packed_launch(px)
 
 
 def sparsify_topk(delta, k: float):
@@ -800,7 +819,7 @@ class SparseAnchorStrategy(CommStrategy):
             z_next = Packed(tuple(z_bufs), inflight.layout)
             err = Packed(tuple(err_bufs), vars.extra.layout)
         z_next = _constrain_anchor_packed(z_next, axes_tree)
-        return unpack(x_new), AlgoVars(z=inflight, v=vars.v, extra=err), z_next
+        return _match_rep(x_stacked, x_new), AlgoVars(z=inflight, v=vars.v, extra=err), z_next
 
     def state_axes(self, axes_tree):
         if self.packed:

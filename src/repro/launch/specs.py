@@ -174,7 +174,12 @@ def opt_state_specs(optimizer, strategy_packed: bool, x_sds, x_sh, mesh: Mesh, r
     """
     packed = strategy_packed and opt_mod.packed_capable(optimizer)
     if packed:
-        opt_sds = jax.eval_shape(lambda xs: optimizer.init_packed(pk.pack(xs, lead=1)), x_sds)
+        # plane-resident x_sds is already the packed plane; a per-leaf x_sds
+        # (packed strategy with per-leaf x specs) packs abstractly here
+        opt_sds = jax.eval_shape(
+            lambda xs: optimizer.init_packed(xs if isinstance(xs, pk.Packed) else pk.pack(xs, lead=1)),
+            x_sds,
+        )
 
         def one(s):
             if len(s.shape) == 0:  # the shared scalar count
@@ -200,6 +205,15 @@ def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mes
     x_sds = jax.tree.map(lambda s: _sds((m,) + tuple(s.shape), s.dtype), params_sds)
     x_sh = _axes_tree_shardings(_stacked_axes(axes), x_sds, mesh, rules)
     strategy_packed = isinstance(algo, CommStrategy) and getattr(algo, "packed", False)
+    if strategy_packed and opt_mod.packed_capable(optimizer):
+        # plane-resident state: x is the worker-stacked Packed plane — one
+        # ("worker", "flat_param") spec per dtype bucket instead of one per
+        # leaf, mirroring make_train_state
+        x_sds = jax.eval_shape(lambda xs: pk.pack(xs, lead=1), x_sds)
+        x_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, sh.fit_spec(sh.spec_for(PACKED_STACKED_AXES, rules), s.shape, mesh)),
+            x_sds,
+        )
     opt_sds, opt_sh = opt_state_specs(optimizer, strategy_packed, x_sds, x_sh, mesh, rules)
 
     if isinstance(algo, CommStrategy):

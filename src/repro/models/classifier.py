@@ -30,6 +30,8 @@ def init_mlp(key, dim: int, num_classes: int, hidden: Tuple[int, ...] = (128, 64
 
 
 def mlp_apply(params, x):
+    # params: built dict or a ParamView over the packed plane (plane-resident
+    # training) — both serve the `in`/`[]` access protocol used here
     h = x
     i = 0
     while f"w{i}" in params:

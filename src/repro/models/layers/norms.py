@@ -3,6 +3,10 @@
 ``rmsnorm`` routes through the fused Pallas kernel when
 ``repro.kernels.flags.use_pallas()`` is on (TPU runtime / interpret tests)
 and the pure-jnp reference otherwise (CPU, dry-run lowering).
+
+Like every layer module, apply functions take ``params`` as the dict/
+``ParamView`` access protocol (see :mod:`repro.models.params`): a key
+lookup may materialize a window of the packed parameter plane.
 """
 from __future__ import annotations
 

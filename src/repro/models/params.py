@@ -5,6 +5,15 @@ parallel tree of *logical axis names* for every leaf — the sharding layer
 (repro.parallel.sharding) resolves those names to mesh axes. This keeps model
 code free of mesh details while guaranteeing the axes tree always matches the
 params tree structurally.
+
+At *apply* time model code may receive either the built dict or a
+:class:`ParamView` — the lazy, path-keyed window view of the packed
+parameter plane that plane-resident training differentiates through
+(re-exported here so model code never imports the packing layer's
+``Layout`` machinery). Both support the same access surface
+(``params[key]`` / ``params.get`` / ``key in params`` / ``lax.scan`` over a
+stacked-layer subtree), so apply functions are written once against that
+protocol.
 """
 from __future__ import annotations
 
@@ -14,6 +23,8 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.parallel.packing import ParamView  # noqa: F401  (model-facing re-export)
 
 
 class Builder:

@@ -12,6 +12,15 @@ Modes: "train" (full sequence, causal), "prefill" (returns KV/state caches),
 "decode" (one token against caches). VLM/audio modality frontends are stubs
 per the assignment: the model consumes precomputed patch/frame embeddings
 (vision) or EnCodec codebook tokens (audio).
+
+``params`` may be the built nested dict or a
+:class:`repro.models.params.ParamView` over the packed parameter plane
+(plane-resident training): every access below goes through the shared
+dict/``get``/``in`` protocol, a leaf read materializes one plane window
+(fused into its consumer), and the ``lax.scan`` over a stacked segment
+consumes the view's ``(n, ...)`` windows directly — so the same apply code
+is differentiated with the plane buffers as the primal, without this module
+ever importing the packing layer's layout machinery.
 """
 from __future__ import annotations
 

@@ -7,9 +7,11 @@ from repro.optim.optimizers import (
     SGDState,
     adamw,
     clip_by_global_norm,
+    clip_packed_by_global_norm,
     from_config,
     global_norm,
     packed_capable,
+    packed_global_norm,
     sgd,
 )
 
@@ -21,9 +23,11 @@ __all__ = [
     "SGDState",
     "adamw",
     "clip_by_global_norm",
+    "clip_packed_by_global_norm",
     "from_config",
     "global_norm",
     "packed_capable",
+    "packed_global_norm",
     "schedules",
     "sgd",
 ]

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.config.base import OptimizerConfig
 from repro.kernels.opt_step import ops as opt_ops
-from repro.parallel.packing import Packed, packed_like
+from repro.parallel.packing import Packed, buffer_map, packed_like, view_leaf
 
 
 class SGDState(NamedTuple):
@@ -165,6 +165,36 @@ def clip_by_global_norm(grads, max_norm: float):
     norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
     return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def packed_global_norm(pg: Packed, per_bucket: bool = False) -> jnp.ndarray:
+    """Global gradient norm of a packed plane.
+
+    ``per_bucket=False`` (the default) walks the layout slots and reduces
+    each leaf's window separately, in flatten order — the *same* f32
+    summation order as :func:`global_norm` on the pytree, so the result is
+    bitwise identical and the plane-resident step keeps the golden pin even
+    with clipping on. ``per_bucket=True`` (``AlgoConfig.packed_clip``) is
+    the O(buckets) form: one partial square-sum per dtype bucket (padding
+    lanes are zero, so they contribute nothing) feeding the one global
+    scale — a different summation order, within a few ulps of the per-leaf
+    walk."""
+    if per_bucket:
+        sq = sum(jnp.sum(jnp.square(b.astype(jnp.float32))) for b in pg.buffers)
+    else:
+        sq = sum(
+            jnp.vdot(v.astype(jnp.float32), v.astype(jnp.float32))
+            for v in (view_leaf(pg, s.index) for s in pg.layout.slots)
+        )
+    return jnp.sqrt(sq)
+
+
+def clip_packed_by_global_norm(pg: Packed, max_norm: float, per_bucket: bool = False):
+    """:func:`clip_by_global_norm` over the packed plane: the scale applies
+    buffer-wise (elementwise identical to scaling each leaf)."""
+    norm = packed_global_norm(pg, per_bucket=per_bucket)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return buffer_map(lambda b: (b * scale).astype(b.dtype), pg), norm
 
 
 def from_config(cfg: OptimizerConfig) -> Optimizer:

@@ -9,12 +9,17 @@ flat buffers with a *static* layout table, so the whole boundary becomes one
 collective plus one kernel launch regardless of how many tensors the model
 has.
 
-Local-step dispatch model (PR 3)
---------------------------------
-The plane covers the τ *local steps* of each round, not just the boundary.
-The round engine carries the packed plane through its scan; per local step
-the work is, for a model with L leaves and B dtype buckets (B is 1–2 in
-practice, L is hundreds):
+Local-step dispatch model (plane-resident training)
+---------------------------------------------------
+The plane is the *canonical* training representation end-to-end:
+``TrainState.x`` stores the worker-stacked :class:`Packed` plane across
+rounds, the round engine's scan carries it, and the loss is differentiated
+**with the plane buffers as the primal argument** — the model reads
+parameters through a :class:`ParamView` (lazy ``view_leaf`` windows), so
+gradients arrive as one flat cotangent buffer per dtype bucket with no
+``pack(grads)`` scatter chain anywhere in the step. Per local step the work
+is, for a model with L leaves and B dtype buckets (B is 1–2 in practice, L
+is hundreds):
 
     =====================  ==============  ===========================
     per local step          per-leaf path   packed path
@@ -25,16 +30,18 @@ practice, L is hundreds):
                                             per-leaf factor math and
                                             uncompressed-leaf means)
     DaSGD mid-round rebase  L lerps         B sweeps
-    layout ops              0               1 unpack (fused into the
-                                            forward's leaf consumers)
-                                            + 1 gradient pack
+    layout ops              0               window reads (slices fused
+                                            into leaf consumers) +
+                                            their pad transposes on the
+                                            backward; zero DUS
     =====================  ==============  ===========================
 
 Optimizer state (SGD momentum, AdamW f32 moments) lives as flat buffers in
 ``TrainState.opt`` between boundaries — ``pack``/``unpack`` never touch it
-mid-round. The fused update kernels are in ``repro.kernels.opt_step``; the
-per-leaf optimizer remains the bit-exact oracle (``AlgoConfig.packed`` off),
-pinned by tests/test_packed_optim.py.
+mid-round — and round boundaries consume and return the plane itself (no
+pack/unpack seam at round granularity either). The fused update kernels are
+in ``repro.kernels.opt_step``; the per-leaf optimizer remains the bit-exact
+oracle (``AlgoConfig.packed`` off), pinned by tests/test_packed_optim.py.
 
 Layout rules
 ------------
@@ -57,6 +64,7 @@ concatenate per bucket); all boundary *math* then runs on the buffers.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional, Tuple
 
 import jax
@@ -273,3 +281,175 @@ def leaf_segments(layout: Layout, bucket: int) -> Tuple[LeafSlot, ...]:
     for the rare boundary ops that are inherently per-leaf (top-k quantile
     thresholds), while the sweeps stay packed."""
     return tuple(s for s in layout.slots if s.bucket == bucket)
+
+
+def read_windows(packed: Packed, indices: Tuple[int, ...]):
+    """Materialize the leaves at ``indices`` (static slot indices) as views
+    of the plane — the differentiable read :class:`ParamView` routes every
+    access through.
+
+    Forward: plain :func:`view_leaf` slices (XLA fuses them into the leaf
+    consumers). Backward (the custom part): the leaf cotangents are
+    scattered straight onto zeroed plane buffers with the same
+    static-offset ``dynamic_update_slice`` chain :func:`pack` uses — the
+    transpose of a window read *is* a pack, emitted once here by the
+    packing layer instead of as a separate post-grad step in the engine.
+    The custom rule is load-bearing twice over: JAX's default transpose of
+    N slices is N full-plane ``pad`` + ``add`` ops, O(leaves · plane) work
+    measured 7–50× slower than this chain at production leaf counts; and
+    the natural O(plane) alternative (one zero-gap ``concatenate`` per
+    bucket) both lowers poorly on CPU XLA (per-operand overhead, measured
+    ~20× slower than the DUS chain) and walks into the jax-0.4.x SPMD
+    partially-sharded-concat miscompile the pack docstring pins. Leaf
+    cotangent *values* are placed verbatim with zero padding, so the
+    gradient plane is bitwise identical to packing the gradient pytree.
+    """
+    return _read_windows(tuple(indices), packed.layout, packed.lead_shape, packed.buffers)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _read_windows(indices, layout: Layout, lead_shape, buffers):
+    packed = Packed(buffers, layout)
+    return tuple(view_leaf(packed, i) for i in indices)
+
+
+def _read_windows_fwd(indices, layout, lead_shape, buffers):
+    return _read_windows(indices, layout, lead_shape, buffers), None
+
+
+def _read_windows_bwd(indices, layout, lead_shape, _res, cts):
+    lead_shape = tuple(lead_shape)
+    # mirror pack()'s index-dtype choice: int32 until a bucket outgrows it
+    int32_max = jnp.iinfo(jnp.int32).max
+    idx_dtype = jnp.int64 if max(layout.bucket_sizes, default=0) > int32_max else jnp.int32
+    zero_idx = (jnp.zeros((), idx_dtype),) * len(lead_shape)
+    bufs = [
+        jnp.zeros(lead_shape + (n,), jnp.dtype(d))
+        for n, d in zip(layout.bucket_sizes, layout.bucket_dtypes)
+    ]
+    for i, ct in zip(indices, cts):
+        slot = layout.slots[i]
+        flat = jnp.reshape(ct, lead_shape + (slot.size,)).astype(bufs[slot.bucket].dtype)
+        bufs[slot.bucket] = jax.lax.dynamic_update_slice(
+            bufs[slot.bucket], flat, zero_idx + (jnp.asarray(slot.offset, idx_dtype),)
+        )
+    return (tuple(bufs),)
+
+
+_read_windows.defvjp(_read_windows_fwd, _read_windows_bwd)
+
+
+@jax.tree_util.register_pytree_node_class
+class ParamView:
+    """Lazy, dict-like, path-keyed view of a :class:`Packed` plane.
+
+    Model code consumes parameters through ``view[key]`` / ``view.get`` /
+    ``key in view`` (nested or ``"a/b/c"`` slash paths) exactly as it would
+    a nested param dict, without ever importing :class:`Layout`: a leaf
+    access materializes one :func:`view_leaf` window (a static slice XLA
+    fuses into the consumer), a subtree access returns a nested view.
+    Because the windows are slices of the plane buffers, differentiating a
+    loss written against the view **with the plane as the primal** yields
+    flat per-bucket cotangents directly — the gradient never exists as a
+    pytree, so there is no per-leaf ``pack(grads)`` scatter chain.
+
+    Registered as a pytree (flattening materializes the subtree's windows
+    in layout order), so a view works as ``lax.scan`` xs: a stacked-layer
+    subtree (leaves with a leading layer dim, the transformer's
+    scan-over-blocks body) flattens to its ``(n, ...)`` windows, the scan
+    slices them per iteration and rebuilds a *concrete* view (backed by the
+    sliced arrays rather than the plane) with identical access semantics.
+    """
+
+    __slots__ = ("_packed", "_node", "_path")
+
+    def __init__(self, packed: Optional[Packed] = None, _node=None, _path: str = ""):
+        if _node is None:
+            if packed is None:
+                raise ValueError("ParamView needs a Packed plane (or an explicit node)")
+            # lazy mode: the node tree holds leaf *indices* into the layout
+            _node = jax.tree_util.tree_unflatten(
+                packed.layout.treedef, list(range(packed.layout.num_leaves))
+            )
+        self._packed = packed
+        self._node = _node
+        self._path = _path
+
+    # -- dict protocol ------------------------------------------------------
+    def _leaf(self, node):
+        if self._packed is not None:  # lazy: node is a slot index
+            return read_windows(self._packed, (node,))[0]
+        return node  # concrete: node is the materialized array
+
+    def __getitem__(self, key):
+        node, path = self._node, self._path
+        for part in str(key).split("/"):
+            if not (isinstance(node, dict) and part in node):
+                raise KeyError(f"{path + '/' + part if path else part}")
+            node = node[part]
+            path = f"{path}/{part}" if path else part
+        if isinstance(node, dict):
+            return ParamView(self._packed, _node=node, _path=path)
+        return self._leaf(node)
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __contains__(self, key) -> bool:
+        node = self._node
+        for part in str(key).split("/"):
+            if not (isinstance(node, dict) and part in node):
+                return False
+            node = node[part]
+        return True
+
+    def keys(self):
+        return self._node.keys()
+
+    def __iter__(self):
+        return iter(self._node)
+
+    def __len__(self) -> int:
+        return len(self._node)
+
+    def items(self):
+        return ((k, self[k]) for k in self._node)
+
+    def __repr__(self):
+        mode = "plane" if self._packed is not None else "concrete"
+        return f"ParamView({mode}, path={self._path or '/'!r}, keys={sorted(self._node)})"
+
+    def materialize(self) -> "ParamView":
+        """Concrete view of this subtree: every window read through ONE
+        :func:`read_windows` site. The round engine materializes the
+        worker-stacked view *before* vmapping the per-worker loss so the
+        read's DUS-chain transpose sees the worker axis as a plain lead
+        dim — under vmap the DUS batching rule degrades to select/iota
+        masked writes (measured ~2× slower end-to-end).
+
+        Differentiated code that touches many leaves should go through this
+        (or through any whole-subtree flatten, e.g. ``lax.scan`` xs): each
+        *lazy* leaf access is its own ``read_windows`` site, and every site
+        contributes a full-plane cotangent that JAX then sums — fine for
+        the handful of top-level reads a model makes (embeddings, norms,
+        head), O(accesses · plane) if a training loss reads hundreds of
+        leaves one by one."""
+        leaves, aux = self.tree_flatten()
+        return ParamView.tree_unflatten(aux, leaves)
+
+    # -- pytree protocol (scan xs / tree.map / checkpointing) ---------------
+    def tree_flatten(self):
+        nodes, subdef = jax.tree_util.tree_flatten(self._node)
+        if self._packed is not None:
+            # one read_windows site for the whole subtree: its backward
+            # assembles the bucket cotangents in a single pass
+            return list(read_windows(self._packed, tuple(nodes))), (subdef, self._path)
+        return nodes, (subdef, self._path)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        subdef, path = aux
+        return cls(None, _node=jax.tree_util.tree_unflatten(subdef, list(leaves)), _path=path)

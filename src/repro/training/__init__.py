@@ -6,7 +6,7 @@
 through :class:`repro.api.Experiment` instead of wiring these directly.
 """
 from repro.training.train_loop import make_round_step, make_train_fn, stack_round_batches
-from repro.training.train_state import TrainState, consensus_params, make_train_state, worker_params
+from repro.training.train_state import TrainState, consensus_params, make_train_state, params_view, worker_params
 
 __all__ = [
     "TrainState",
@@ -14,6 +14,7 @@ __all__ = [
     "make_round_step",
     "make_train_fn",
     "make_train_state",
+    "params_view",
     "stack_round_batches",
     "worker_params",
 ]

@@ -13,24 +13,33 @@ Packed strategies (``AlgoConfig.packed``, the default) override
 — anchor-shaped state and inflight slots are then flat
 :class:`repro.parallel.packing.Packed` buffers rather than pytrees.
 
-The τ *local steps* run packed too (when the optimizer is packed-capable):
-the scan carries the *packed* parameter plane — packed once at round start,
-materialized as a pytree view only where the model's forward pass needs
-leaves (an ``unpack`` whose slices XLA fuses into the leaf consumers) —
-gradients are flattened onto the plane once per step, the gradient-space
-hook runs as ``transform_grads_packed`` (one collective per dtype bucket
-for sync-SGD; PowerSGD's elementwise error feedback per-bucket, with only
-its inherently per-leaf work — rank-r factor math and the small
-uncompressed-leaf all-reduces — left per-leaf), the optimizer update is one
-fused
-``kernels/opt_step`` launch per bucket against flat optimizer-state buffers
-carried in ``TrainState.opt``, and mid-round consumers (DaSGD) rebase the
-plane in place via ``local_post_update_packed``. Per-leaf dispatch inside a
-local step is thereby O(dtype buckets), not O(leaves); the per-leaf path
-remains intact as the bit-exact oracle (``packed=False``). Gradient
-clipping, when enabled, stays per-leaf in both paths (it is O(leaves)
-*scalar* reductions feeding one global scale — cheap, and keeping it
-shared preserves the bitwise pin).
+Plane-resident training (packed strategy + packed-capable optimizer): the
+packed parameter plane is the *canonical* representation end-to-end.
+``TrainState.x`` stores the worker-stacked plane across rounds, the τ-step
+scan carries it, and the loss is differentiated **with the plane buffers as
+the primal argument** — the model reads parameters through a
+:class:`repro.parallel.packing.ParamView` (lazy ``view_leaf`` windows whose
+slices XLA fuses into the leaf consumers), so gradients arrive as one flat
+cotangent buffer per dtype bucket. The engine itself never touches a
+parameter pytree: the per-microstep ``pack(grads)`` call is gone (the one
+plane build per step is the window read's AD transpose, emitted by the
+packing layer — see ``read_windows``), there is no per-round pack/unpack
+seam (``boundary_round`` consumes and returns the plane), and the
+gradient hook runs as ``transform_grads_packed`` (one collective per dtype
+bucket for sync-SGD; PowerSGD's elementwise error feedback per-bucket, with
+only its inherently per-leaf rank-r factor math left per-leaf), the
+optimizer update is one fused ``kernels/opt_step`` launch per bucket
+against flat optimizer-state buffers carried in ``TrainState.opt``, and
+mid-round consumers (DaSGD) rebase the plane in place via
+``local_post_update_packed``. The per-leaf path remains intact as the
+bit-exact oracle (``packed=False``), pinned by tests/test_packed_optim.py.
+
+Gradient clipping follows the same split: by default the plane-resident
+step computes the global norm with the per-leaf summation order (window
+reads off the plane — bitwise-identical to ``clip_by_global_norm``, keeping
+the golden pin); ``AlgoConfig.packed_clip`` opts into per-bucket partial
+square-sums feeding the one global scale (O(buckets) reductions, a
+different f32 summation order, ≤ a few ulps apart).
 
 Because launch and consume are distinct phases separated by τ local steps,
 the anchor collective's consumer lies a full round downstream when several
@@ -56,8 +65,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.strategy import as_strategy
-from repro.optim.optimizers import Optimizer, clip_by_global_norm, packed_capable
-from repro.parallel.packing import pack, unpack
+from repro.optim.optimizers import (
+    Optimizer,
+    clip_by_global_norm,
+    clip_packed_by_global_norm,
+    packed_capable,
+)
+from repro.parallel.packing import Packed, ParamView, pack
 from repro.training.train_state import TrainState
 
 
@@ -71,20 +85,39 @@ def make_round_step(
     microbatch: Optional[int] = None,
 ):
     strategy = as_strategy(strategy)
-    grad_fn = jax.grad(loss_fn, has_aux=True)
-    # packed local step: grads/params ride the flat plane through the
-    # gradient hook + fused optimizer launch; opt state stays packed in the
-    # scan carry (must match make_train_state's choice of opt layout)
+    # plane-resident local step: the scan carries the packed plane, the loss
+    # is differentiated with the plane as the primal (params reach the model
+    # through a ParamView), and grads flow as flat per-bucket cotangents
+    # straight into the packed gradient hook + fused optimizer launch
     packed_step = strategy.packed and packed_capable(optimizer)
+    packed_clip = packed_step and bool(getattr(strategy.cfg, "packed_clip", False))
+    if packed_step:
+        # differentiate with the STACKED plane as the primal: materialize
+        # the worker-stacked view once (a single read_windows site), vmap
+        # the per-worker loss over it, and take the gradient of the summed
+        # losses — each worker's loss cotangent seed is the same 1.0 the
+        # vmapped per-worker grad uses, so the stacked cotangent plane is
+        # the per-worker grads stacked, bitwise. Keeping the window read
+        # (and its DUS-chain transpose) OUTSIDE the vmap matters: the DUS
+        # batching rule lowers to select/iota masked writes.
+        def _summed_loss(px, micro):
+            view = ParamView(px).materialize()
+            losses, metrics = jax.vmap(loss_fn)(view, micro)
+            return jnp.sum(losses), metrics
+
+        worker_grads = jax.grad(_summed_loss, has_aux=True)
+    else:
+        worker_grads = jax.vmap(jax.grad(loss_fn, has_aux=True))
 
     def stacked_grads(x, micro):
         """Per-worker grads, with optional gradient accumulation over
         microbatches (large per-worker batches on big-vocab/MoE archs).
-        Metrics are averaged across microbatches."""
+        Metrics are averaged across microbatches. ``x`` is the per-mode
+        primal — the stacked pytree, or the stacked plane."""
         leaves = jax.tree.leaves(micro)
         b = leaves[0].shape[1]
         if microbatch is None or b <= microbatch:
-            return jax.vmap(grad_fn)(x, micro)
+            return worker_grads(x, micro)
         k = b // microbatch
         split = jax.tree.map(
             lambda t: t.reshape((t.shape[0], k, microbatch) + t.shape[2:]).swapaxes(0, 1), micro
@@ -92,13 +125,13 @@ def make_round_step(
 
         def acc(carry, mb):
             g_acc, m_acc = carry
-            g, mets = jax.vmap(grad_fn)(x, mb)
+            g, mets = worker_grads(x, mb)
             g_acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), g_acc, g)
             m_acc = jax.tree.map(lambda a, mm: a + mm.astype(jnp.float32), m_acc, mets)
             return (g_acc, m_acc), None
 
         g0 = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), x)
-        m_sds = jax.eval_shape(lambda mb: jax.vmap(grad_fn)(x, mb)[1], jax.tree.map(lambda t: t[0], split))
+        m_sds = jax.eval_shape(lambda mb: worker_grads(x, mb)[1], jax.tree.map(lambda t: t[0], split))
         m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), m_sds)
         (g_sum, m_sum), _ = jax.lax.scan(acc, (g0, m0), split)
         grads = jax.tree.map(lambda g, xx: (g / k).astype(xx.dtype), g_sum, x)
@@ -110,17 +143,20 @@ def make_round_step(
 
         def local_step(carry, scanned):
             micro, k_in_round = scanned
-            x, opt, vars, step = carry
-            if packed_step:  # the carry is the plane; leaves are a view
-                px, x = x, unpack(x)
+            x, opt, vars, step = carry  # x: the packed plane when plane-resident
             lr = schedule(step)
             grads, metrics = stacked_grads(x, micro)
             if grad_clip > 0.0:
-                grads = jax.vmap(lambda g: clip_by_global_norm(g, grad_clip)[0])(grads)
+                if packed_step:
+                    grads = jax.vmap(
+                        lambda g: clip_packed_by_global_norm(g, grad_clip, per_bucket=packed_clip)[0]
+                    )(grads)
+                else:
+                    grads = jax.vmap(lambda g: clip_by_global_norm(g, grad_clip)[0])(grads)
             if packed_step:
-                pg, vars = strategy.transform_grads_packed(pack(grads, layout=px.layout, lead=1), vars)
-                opt, px = optimizer.step_packed(opt, px, pg, lr)
-                x = strategy.local_post_update_packed(px, vars, inflight, k_in_round)
+                pg, vars = strategy.transform_grads_packed(grads, vars)
+                opt, x = optimizer.step_packed(opt, x, pg, lr)
+                x = strategy.local_post_update_packed(x, vars, inflight, k_in_round)
             else:
                 grads, vars = strategy.transform_grads(grads, vars)
                 opt, x = jax.vmap(lambda o, xi, gi: optimizer.step(o, xi, gi, lr))(opt, x, grads)
@@ -129,7 +165,11 @@ def make_round_step(
             return (x, opt, vars, step + 1), metrics
 
         tau = jax.tree.leaves(round_batch)[0].shape[0]
-        x0 = pack(state.x, lead=1) if packed_step else state.x
+        x0 = state.x
+        if packed_step and not isinstance(x0, Packed):
+            # migration path for states built (or restored) per-leaf: the
+            # first round adopts the plane; from then on x stays resident
+            x0 = pack(x0, lead=1)
         (x, opt, vars, step), metrics = jax.lax.scan(
             local_step,
             (x0, state.opt, state.vars, state.step),
@@ -137,10 +177,9 @@ def make_round_step(
         )
         # apply + launch in one hook: per-leaf strategies run the two phases
         # back to back; packed strategies fuse them over the flat parameter
-        # plane (one collective + one kernel launch per boundary). With the
-        # packed local step, x is still the plane here — boundary_round
-        # consumes it directly (no re-pack at the scan→boundary seam) and
-        # always returns the pytree view.
+        # plane (one collective + one kernel launch per boundary) and return
+        # the plane itself — x never leaves the packed representation, so
+        # there is no pack/unpack seam at round granularity.
         x, vars, inflight = strategy.boundary_round(x, vars, inflight, axes_tree)
         new_state = TrainState(x=x, opt=opt, vars=vars, step=step, inflight=inflight)
         return new_state, metrics
@@ -161,8 +200,14 @@ def make_train_fn(
 ):
     """jit'd multi-round step: (state, batches[(R, τ, m, b, ...)]) -> (state, metrics)."""
     round_step = make_round_step(loss_fn, optimizer, strategy, schedule, axes_tree, grad_clip, microbatch)
+    packed_step = as_strategy(strategy).packed and packed_capable(optimizer)
 
     def many(state, batches):
+        if packed_step and not isinstance(state.x, Packed):
+            # migrate a per-leaf state BEFORE the rounds scan: round_step's
+            # own coercion changes the TrainState structure, which a
+            # multi-round lax.scan carry cannot absorb mid-body
+            state = state._replace(x=pack(state.x, lead=1))
         if rounds_per_call == 1:
             rb = jax.tree.map(lambda t: t[0], batches)
             return round_step(state, rb)

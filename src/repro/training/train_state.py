@@ -8,8 +8,11 @@ mean for Overlap-Local-SGD). Strategies without an overlapped collective
 Under the packed boundary (``AlgoConfig.packed``, the default) the inflight
 slot and anchor-shaped strategy vars are :class:`repro.parallel.packing.Packed`
 flat buffers — they live packed for their whole launch→consume life, so no
-repacking happens between boundaries. ``repro.parallel.packing.unpack``
-recovers the pytree view when needed.
+repacking happens between boundaries. With a packed-capable optimizer the
+state is *plane-resident*: ``x`` itself is the worker-stacked packed plane
+for its entire lifetime (packed once at construction; round boundaries
+consume and return the plane). :func:`params_view` recovers the pytree view
+when host-side code needs leaves.
 
 The local optimizer state follows the same rule: with a packed strategy and
 a packed-capable optimizer, ``opt`` is a ``PackedSGDState``/``PackedAdamState``
@@ -27,11 +30,13 @@ import jax.numpy as jnp
 
 from repro.core.strategy import AlgoVars, CommStrategy, as_strategy
 from repro.optim.optimizers import Optimizer, packed_capable
-from repro.parallel.packing import pack
+from repro.parallel.packing import Packed, pack, unpack
 
 
 class TrainState(NamedTuple):
-    x: Any  # stacked local params (m, ...)
+    x: Any  # stacked local params: (m, ...) pytree, or the worker-stacked
+    #         Packed plane when training is plane-resident (packed strategy
+    #         + packed-capable optimizer)
     opt: Any  # stacked local optimizer state (m, ...)
     vars: AlgoVars  # strategy variables (anchor z, momentum v, extras)
     step: jnp.ndarray  # global local-step counter
@@ -45,11 +50,18 @@ def make_train_state(
     algorithm,  # CommStrategy, or a legacy Algorithm (wrapped automatically)
     axes_tree: Any = None,
 ) -> TrainState:
-    """All workers start at the same point (Theorem 1's initialization)."""
+    """All workers start at the same point (Theorem 1's initialization).
+
+    With a packed strategy and a packed-capable optimizer the state is
+    *plane-resident*: ``x`` is stored as the worker-stacked ``Packed`` plane
+    (packed exactly once, here) and every consumer — local steps, boundary
+    phases, strategy init hooks — works on the plane directly.
+    """
     strategy = as_strategy(algorithm)
     x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
     if strategy.packed and packed_capable(optimizer):
-        opt = optimizer.init_packed(pack(x, lead=1))
+        x = pack(x, lead=1)
+        opt = optimizer.init_packed(x)
     else:
         opt = jax.vmap(optimizer.init)(x)
     vars = strategy.init_vars(x, axes_tree)
@@ -57,11 +69,16 @@ def make_train_state(
     return TrainState(x=x, opt=opt, vars=vars, step=jnp.zeros((), jnp.int32), inflight=inflight)
 
 
+def params_view(state: TrainState):
+    """The stacked params as a pytree, whatever representation ``x`` is in."""
+    return unpack(state.x) if isinstance(state.x, Packed) else state.x
+
+
 def worker_params(state: TrainState, i: int = 0):
-    return jax.tree.map(lambda t: t[i], state.x)
+    return jax.tree.map(lambda t: t[i], params_view(state))
 
 
 def consensus_params(state: TrainState):
     """The virtual/averaged model used for evaluation (paper's y_k): the
     mean of the local models — anchor or not, packed or per-leaf."""
-    return jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0), state.x)
+    return jax.tree.map(lambda t: jnp.mean(t.astype(jnp.float32), axis=0), params_view(state))

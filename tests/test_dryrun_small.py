@@ -134,6 +134,8 @@ with mesh_context(mesh, rules):
     strat = make_strategy(acfg)
     state_sds, state_sh, axes = specs.train_state_specs(cfg, plan, strat, opt, mesh, rules)
     assert isinstance(state_sds.inflight, Packed) and isinstance(state_sh.inflight, Packed)
+    # plane-resident state: x itself is the worker-stacked plane in the AOT specs
+    assert isinstance(state_sds.x, Packed) and isinstance(state_sh.x, Packed)
     batch_sds = specs.train_batch_specs(cfg, shape, plan, tau=2)
     batch_sh = specs.batch_shardings(batch_sds, mesh, rules)
     loss_fn = lambda p, b: T.lm_loss(cfg, p, b, remat=True)
@@ -161,7 +163,8 @@ with mesh_context(mesh, rules):
         state, ms = step(state, batch)
         assert np.isfinite(np.asarray(ms["loss"])).all()
         finals.append(state)
-for a, b in zip(jax.tree.leaves(finals[0].x), jax.tree.leaves(finals[1].x)):
+assert isinstance(finals[0].x, Packed) and not isinstance(finals[1].x, Packed)
+for a, b in zip(jax.tree.leaves(unpack(finals[0].x)), jax.tree.leaves(finals[1].x)):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-7, atol=2e-7)
 for a, b in zip(jax.tree.leaves(unpack(finals[0].inflight)), jax.tree.leaves(finals[1].inflight)):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-7, atol=2e-7)
@@ -200,6 +203,9 @@ with mesh_context(mesh, rules):
     state_sds, state_sh, axes = specs.train_state_specs(cfg, plan, strat, opt, mesh, rules)
     assert isinstance(state_sds.opt, PackedSGDState), type(state_sds.opt)
     assert isinstance(state_sh.opt.momentum, Packed)
+    assert isinstance(state_sds.x, Packed) and isinstance(state_sh.x, Packed)
+    x_specs = {sh.spec for sh in jax.tree.leaves(state_sh.x)}
+    assert any("worker" in str(sp) and "fsdp" in str(sp) for sp in x_specs), x_specs
     sh_specs = {s.spec for s in jax.tree.leaves(state_sh.opt)}
     assert any("worker" in str(sp) and "fsdp" in str(sp) for sp in sh_specs), sh_specs
     batch_sds = specs.train_batch_specs(cfg, shape, plan, tau=2)
@@ -231,7 +237,8 @@ with mesh_context(mesh, rules):
         assert np.isfinite(np.asarray(ms["loss"])).all()
         finals.append(state)
 assert isinstance(finals[0].opt, PackedSGDState) and not isinstance(finals[1].opt, PackedSGDState)
-for a, b in zip(jax.tree.leaves(finals[0].x), jax.tree.leaves(finals[1].x)):
+assert isinstance(finals[0].x, Packed) and not isinstance(finals[1].x, Packed)
+for a, b in zip(jax.tree.leaves(unpack(finals[0].x)), jax.tree.leaves(finals[1].x)):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=5e-7)
 for a, b in zip(jax.tree.leaves(unpack(finals[0].opt.momentum)), jax.tree.leaves(finals[1].opt.momentum)):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=5e-7)

@@ -1,18 +1,24 @@
-"""Packed local step: golden differential suite + launch-budget regression.
+"""Plane-resident training: golden differential suite + budget regressions.
 
-The packed parameter plane now covers the *entire* local step — flat
-optimizer state (``PackedSGDState``/``PackedAdamState``) carried in
-``TrainState.opt``, fused ``kernels/opt_step`` updates, and packed
-``transform_grads``/``local_post_update`` hooks. This suite pins it three
+The packed parameter plane is the canonical representation end-to-end:
+``TrainState.x`` stores the worker-stacked ``Packed`` plane across rounds,
+the loss is differentiated with the plane as the primal (params reach the
+model through a ``ParamView``), flat optimizer state
+(``PackedSGDState``/``PackedAdamState``) rides in ``TrainState.opt``, and
+``boundary_round`` consumes and returns the plane. This suite pins it four
 ways:
 
-1. differential: packed vs per-leaf full rounds are bit-exact (≤1-ulp for
-   f32 AdamW, whose division/sqrt chain XLA may FMA-contract differently)
-   across all optimizers × {f32, mixed-bf16 params} × all 11 strategy
-   variants, including mid-round DaSGD consume and LOSCAR error feedback;
+1. differential: plane-resident vs per-leaf full rounds are bit-exact
+   (≤1-ulp for f32 AdamW, whose division/sqrt chain XLA may FMA-contract
+   differently) across all optimizers × {f32, mixed-bf16 params} × all 11
+   strategy variants, including mid-round DaSGD consume and LOSCAR error
+   feedback — and with gradient clipping on (bitwise by default;
+   ``packed_clip`` per-bucket norms within a few ulps);
 2. budget: jaxpr launch/collective counts for a full τ-step round stay at
-   the packed budget *regardless of leaf count*, so later PRs cannot
-   silently reintroduce per-leaf dispatch;
+   the packed budget *regardless of leaf count*, and the local-step scan
+   body contains exactly ONE plane build per step — the AD transpose of the
+   ParamView window read — with no pack/unpack round-trip of the carried x
+   (slice and dynamic_update_slice counts are pinned per leaf);
 3. numerics: packed bf16-param AdamW against an f64 NumPy reference, and
    the Pallas kernels (interpret mode) against the shared jnp formulas.
 """
@@ -28,8 +34,17 @@ from repro.core import make_strategy
 from repro.kernels import flags
 from repro.kernels.opt_step import ops as opt_ops
 from repro.kernels.opt_step import ref as opt_ref
-from repro.optim import PackedAdamState, PackedSGDState, adamw, packed_capable, schedules, sgd
-from repro.parallel.packing import pack, unpack
+from repro.optim import (
+    PackedAdamState,
+    PackedSGDState,
+    adamw,
+    clip_by_global_norm,
+    clip_packed_by_global_norm,
+    packed_capable,
+    schedules,
+    sgd,
+)
+from repro.parallel.packing import Packed, pack, unpack
 from repro.training import make_round_step, make_train_state
 
 M = 4
@@ -59,16 +74,18 @@ def _loss(params, batch):
     return loss, dict(loss=loss)
 
 
-def _run_pair(cfg: AlgoConfig, optimizer, params, rounds=2, lr=0.03, seed=1):
-    """Run packed and per-leaf configurations on identical batches; return
-    the two final TrainStates."""
+def _run_pair(cfg: AlgoConfig, optimizer, params, rounds=2, lr=0.03, seed=1, grad_clip=0.0):
+    """Run packed (plane-resident) and per-leaf configurations on identical
+    batches; return the two final TrainStates."""
     n_flat = sum(l.size for l in jax.tree.leaves(params))
     states, steps, strats = [], [], []
     for c in (cfg, dataclasses.replace(cfg, packed=False)):
         strat = make_strategy(c)
         strats.append(strat)
         states.append(make_train_state(params, M, optimizer, strat, None))
-        steps.append(jax.jit(make_round_step(_loss, optimizer, strat, schedules.constant(lr), None)))
+        steps.append(
+            jax.jit(make_round_step(_loss, optimizer, strat, schedules.constant(lr), None, grad_clip=grad_clip))
+        )
     assert strats[0].packed and not strats[1].packed
     rng = np.random.default_rng(seed)
     for _ in range(rounds):
@@ -120,9 +137,11 @@ def test_packed_local_step_matches_perleaf(name, kw, opt_name, bf16, rng):
     optimizer = OPTIMIZERS[opt_name]()
     s_p, s_r = _run_pair(cfg, optimizer, _params(rng, bf16))
 
-    # the packed run must actually have used the packed opt-state layout
+    # the packed run must actually be plane-resident: x IS the plane across
+    # rounds, and the opt state uses the packed layout
+    assert isinstance(s_p.x, Packed)
     assert isinstance(s_p.opt, (PackedSGDState, PackedAdamState))
-    _assert_tree(s_p.x, s_r.x, opt_name, f"{name}.x")
+    _assert_tree(_unp(s_p.x), s_r.x, opt_name, f"{name}.x")
 
     # optimizer state agrees through the pytree view (per-leaf Adam carries
     # one count per worker; packed carries the single shared scalar)
@@ -235,6 +254,120 @@ def test_round_launch_budget_two_buckets(rng):
     jaxpr = _round_jaxpr(params, "sgd", tau=2)
     n = _count_primitives(jaxpr.jaxpr, ["pallas_call"])["pallas_call"]
     assert n == 2 * 2, n  # 2 buckets × (opt step + boundary)
+
+
+def _scan_bodies(jaxpr):
+    """All scan-body jaxprs found at any depth (excluding pallas bodies)."""
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        if eqn.primitive.name == "scan":
+            out.append(eqn.params["jaxpr"].jaxpr)
+        for v in eqn.params.values():
+            sub = None
+            if isinstance(v, jax.extend.core.ClosedJaxpr):
+                sub = v.jaxpr
+            elif hasattr(v, "eqns"):
+                sub = v
+            if sub is not None:
+                out.extend(_scan_bodies(sub))
+    return out
+
+
+@pytest.mark.parametrize("opt_name", sorted(OPTIMIZERS))
+def test_local_step_scan_body_single_plane_build(rng, opt_name):
+    """ISSUE acceptance (plane-resident step): the τ-step scan body builds
+    the gradient plane exactly ONCE per step — the DUS scatter emitted by
+    the ParamView window read's custom VJP — and never round-trips the
+    carried x through a pytree: slice count == leaf count (the forward
+    window reads) and dynamic_update_slice count == leaf count (the AD
+    scatter), with no second unpack/pack seam. Checked at two leaf counts
+    so per-leaf regressions scale visibly."""
+    for n_mats in (4, 12):
+        params = _wide_params(rng, n_mats)
+        n_leaves = len(jax.tree.leaves(params))
+        jaxpr = _round_jaxpr(params, opt_name, tau=3)
+        bodies = _scan_bodies(jaxpr.jaxpr)
+        assert len(bodies) == 1, f"expected exactly the τ-step scan, got {len(bodies)}"
+        counts = _count_primitives(bodies[0], ["dynamic_update_slice", "slice"])
+        assert counts["dynamic_update_slice"] == n_leaves, (n_leaves, counts)
+        # slices: n forward window reads + n from the harness loss's own
+        # concatenate transpose (+ a few jax bookkeeping slices) — a second
+        # unpack of the carried x would add another n
+        assert counts["slice"] <= 2 * n_leaves + 4, (n_leaves, counts)
+
+
+def test_whole_round_has_no_seam_dus(rng):
+    """The round program outside the scan contains ZERO dynamic_update_slice
+    ops: the boundary consumes and returns the plane (no re-pack at the
+    scan→boundary seam), and state construction happens once in
+    make_train_state, not per round."""
+    params = _wide_params(rng, 6)
+    n_leaves = len(jax.tree.leaves(params))
+    jaxpr = _round_jaxpr(params, "sgd", tau=2)
+    total = _count_primitives(jaxpr.jaxpr, ["dynamic_update_slice"])["dynamic_update_slice"]
+    in_scan = sum(
+        _count_primitives(b, ["dynamic_update_slice"])["dynamic_update_slice"]
+        for b in _scan_bodies(jaxpr.jaxpr)
+    )
+    assert in_scan == n_leaves
+    assert total == in_scan, f"{total - in_scan} DUS ops outside the scan body (seam re-pack?)"
+
+
+# ---------------------------------------------------------------------------
+# packed gradient clipping (satellite: AlgoConfig.packed_clip)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bf16", [False, True], ids=["f32", "bf16"])
+def test_grad_clip_plane_resident_bitwise(rng, bf16):
+    """Default clipping on the plane-resident step walks the layout slots in
+    per-leaf order — bitwise identical to the per-leaf oracle even though
+    the norm is computed off the plane."""
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=3, alpha=0.6, anchor_beta=0.7, packed=True)
+    opt = OPTIMIZERS["sgd"]()
+    # clip must actually bind: tiny max_norm so the scale is < 1 every step
+    s_p, s_r = _run_pair(cfg, opt, _params(rng, bf16), grad_clip=0.5)
+    _assert_tree(_unp(s_p.x), s_r.x, "sgd", "clip.x")
+
+
+def test_packed_clip_per_bucket_few_ulp(rng):
+    """``packed_clip=True`` swaps the per-leaf norm walk for per-bucket
+    partial square-sums (O(buckets) reductions): same clip within a few
+    ulps (different f32 summation order), hence opt-in."""
+    cfg = AlgoConfig(
+        name="overlap_local_sgd", tau=3, alpha=0.6, anchor_beta=0.7, packed=True, packed_clip=True
+    )
+    opt = OPTIMIZERS["sgd"]()
+    s_p, s_r = _run_pair(cfg, opt, _params(rng, bf16=True), grad_clip=0.5)
+    for a, b in zip(jax.tree.leaves(_unp(s_p.x)), jax.tree.leaves(s_r.x)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_clip_packed_matches_tree_clip(rng):
+    """Unit differential: clip_packed_by_global_norm == clip_by_global_norm
+    — bitwise with the per-leaf walk, ≤ few ulp with per-bucket sums."""
+    params = _params(rng, bf16=True)
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (M,) + (1,) * t.ndim), params)
+    x = jax.tree.map(
+        lambda t: t + jnp.arange(M, dtype=jnp.float32).reshape((M,) + (1,) * (t.ndim - 1)).astype(t.dtype), x
+    )
+    px = pack(x, lead=1)
+    for max_norm in (0.5, 1e6):  # binding and non-binding
+        ref, ref_norm = jax.vmap(lambda g: clip_by_global_norm(g, max_norm))(x)
+        got, norm = jax.vmap(lambda g: clip_packed_by_global_norm(g, max_norm))(px)
+        np.testing.assert_array_equal(np.asarray(norm), np.asarray(ref_norm))
+        for a, b in zip(jax.tree.leaves(unpack(got)), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        got_b, norm_b = jax.vmap(lambda g: clip_packed_by_global_norm(g, max_norm, per_bucket=True))(px)
+        np.testing.assert_allclose(np.asarray(norm_b), np.asarray(ref_norm), rtol=3e-7, atol=0)
+        for a, b in zip(jax.tree.leaves(unpack(got_b)), jax.tree.leaves(ref)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-6, atol=1e-7
+            )
 
 
 def test_sync_sgd_collective_budget(rng):

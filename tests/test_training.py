@@ -92,3 +92,60 @@ def test_consensus_distance_grows_then_resets_with_pullback(rng):
     x = np.concatenate([np.asarray(l).reshape(M, -1) for l in jax.tree.leaves(state.x)], axis=1)
     spread = np.abs(x - x.mean(0, keepdims=True)).max()
     assert spread < 1e-6  # alpha=1: all equal after pullback
+
+
+def test_microbatch_accumulation_plane_resident(rng):
+    """Gradient accumulation over the plane-resident step (flat f32
+    accumulator buffers in the scan carry) matches the one-big-batch round
+    — same pin as the per-leaf test above, on the packed path."""
+    from repro.core import make_strategy
+    from repro.parallel.packing import Packed, unpack
+
+    def setup(microbatch):
+        params, axes = init_mlp(jax.random.PRNGKey(0), 8, 4)
+        strat = make_strategy(AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.5, anchor_beta=0.0, packed=True))
+        opt = sgd(momentum=0.0, nesterov=False)
+        state = make_train_state(params, M, opt, strat, axes)
+        step = make_round_step(mlp_loss, opt, strat, schedules.constant(0.05), axes, microbatch=microbatch)
+        return state, jax.jit(step)
+
+    batch = _batch(rng, 2, 16)
+    s_full, step_full = setup(None)
+    s_micro, step_micro = setup(4)
+    s_full, ms_full = step_full(s_full, batch)
+    s_micro, ms_micro = step_micro(s_micro, batch)
+    assert isinstance(s_full.x, Packed) and isinstance(s_micro.x, Packed)
+    for a, b in zip(jax.tree.leaves(unpack(s_full.x)), jax.tree.leaves(unpack(s_micro.x))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(ms_micro["loss"]), np.asarray(ms_full["loss"]), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_train_fn_migrates_perleaf_state_before_rounds_scan(rng):
+    """A PR3-era state (pytree x, packed opt) fed to make_train_fn with
+    rounds_per_call > 1 must migrate to the plane BEFORE the rounds scan —
+    packing inside round_step would change the scan carry structure."""
+    from repro.core import make_strategy
+    from repro.parallel.packing import Packed, pack
+    from repro.training import TrainState, make_train_fn
+
+    params, axes = init_mlp(jax.random.PRNGKey(0), 8, 4)
+    strat = make_strategy(AlgoConfig(name="local_sgd", tau=2, packed=True))
+    opt = sgd(momentum=0.0)
+    state = make_train_state(params, M, opt, strat, axes)
+    assert isinstance(state.x, Packed)
+    # reconstruct the pre-plane layout: pytree x, packed everything else
+    legacy = TrainState(
+        x=jax.tree.map(lambda t: jnp.tile(t[None], (M,) + (1,) * t.ndim), params),
+        opt=state.opt, vars=state.vars, step=state.step, inflight=state.inflight,
+    )
+    fn = make_train_fn(mlp_loss, opt, strat, schedules.constant(0.05), axes, rounds_per_call=2, donate=False)
+    x = jnp.asarray(rng.normal(size=(2, 2, M, 8, 8)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 4, size=(2, 2, M, 8)), jnp.int32)
+    out, ms = fn(legacy, (x, y))
+    assert isinstance(out.x, Packed)
+    # and the migrated run matches starting from the plane-resident state
+    out2, _ = fn(state, (x, y))
+    for a, b in zip(jax.tree.leaves(out.x), jax.tree.leaves(out2.x)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
