@@ -93,6 +93,13 @@ def boundary_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: in
     # moves more than this (it re-reads x between sweeps)
     nbytes = (2 * m * n_elems + 4 * n_elems) * 4
 
+    # worker-stacked plane bytes of the timed x — the same quantity the
+    # dry-run records as plane.x_buffer_bytes, keying these rows against
+    # dry-run JSONs (EXPERIMENTS.md §Perf)
+    from repro.parallel.packing import pack
+
+    plane_bytes = jax.eval_shape(lambda t: pack(t, lead=1), x).nbytes
+
     rows = []
     us_by_mode = {}
     for packed in (True, False):
@@ -108,7 +115,8 @@ def boundary_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: in
             (
                 f"boundary/overlap_momentum_{mode}_{n_leaves}leaf",
                 us,
-                f"effective_gbps={nbytes/us/1e3:.1f} leaves={n_leaves} elems={n_elems} m={m}",
+                f"effective_gbps={nbytes/us/1e3:.1f} leaves={n_leaves} elems={n_elems} m={m} "
+                f"strategy={strat.name} plane_bytes={plane_bytes}",
             )
         )
     rows.append(

@@ -1,4 +1,4 @@
 """Public facade: config-driven training/evaluation/serving entrypoints."""
-from repro.api.experiment import ClassificationSpec, Experiment, FitResult, TokenStream
+from repro.api.experiment import ClassificationSpec, Experiment, FitResult, TokenStream, resolve_strategy
 
-__all__ = ["ClassificationSpec", "Experiment", "FitResult", "TokenStream"]
+__all__ = ["ClassificationSpec", "Experiment", "FitResult", "TokenStream", "resolve_strategy"]

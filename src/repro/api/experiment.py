@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import AlgoConfig, ModelConfig, OptimizerConfig, ParallelPlan, get_arch
-from repro.core.strategy import CommStrategy, as_strategy, make_strategy
+from repro.core.strategy import CommStrategy, resolve_strategy
 from repro.data.loaders import (
     ClassificationSplits,
     classification_batch_fn,
@@ -128,12 +128,7 @@ class Experiment:
     # -- construction -------------------------------------------------------
 
     def _resolve_strategy(self) -> CommStrategy:
-        s = self.strategy
-        if isinstance(s, str):
-            s = AlgoConfig(name=s)
-        if isinstance(s, AlgoConfig):
-            return make_strategy(s)
-        return as_strategy(s)
+        return resolve_strategy(self.strategy)
 
     def _resolve_optimizer(self) -> Tuple[Optimizer, Callable]:
         o = self.optimizer

@@ -5,20 +5,18 @@ Two API generations live here:
 * ``repro.core.strategy`` — the two-phase :class:`CommStrategy` protocol
   (``boundary_apply`` consumes last round's collective, ``boundary_launch``
   starts this round's; the launched value rides in ``TrainState.inflight``).
-  This is the current API; :func:`make_strategy` is the factory.
+  This is the current API; :func:`make_strategy` is the factory, and the
+  production surfaces (``repro.api.Experiment``, ``launch/dryrun.py``,
+  ``launch/costprobe.py``) resolve exclusively through it.
 * ``repro.core.algorithms`` — the legacy single-``boundary``-hook
-  ``Algorithm`` classes, kept as a deprecation shim and as the bit-exact
-  reference the golden equivalence tests compare against.
+  ``Algorithm`` classes. **Deprecated, oracle-only**: they remain solely as
+  the bit-exact reference semantics the golden equivalence tests compare
+  against. Importing any legacy name from ``repro.core`` emits a
+  ``DeprecationWarning`` (PEP 562 lazy export below), as does calling
+  :func:`make_algorithm` itself. No non-test production code imports them.
 """
-from repro.core.algorithms import (
-    Algorithm,
-    CoCoDSGD,
-    EASGD,
-    LocalSGD,
-    OverlapLocalSGD,
-    SyncSGD,
-    make_algorithm,
-)
+import warnings
+
 from repro.core.strategy import (
     AlgoVars,
     CommStrategy,
@@ -34,9 +32,43 @@ from repro.core.strategy import (
     STRATEGIES,
     as_strategy,
     make_strategy,
+    resolve_strategy,
     sparsify_topk,
 )
 from repro.core import mixing, runtime_model
+
+# Legacy names are served lazily so that merely importing repro.core never
+# touches the deprecated module, and pulling one of them out warns at the
+# import site (``from repro.core import make_algorithm`` → DeprecationWarning).
+_LEGACY_NAMES = (
+    "Algorithm",
+    "CoCoDSGD",
+    "EASGD",
+    "LocalSGD",
+    "OverlapLocalSGD",
+    "SyncSGD",
+    "make_algorithm",
+)
+
+
+def __getattr__(name):
+    if name in _LEGACY_NAMES:
+        warnings.warn(
+            f"repro.core.{name} is the deprecated single-hook Algorithm shim, kept only "
+            "as the bit-exact oracle for the golden equivalence tests; use "
+            "repro.core.make_strategy / the two-phase CommStrategy protocol instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.core import algorithms
+
+        return getattr(algorithms, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LEGACY_NAMES))
+
 
 __all__ = [
     "Algorithm",
@@ -61,6 +93,7 @@ __all__ = [
     "make_algorithm",
     "make_strategy",
     "mixing",
+    "resolve_strategy",
     "runtime_model",
     "sparsify_topk",
 ]

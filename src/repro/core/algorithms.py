@@ -21,6 +21,7 @@ sharded (worker+fsdp axes) and materialize only inside the pullback.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -191,9 +192,17 @@ class CoCoDSGD(Algorithm):
 
 
 def make_algorithm(cfg: AlgoConfig) -> Algorithm:
-    """Deprecated: use :func:`repro.core.strategy.make_strategy`, which also
-    covers the delayed-averaging and sparse-anchor strategies the legacy
-    single-hook API cannot express."""
+    """Deprecated (oracle-only): use :func:`repro.core.strategy.make_strategy`,
+    which also covers the delayed-averaging and sparse-anchor strategies the
+    legacy single-hook API cannot express. The objects built here remain the
+    bit-exact reference the golden equivalence tests pin the native
+    strategies against — that is their only supported use."""
+    warnings.warn(
+        "make_algorithm() builds the deprecated single-hook Algorithm shim (oracle-only); "
+        "use repro.core.make_strategy instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     table = {
         "overlap_local_sgd": OverlapLocalSGD,
         "local_sgd": LocalSGD,

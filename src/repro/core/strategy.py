@@ -903,3 +903,19 @@ def make_strategy(cfg: AlgoConfig) -> CommStrategy:
     if name not in STRATEGIES:
         raise ValueError(f"unknown strategy {cfg.name!r}; known: {sorted(STRATEGIES) + sorted(_ALIASES)}")
     return STRATEGIES[name](cfg)
+
+
+def resolve_strategy(strategy) -> CommStrategy:
+    """The one strategy-resolution chain: a name becomes an ``AlgoConfig``
+    (library defaults), an ``AlgoConfig`` goes through :func:`make_strategy`,
+    and instances (including legacy ``Algorithm`` objects, wrapped
+    transparently) pass through :func:`as_strategy`.
+    ``repro.api.Experiment`` (which re-exports this as the public surface),
+    the production dry-run (``launch/dryrun.py``) and the cost probes
+    (``launch/costprobe.py``) all lower through it, so the program the
+    dry-run cost-models is the program training runs."""
+    if isinstance(strategy, str):
+        strategy = AlgoConfig(name=strategy)
+    if isinstance(strategy, AlgoConfig):
+        return make_strategy(strategy)
+    return as_strategy(strategy)

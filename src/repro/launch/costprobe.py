@@ -28,7 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import ArchConfig, InputShape, ModelConfig, ParallelPlan
-from repro.core.algorithms import Algorithm
+from repro.core.strategy import CommStrategy, resolve_strategy
 from repro.kernels import flags as kflags
 from repro.launch import roofline as rl
 from repro.launch import specs
@@ -153,33 +153,24 @@ def probe_optimizer(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh, rules: dic
     return _cost(lowered)
 
 
-def probe_boundary(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh, rules: dict, algo: Algorithm, axes):
-    state_sds, _ = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
-    m = plan.workers
-    x_m = jax.tree.map(lambda t: jax.ShapeDtypeStruct((m,) + tuple(t.shape), t.dtype), state_sds)
-    x_sh = _shard_tree(mesh, rules, axes, x_m, prefix=("worker",))
-    anchor_sh = _shard_tree(mesh, rules, sh.anchor_axes(axes), state_sds)
-    from repro.core.algorithms import AlgoVars
-
-    if algo.needs_anchor:
-        vars_sds = AlgoVars(z=state_sds, v=state_sds if algo.name == "overlap_local_sgd" and algo.cfg.anchor_beta > 0 else None)
-        vars_sh = AlgoVars(z=anchor_sh, v=anchor_sh if vars_sds.v is not None else None)
-    elif algo.name == "cocod":
-        vars_sds = AlgoVars(extra=x_m)
-        vars_sh = AlgoVars(extra=x_sh)
-    else:
-        vars_sds = AlgoVars()
-        vars_sh = AlgoVars()
-
-    def f(x, vars):
-        from repro.parallel import mesh_context
-
-        return algo.boundary(x, vars, axes)
-
+def probe_boundary(cfg: ModelConfig, plan: ParallelPlan, mesh: Mesh, rules: dict, strategy: CommStrategy):
+    """One ``boundary_round`` of a two-phase strategy — the production
+    boundary program (plane-resident x for packed strategies, flat inflight
+    slots), lowered through the same ``strategy_state_specs`` the dry-run's
+    round program uses. The returned ``collectives`` dict is the boundary's
+    collective schedule, surfaced in dry-run JSONs next to the
+    ``boundary/*`` rows of BENCH_kernels.json."""
     from repro.parallel import mesh_context
 
     with mesh_context(mesh, rules):
-        lowered = jax.jit(f, in_shardings=(x_sh, vars_sh)).lower(x_m, vars_sds)
+        (x_sds, x_sh), (vars_sds, vars_sh), (inflight_sds, inflight_sh), axes = specs.strategy_state_specs(
+            cfg, plan, strategy, mesh, rules
+        )
+
+        def f(x, vars, inflight):
+            return strategy.boundary_round(x, vars, inflight, axes)
+
+        lowered = jax.jit(f, in_shardings=(x_sh, vars_sh, inflight_sh)).lower(x_sds, vars_sds, inflight_sds)
     return _cost(lowered)
 
 
@@ -244,11 +235,12 @@ def _acc(total: dict, c: dict, mult: float, label: str):
     total["bytes"] += mult * c["bytes"]
     total["coll"] += mult * c["coll"]
     total["parts"][label] = dict(mult=mult, **{k: c[k] for k in ("flops", "bytes", "coll")})
+    if c.get("collectives"):
+        # per-kind {count, bytes} schedule of this component (one probe call)
+        total["parts"][label]["collectives"] = c["collectives"]
 
 
-def composed_cost(arch: ArchConfig, shape: InputShape, mesh: Mesh, plan: ParallelPlan, rules: dict, tau: int = 2) -> dict:
-    from repro.config.base import AlgoConfig
-    from repro.core import make_algorithm
+def composed_cost(arch: ArchConfig, shape: InputShape, mesh: Mesh, plan: ParallelPlan, rules: dict, tau: int = 2, strategy: str = None) -> dict:
     from repro.optim import sgd
     from repro.parallel import mesh_context
 
@@ -261,6 +253,13 @@ def composed_cost(arch: ArchConfig, shape: InputShape, mesh: Mesh, plan: Paralle
 
     with mesh_context(mesh, rules):
         if shape.mode == "train":
+            # resolve FIRST: sync-style strategies pin τ = 1, and every
+            # per-step multiplier below must use the τ the round program
+            # actually runs (the dry-run's lower_pair does the same)
+            strat = resolve_strategy(specs.train_algo_config(plan, strategy, tau))
+            tau = strat.tau
+            total["strategy"] = strat.name
+            total["tau"] = tau
             b_worker = shape.global_batch // plan.workers
             mb = min(arch.train_microbatch or b_worker, b_worker)
             n_micro = b_worker // mb
@@ -271,10 +270,7 @@ def composed_cost(arch: ArchConfig, shape: InputShape, mesh: Mesh, plan: Paralle
             _acc(total, c, tau * n_micro, "embed_head")
             c = probe_optimizer(cfg, plan, mesh, rules, sgd(0.9, True, 1e-4))
             _acc(total, c, tau, "optimizer")
-            algo_name = "overlap_local_sgd" if plan.workers > 1 else "local_sgd"
-            algo = make_algorithm(AlgoConfig(name=algo_name, tau=tau, alpha=0.6, anchor_beta=0.7))
-            _, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
-            c = probe_boundary(cfg, plan, mesh, rules, algo, axes)
+            c = probe_boundary(cfg, plan, mesh, rules, strat)
             _acc(total, c, 1, "boundary")
         else:
             mode = "decode" if shape.mode == "decode" else "prefill"

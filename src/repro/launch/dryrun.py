@@ -1,6 +1,13 @@
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Append rather than overwrite: the 8-device test subprocesses (and any
+# caller that already pinned a host-device count) keep their value, a
+# pre-existing unrelated XLA_FLAGS (e.g. --xla_dump_to) is preserved, and
+# the production CLI path still gets the 512 placeholder devices.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on
 the production meshes, print memory/cost analysis, and dump roofline terms.
@@ -10,9 +17,21 @@ hardware: a sharding mismatch, compile-time OOM, or unsupported collective
 fails here. The 512 placeholder host devices exist ONLY in this process
 (the XLA flag above must precede every other import).
 
+Train shapes lower the NATIVE round program — the strategy is resolved
+through ``repro.api.resolve_strategy`` (the exact chain ``Experiment``
+uses), so the program being cost-modelled is the plane-resident program
+training runs: ``TrainState.x`` is the worker-stacked ``Packed`` parameter
+plane, optimizer state lives in flat dtype buckets, and the strategy's
+launched-but-unconsumed collective rides in the ``inflight`` slot through
+``boundary_round``. Any registered strategy lowers (``--strategy``:
+overlap/local/sync-SGD, DaSGD ``delayed_avg``, LOSCAR ``sparse_anchor``,
+…); the default follows ``specs.default_train_strategy`` (w=1 degenerates
+to local_sgd — DESIGN.md §Arch-applicability).
+
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --strategy delayed_avg
 """
 
 import argparse  # noqa: E402
@@ -23,19 +42,48 @@ import traceback  # noqa: E402
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.config import AlgoConfig, INPUT_SHAPES, get_arch, list_archs  # noqa: E402
-from repro.core import make_algorithm  # noqa: E402
+from repro.api import resolve_strategy  # noqa: E402
+from repro.config import INPUT_SHAPES, get_arch, list_archs  # noqa: E402
+from repro.core.strategy import STRATEGIES  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
 from repro.launch import specs  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.optim import schedules, sgd  # noqa: E402
 from repro.parallel import logical_mesh, mesh_context  # noqa: E402
+from repro.parallel.packing import Packed  # noqa: E402
 from repro.serving.engine import decode_step  # noqa: E402
 from repro.training.train_loop import make_round_step  # noqa: E402
 
 
-def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False):
+def plane_meta(state_sds) -> dict:
+    """Machine-readable description of the packed-plane state in the AOT
+    specs — recorded so dry-run JSONs are comparable with the
+    ``boundary/*`` / ``localstep/*`` rows of BENCH_kernels.json (which time
+    the same planes standalone)."""
+    x = state_sds.x
+    if not isinstance(x, Packed):
+        return dict(plane_resident=False)
+    opt_leaves = [s for s in jax.tree.leaves(state_sds.opt) if len(s.shape) > 0]
+    inflight_bytes = sum(
+        p.nbytes for p in jax.tree.leaves(
+            state_sds.inflight, is_leaf=lambda t: isinstance(t, Packed)
+        ) if isinstance(p, Packed)
+    )
+    return dict(
+        plane_resident=True,
+        num_leaves=x.layout.num_leaves,
+        buckets=[
+            dict(dtype=d, elements=int(n))
+            for d, n in zip(x.layout.bucket_dtypes, x.layout.bucket_sizes)
+        ],
+        x_buffer_bytes=int(x.nbytes),
+        opt_buffer_bytes=int(sum(np.prod(s.shape) * s.dtype.itemsize for s in opt_leaves)),
+        inflight_buffer_bytes=int(inflight_bytes),
+    )
+
+
+def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False, strategy: str = None):
     """Returns (lowered, meta) for one (arch × shape × mesh)."""
     arch = get_arch(arch_name)
     shape = INPUT_SHAPES[shape_name]
@@ -54,21 +102,24 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: in
         arch=arch_name,
         shape=shape_name,
         mesh="2x16x16" if multi_pod else "16x16",
+        n_devices=n_dev,
         plan=dict(workers=plan.workers, fsdp=plan.fsdp, tensor=plan.tensor),
         variant=variant,
     )
 
     with mesh_context(lmesh, rules):
         if shape.mode == "train":
-            # w=1 (arctic/deepseek single-pod): Overlap-Local-SGD degenerates —
-            # no second replica to average with, so the honest program is the
-            # round WITHOUT anchor state (see DESIGN.md §Arch-applicability).
-            algo_name = "overlap_local_sgd" if plan.workers > 1 else "local_sgd"
-            meta["algorithm"] = algo_name
-            algo = make_algorithm(AlgoConfig(name=algo_name, tau=tau, alpha=0.6, anchor_beta=0.7))
+            # native two-phase lowering: the same AlgoConfig → make_strategy
+            # resolution Experiment.build() runs (w=1 degenerates to
+            # local_sgd — see DESIGN.md §Arch-applicability)
+            strat = resolve_strategy(specs.train_algo_config(plan, strategy, tau))
+            tau = strat.tau  # sync-style strategies pin τ = 1
+            meta["strategy"] = strat.name
+            meta["tau"] = tau
             optimizer = sgd(momentum=0.9, nesterov=True, weight_decay=1e-4)
             sched = schedules.constant(0.1)
-            state_sds, state_sh, axes = specs.train_state_specs(cfg, plan, algo, optimizer, lmesh, rules)
+            state_sds, state_sh, axes = specs.train_state_specs(cfg, plan, strat, optimizer, lmesh, rules)
+            meta["plane"] = plane_meta(state_sds)
             batch_sds = specs.train_batch_specs(cfg, shape, plan, tau)
             batch_sh = specs.batch_shardings(batch_sds, lmesh, rules)
 
@@ -76,7 +127,7 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: in
                 return T.lm_loss(cfg, p, b, remat=True)
 
             round_step = make_round_step(
-                loss_fn, optimizer, algo, sched, axes, microbatch=arch.train_microbatch
+                loss_fn, optimizer, strat, sched, axes, microbatch=arch.train_microbatch
             )
             lowered = jax.jit(
                 round_step, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
@@ -147,9 +198,10 @@ def run_pair(
     verbose: bool = True,
     with_probes: bool = True,
     opt: bool = False,
+    strategy: str = None,
 ):
     t0 = time.time()
-    lowered, meta, cfg = lower_pair(arch_name, shape_name, multi_pod, opt=opt)
+    lowered, meta, cfg = lower_pair(arch_name, shape_name, multi_pod, opt=opt, strategy=strategy)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -176,7 +228,7 @@ def run_pair(
         lmesh = _lm(prod_mesh, plan)
         rules = specs.optimized_rules(shape) if opt else specs.rules_for(shape)
         t0 = time.time()
-        composed = costprobe.composed_cost(arch, shape, lmesh, plan, rules)
+        composed = costprobe.composed_cost(arch, shape, lmesh, plan, rules, strategy=meta.get("strategy"))
         composed["probe_s"] = round(time.time() - t0, 1)
         roof = rl.Roofline(
             flops=composed["flops"],
@@ -188,14 +240,21 @@ def run_pair(
     n_active = active_params(cfg)
     mode = meta["mode"]
     mflops = rl.model_flops(n_active, meta["tokens_per_program"], "train" if mode == "train" else "serve")
-    n_dev = 512 if multi_pod else 256
+    n_dev = meta["n_devices"]  # the mesh actually built, not a re-derived constant
     mflops_per_dev = mflops / n_dev
+
+    # the boundary's own collective schedule (per-kind count/bytes from the
+    # boundary probe) — directly comparable to BENCH_kernels.json boundary rows
+    boundary_collectives = None
+    if composed is not None and "boundary" in composed.get("parts", {}):
+        boundary_collectives = composed["parts"]["boundary"].get("collectives")
 
     result = dict(
         meta,
         ok=True,
         lower_s=round(t_lower, 1),
         compile_s=round(t_compile, 1),
+        boundary_collectives=boundary_collectives,
         n_params=n_params,
         n_active_params=n_active,
         model_flops_per_device=mflops_per_dev,
@@ -213,7 +272,8 @@ def run_pair(
         composed=composed,
     )
     if verbose:
-        print(f"== {meta['arch']} × {meta['shape']} × {meta['mesh']} (plan {meta['plan']}, {meta['variant']})")
+        strat_note = f", strategy {meta['strategy']}" if "strategy" in meta else ""
+        print(f"== {meta['arch']} × {meta['shape']} × {meta['mesh']} (plan {meta['plan']}, {meta['variant']}{strat_note})")
         print(f"   memory_analysis: {mem}")
         print(
             f"   cost/device: flops={roof.flops:.3e} bytes={roof.bytes_accessed:.3e} "
@@ -232,6 +292,10 @@ def run_pair(
         tag = f"{meta['arch']}_{meta['shape']}_{meta['mesh'].replace('x','-')}"
         if opt:
             tag += "_opt"
+        if strategy is not None and "strategy" in meta:
+            # only train shapes resolve a strategy; serve pairs under
+            # --all --strategy keep their untagged filenames
+            tag += f"_{meta['strategy']}"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(result, f, indent=2, default=str)
     return result
@@ -243,6 +307,15 @@ def main() -> None:
     ap.add_argument("--shape", type=str, default=None, choices=list(INPUT_SHAPES) + [None])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--opt", action="store_true", help="lower the beyond-paper optimized sharding variant (EXPERIMENTS.md §Perf)")
+    ap.add_argument(
+        "--strategy",
+        type=str,
+        default=None,
+        choices=sorted(STRATEGIES),
+        help="two-phase CommStrategy for train shapes (default: specs.default_train_strategy — "
+        "overlap_local_sgd, degenerating to local_sgd at w=1)",
+    )
+    ap.add_argument("--no-probes", action="store_true", help="skip the scan-corrected component probes (faster smoke)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", type=str, default="experiments/dryrun")
     args = ap.parse_args()
@@ -257,7 +330,15 @@ def main() -> None:
     failures = []
     for a, s in pairs:
         try:
-            run_pair(a, s, multi_pod=args.multi_pod, out_dir=args.out, opt=args.opt)
+            run_pair(
+                a,
+                s,
+                multi_pod=args.multi_pod,
+                out_dir=args.out,
+                opt=args.opt,
+                strategy=args.strategy,
+                with_probes=not args.no_probes,
+            )
         except Exception as e:  # noqa: BLE001
             failures.append((a, s, repr(e)))
             print(f"!! FAIL {a} × {s}: {e}")

@@ -1,6 +1,11 @@
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# append (same contract as launch/dryrun.py): keep a caller-pinned device
+# count or unrelated XLA flags, default to the 512 placeholder devices
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Recompute the probe-composed roofline numbers for existing dry-run JSONs
 (used after parser/costing fixes — full-program memory/schedule fields are
@@ -30,7 +35,7 @@ def repatch(path: str) -> None:
     lmesh = logical_mesh(prod, plan)
     rules = specs.optimized_rules(shape) if opt else specs.rules_for(shape)
     t0 = time.time()
-    composed = costprobe.composed_cost(arch, shape, lmesh, plan, rules)
+    composed = costprobe.composed_cost(arch, shape, lmesh, plan, rules, strategy=d.get("strategy"))
     composed["probe_s"] = round(time.time() - t0, 1)
     roof = rl.Roofline(
         flops=composed["flops"],
@@ -39,6 +44,9 @@ def repatch(path: str) -> None:
         collectives=d["roofline"].get("collectives", {}),
     )
     d["composed"] = composed
+    # keep the top-level mirror in sync with the refreshed boundary probe
+    # (run_pair writes it the same way; None for serve shapes)
+    d["boundary_collectives"] = composed.get("parts", {}).get("boundary", {}).get("collectives")
     d["roofline"] = roof.as_dict()
     if d.get("model_flops_per_device") and roof.flops:
         d["useful_flops_ratio"] = d["model_flops_per_device"] / roof.flops

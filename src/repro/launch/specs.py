@@ -22,8 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import AlgoConfig, ArchConfig, InputShape, ModelConfig, OptimizerConfig, ParallelPlan
-from repro.core.algorithms import AlgoVars, make_algorithm
-from repro.core.strategy import CommStrategy, PACKED_STACKED_AXES, _stacked_axes
+from repro.core.strategy import AlgoVars, CommStrategy, PACKED_STACKED_AXES, _stacked_axes
 from repro.models import transformer as T
 from repro.optim import optimizers as opt_mod
 from repro.parallel import packing as pk
@@ -81,6 +80,26 @@ def optimized_rules(shape: InputShape) -> dict:
         }
     )
     return out
+
+
+# production training strategy ----------------------------------------------
+
+
+def default_train_strategy(plan: ParallelPlan) -> str:
+    """The production default: the paper's algorithm — except at w=1
+    (arctic/deepseek single-pod), where Overlap-Local-SGD degenerates (no
+    second replica to average with) and the honest program is the round
+    WITHOUT anchor state. See DESIGN.md §Arch-applicability."""
+    return "overlap_local_sgd" if plan.workers > 1 else "local_sgd"
+
+
+def train_algo_config(plan: ParallelPlan, strategy: Optional[str] = None, tau: int = 2) -> AlgoConfig:
+    """The AlgoConfig the production lowering trains with (dry-run and cost
+    probes resolve it through ``repro.api.resolve_strategy``, the exact
+    chain ``Experiment`` uses)."""
+    return AlgoConfig(
+        name=strategy or default_train_strategy(plan), tau=tau, alpha=0.6, anchor_beta=0.7
+    )
 
 
 # model variant -------------------------------------------------------------
@@ -195,17 +214,24 @@ def opt_state_specs(optimizer, strategy_packed: bool, x_sds, x_sh, mesh: Mesh, r
     return opt_sds, opt_sh
 
 
-def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mesh: Mesh, rules: dict):
-    """Abstract TrainState + shardings for ``algo`` — a legacy ``Algorithm``
-    or a two-phase ``CommStrategy`` (whose ``state_axes`` hook supplies the
-    vars/inflight layouts, including the carried anchor collective)."""
+def strategy_state_specs(cfg: ModelConfig, plan: ParallelPlan, strategy: CommStrategy, mesh: Mesh, rules: dict, packed_x: Optional[bool] = None):
+    """Abstract ``(x, vars, inflight)`` + shardings for one ``boundary_round``
+    of a two-phase :class:`CommStrategy` — the boundary slice of
+    :func:`train_state_specs`, shared with the cost probes
+    (``launch/costprobe.py``) so the boundary they time is exactly the one
+    the production round program runs.
+
+    ``packed_x=None`` follows the strategy's ``packed`` flag (plane-resident
+    x: one ``("worker", "flat_param")`` spec per dtype bucket); pass ``False``
+    to keep per-leaf x specs (e.g. under a non-packed-capable optimizer).
+    """
     params_sds, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
     m = plan.workers
-
     x_sds = jax.tree.map(lambda s: _sds((m,) + tuple(s.shape), s.dtype), params_sds)
     x_sh = _axes_tree_shardings(_stacked_axes(axes), x_sds, mesh, rules)
-    strategy_packed = isinstance(algo, CommStrategy) and getattr(algo, "packed", False)
-    if strategy_packed and opt_mod.packed_capable(optimizer):
+    if packed_x is None:
+        packed_x = bool(getattr(strategy, "packed", False))
+    if packed_x:
         # plane-resident state: x is the worker-stacked Packed plane — one
         # ("worker", "flat_param") spec per dtype bucket instead of one per
         # leaf, mirroring make_train_state
@@ -214,15 +240,32 @@ def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mes
             lambda s: NamedSharding(mesh, sh.fit_spec(sh.spec_for(PACKED_STACKED_AXES, rules), s.shape, mesh)),
             x_sds,
         )
-    opt_sds, opt_sh = opt_state_specs(optimizer, strategy_packed, x_sds, x_sh, mesh, rules)
+    vars_sds = jax.eval_shape(lambda xs: strategy.init_vars(xs, None), x_sds)
+    inflight_sds = jax.eval_shape(lambda xs, vs: strategy.init_inflight(xs, vs, None), x_sds, vars_sds)
+    vars_axes, inflight_axes = strategy.state_axes(axes)
+    vars_sh = _axes_tree_shardings(vars_axes, vars_sds, mesh, rules)
+    inflight_sh = _axes_tree_shardings(inflight_axes, inflight_sds, mesh, rules)
+    return (x_sds, x_sh), (vars_sds, vars_sh), (inflight_sds, inflight_sh), axes
 
+
+def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mesh: Mesh, rules: dict):
+    """Abstract TrainState + shardings for ``algo`` — a two-phase
+    ``CommStrategy`` (whose ``state_axes`` hook supplies the vars/inflight
+    layouts, including the carried anchor collective) or, for the oracle
+    tests only, a legacy deprecated ``Algorithm``."""
+    strategy_packed = isinstance(algo, CommStrategy) and getattr(algo, "packed", False)
     if isinstance(algo, CommStrategy):
-        vars_sds = jax.eval_shape(lambda xs: algo.init_vars(xs, None), x_sds)
-        inflight_sds = jax.eval_shape(lambda xs, vs: algo.init_inflight(xs, vs, None), x_sds, vars_sds)
-        vars_axes, inflight_axes = algo.state_axes(axes)
-        vars_sh = _axes_tree_shardings(vars_axes, vars_sds, mesh, rules)
-        inflight_sh = _axes_tree_shardings(inflight_axes, inflight_sds, mesh, rules)
+        plane_resident = strategy_packed and opt_mod.packed_capable(optimizer)
+        (x_sds, x_sh), (vars_sds, vars_sh), (inflight_sds, inflight_sh), axes = strategy_state_specs(
+            cfg, plan, algo, mesh, rules, packed_x=plane_resident
+        )
+        opt_sds, opt_sh = opt_state_specs(optimizer, strategy_packed, x_sds, x_sh, mesh, rules)
     else:
+        params_sds, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+        m = plan.workers
+        x_sds = jax.tree.map(lambda s: _sds((m,) + tuple(s.shape), s.dtype), params_sds)
+        x_sh = _axes_tree_shardings(_stacked_axes(axes), x_sds, mesh, rules)
+        opt_sds, opt_sh = opt_state_specs(optimizer, False, x_sds, x_sh, mesh, rules)
         z_sds = v_sds = None
         if algo.needs_anchor:
             z_sds = params_sds

@@ -159,6 +159,17 @@ class Packed:
     def lead_shape(self) -> Tuple[int, ...]:
         return tuple(self.buffers[0].shape[:-1]) if self.buffers else ()
 
+    @property
+    def nbytes(self) -> int:
+        """Total plane bytes (padding lanes and any stacked lead dims
+        included). Shape/dtype arithmetic only, so it works on concrete
+        arrays and ``ShapeDtypeStruct`` stand-ins alike — the dry-run
+        records it for AOT specs."""
+        return sum(
+            _prod(b.shape) * jnp.dtype(d).itemsize
+            for b, d in zip(self.buffers, self.layout.bucket_dtypes)
+        )
+
     def __repr__(self):
         shapes = ", ".join(f"{b.shape}:{self.layout.bucket_dtypes[i]}" for i, b in enumerate(self.buffers))
         return f"Packed([{shapes}], {self.layout.num_leaves} leaves)"

@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Docs-reference check: every `DESIGN.md` / `EXPERIMENTS.md` citation in the
+source tree must resolve — the cited file exists, and when the citation names
+a section (`DESIGN.md §Arch-applicability`, `EXPERIMENTS.md §Perf`, …) that
+section header exists in the document. Run by CI next to the tier-1 suite
+(and wrapped by tests/test_docs_refs.py) so a docstring can never cite a
+dangling document again.
+
+Usage: python tools/check_doc_refs.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# directories scanned for citations, relative to the repo root
+SCAN_DIRS = ("src", "benchmarks", "tests", "examples")
+DOC_NAMES = ("DESIGN", "EXPERIMENTS")
+
+# `DESIGN.md §3`, `EXPERIMENTS.md §Perf`, or a bare `DESIGN.md` mention
+CITE_RE = re.compile(r"\b(%s)\.md(?:\s*§([A-Za-z0-9_-]+))?" % "|".join(DOC_NAMES))
+
+
+def collect_citations(repo_root: Path):
+    """-> sorted {(doc, section_or_None, "path:line")}."""
+    cites = set()
+    for d in SCAN_DIRS:
+        root = repo_root / d
+        if not root.is_dir():
+            continue
+        for py in sorted(root.rglob("*.py")):
+            for lineno, line in enumerate(py.read_text().splitlines(), 1):
+                for m in CITE_RE.finditer(line):
+                    where = f"{py.relative_to(repo_root)}:{lineno}"
+                    cites.add((m.group(1), m.group(2), where))
+    return sorted(cites, key=lambda c: (c[0], c[1] or "", c[2]))
+
+
+def _has_section(doc_text: str, section: str) -> bool:
+    """A cited §section resolves iff some markdown header line contains the
+    literal `§section` token (not a longer token sharing the prefix)."""
+    pat = re.compile(r"§%s(?![\w-])" % re.escape(section))
+    return any(
+        pat.search(line) for line in doc_text.splitlines() if line.lstrip().startswith("#")
+    )
+
+
+def check(repo_root: Path):
+    """-> list of error strings (empty = all citations resolve)."""
+    errors = []
+    doc_texts = {}
+    for doc, section, where in collect_citations(repo_root):
+        path = repo_root / f"{doc}.md"
+        if doc not in doc_texts:
+            doc_texts[doc] = path.read_text() if path.is_file() else None
+        if doc_texts[doc] is None:
+            errors.append(f"{where}: cites {doc}.md, which does not exist")
+            continue
+        if section is not None and not _has_section(doc_texts[doc], section):
+            errors.append(f"{where}: cites {doc}.md §{section}, but no such section header")
+    return errors
+
+
+def main(argv) -> int:
+    repo_root = Path(argv[1]) if len(argv) > 1 else Path(__file__).resolve().parent.parent
+    cites = collect_citations(repo_root)
+    errors = check(repo_root)
+    for e in errors:
+        print(f"DOC-REF ERROR: {e}", file=sys.stderr)
+    print(f"doc-ref check: {len(cites)} citation(s), {len(errors)} unresolved")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
