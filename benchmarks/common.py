@@ -11,7 +11,7 @@ import os
 from dataclasses import dataclass
 from typing import List, Optional
 
-from repro.api import ClassificationSpec, Experiment
+from repro.api import ClassificationSpec, Experiment, TauController
 from repro.config import AlgoConfig, OptimizerConfig
 from repro.data import make_classification_splits
 from repro.optim import schedules
@@ -29,6 +29,9 @@ class RunResult:
     losses: List[float]
     test_acc: float
     wall_s: float
+    # adaptive-τ runs only: controller telemetry, one record per round
+    # (round/tau/drift/scale/drift_ratio/decision/next_tau — DESIGN.md §6)
+    tau_schedule: Optional[List[dict]] = None
 
 
 _DATA = {}
@@ -61,6 +64,7 @@ def train_run(
     batch: int = 8,
     seed: int = 0,
     local_momentum: float = 0.9,
+    adaptive_tau: Optional[TauController] = None,
 ) -> RunResult:
     splits = get_data(noniid)
     steps = steps or (300 if QUICK else 900)
@@ -76,6 +80,26 @@ def train_run(
         workers=M,
         seed=seed,
     )
+    if adaptive_tau is not None:
+        # spend the same local-step budget as a fixed-τ run, one round at a
+        # time so the controller's τ growth cannot overshoot the budget
+        losses: List[float] = []
+        wall = 0.0
+        taken = 0
+        while taken < steps:
+            r1 = exp.fit(rounds=1, adaptive_tau=adaptive_tau)
+            losses += r1.losses
+            wall += r1.wall_s
+            taken += r1.steps
+        acc = exp.evaluate()["test_acc"]
+        return RunResult(
+            algo=algo_name,
+            tau=adaptive_tau.tau,
+            losses=losses,
+            test_acc=acc,
+            wall_s=wall,
+            tau_schedule=list(adaptive_tau.history),
+        )
     res = exp.fit(steps=steps)
     acc = exp.evaluate()["test_acc"]
     return RunResult(algo=algo_name, tau=tau, losses=res.losses, test_acc=acc, wall_s=res.wall_s)

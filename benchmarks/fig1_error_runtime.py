@@ -8,6 +8,7 @@ communication; each point is one (algo, τ)."""
 from __future__ import annotations
 
 from benchmarks.common import csv_row, train_run
+from repro.api import TauController
 from repro.core.runtime_model import RuntimeConfig, simulate
 
 STEPS_PER_EPOCH = 24
@@ -27,6 +28,35 @@ POINTS = (
 )
 
 
+def _round_time(algo: str, tau: int, amortize: int = 8):
+    """Mean per-round (time, exposed comm) at a fixed τ, amortized so the
+    overlapped collective settles into steady state."""
+    res = simulate(algo, tau, tau * amortize, RT)
+    return res.total_time / amortize, res.exposed_comm / amortize
+
+
+def adaptive_point():
+    """The adaptive-τ frontier point (DESIGN.md §6): one controller-driven
+    run of Overlap-Local-SGD, priced per-round at the τ each round ran at."""
+    algo = "overlap_local_sgd"
+    ctrl = TauController(tau=1, tau_min=1, tau_max=24, lo=0.05, hi=0.5)
+    r = train_run(algo, 1, adaptive_tau=ctrl)
+    steps = sum(h["tau"] for h in r.tau_schedule)
+    times = {t: _round_time(algo, t) for t in {h["tau"] for h in r.tau_schedule}}
+    sim_time = sum(times[h["tau"]][0] for h in r.tau_schedule)
+    exposed = sum(times[h["tau"]][1] for h in r.tau_schedule)
+    return dict(
+        algo=algo,
+        tau="adaptive",
+        acc=r.test_acc,
+        sim_time=sim_time,
+        exposed_comm=exposed,
+        per_epoch=sim_time / max(steps / STEPS_PER_EPOCH, 1e-9),
+        taus=sorted({h["tau"] for h in r.tau_schedule}),
+        rounds=len(r.tau_schedule),
+    )
+
+
 def run(quick: bool = False):
     rows = []
     for algo, tau in POINTS:
@@ -43,19 +73,17 @@ def run(quick: bool = False):
                 per_epoch=rt.total_time / max(steps / STEPS_PER_EPOCH, 1e-9),
             )
         )
+    rows.append(adaptive_point())
     return rows
 
 
 def main(emit):
     rows = run()
     for r in rows:
-        emit(
-            csv_row(
-                f"fig1/{r['algo']}/tau{r['tau']}",
-                r["sim_time"] * 1e6,
-                f"test_acc={r['acc']:.4f};epoch_s={r['per_epoch']:.2f};exposed_comm_s={r['exposed_comm']:.2f}",
-            )
-        )
+        derived = f"test_acc={r['acc']:.4f};epoch_s={r['per_epoch']:.2f};exposed_comm_s={r['exposed_comm']:.2f}"
+        if r["tau"] == "adaptive":
+            derived += f";taus={'/'.join(map(str, r['taus']))};rounds={r['rounds']}"
+        emit(csv_row(f"fig1/{r['algo']}/tau_{r['tau']}" if r["tau"] == "adaptive" else f"fig1/{r['algo']}/tau{r['tau']}", r["sim_time"] * 1e6, derived))
     # Pareto check: overlap tau=2 should not be dominated by any other point
     ours = next(r for r in rows if r["algo"] == "overlap_local_sgd" and r["tau"] == 2)
     dominated = any(

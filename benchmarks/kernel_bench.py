@@ -40,7 +40,9 @@ import numpy as np
 
 from benchmarks.common import QUICK, csv_row
 from repro.config import AlgoConfig
+from repro.control import consensus_drift
 from repro.core import make_strategy
+from repro.kernels.consensus_probe import ops as probe_ops
 from repro.kernels.anchor_mix import ref as am_ref
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.rmsnorm import ref as rms_ref
@@ -257,6 +259,85 @@ def plane_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: int =
     return rows
 
 
+def consensus_probe_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: int = 48):
+    """Adaptive-τ consensus probe (DESIGN.md §6) on the production-depth
+    synthetic tree.
+
+    ``consensusprobe/packed_*``: the plane probe (one sweep over the flat
+    bucket buffers) vs the unfused per-leaf two-pass reduction
+    (``repro.control.consensus_drift``: mean + squared-deviation reductions
+    per leaf, O(leaves) dispatch) — the controller's measurement cost when
+    the strategy has no boundary kernel to fuse into.
+
+    ``consensusprobe/boundary_*``: one full Overlap-Local-SGD round boundary
+    with and without ``probe=True`` — the fused-probe overhead on the path
+    adaptive fits actually run (the partial sums ride the pullback kernels,
+    so the expected overhead is the extra write of a (2, 128) buffer)."""
+    if quick:
+        n_layers, width = 40, 32
+    rng = np.random.default_rng(0)
+    params = _synthetic_tree(rng, n_layers, width)
+    n_leaves = len(jax.tree.leaves(params))
+    n_elems = sum(l.size for l in jax.tree.leaves(params))
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
+    x = jax.tree.map(
+        lambda t: t + 0.01 * jnp.arange(m, dtype=np.float32).reshape((m,) + (1,) * (t.ndim - 1)), x
+    )
+    px = pack(x, lead=1)
+    iters = 5 if quick else 30
+    nbytes = m * n_elems * 4  # one f32 sweep of the stacked plane
+
+    rows = []
+    us_probe = _time(jax.jit(probe_ops.packed_probe), px, iters=iters)
+    us_leaf = _time(jax.jit(consensus_drift), x, iters=iters)
+    rows.append(
+        (
+            f"consensusprobe/packed_probe_{n_leaves}leaf",
+            us_probe,
+            f"gbps={nbytes/us_probe/1e3:.1f} leaves={n_leaves} elems={n_elems} m={m}",
+        )
+    )
+    rows.append(
+        (
+            f"consensusprobe/perleaf_twopass_{n_leaves}leaf",
+            us_leaf,
+            f"gbps={nbytes/us_leaf/1e3:.1f} leaves={n_leaves} elems={n_elems} m={m}",
+        )
+    )
+    rows.append(
+        (
+            f"consensusprobe/packed_speedup_{n_leaves}leaf",
+            us_probe,
+            f"speedup_x={us_leaf/us_probe:.2f} baseline_us={us_leaf:.1f}",
+        )
+    )
+
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=True)
+    strat = make_strategy(cfg)
+    vars_ = strat.init_vars(px, None)
+    inflight = strat.init_inflight(px, vars_, None)
+    us_by_probe = {}
+    for probe in (False, True):
+        fn = jax.jit(lambda xx, vv, ff: strat.boundary_round(xx, vv, ff, None, probe=probe))
+        us_by_probe[probe] = _time(fn, px, vars_, inflight, iters=iters)
+    rows.append(
+        (
+            f"consensusprobe/boundary_plain_{n_leaves}leaf",
+            us_by_probe[False],
+            f"leaves={n_leaves} elems={n_elems} m={m}",
+        )
+    )
+    rows.append(
+        (
+            f"consensusprobe/boundary_probed_{n_leaves}leaf",
+            us_by_probe[True],
+            f"overhead_pct={100*(us_by_probe[True]/us_by_probe[False]-1):.1f} "
+            f"baseline_us={us_by_probe[False]:.1f}",
+        )
+    )
+    return rows
+
+
 _ARCH_BOUNDARY_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -386,6 +467,7 @@ def run(quick: bool = False):
     rows.extend(boundary_rows(quick))
     rows.extend(local_step_rows(quick))
     rows.extend(plane_rows(quick))
+    rows.extend(consensus_probe_rows(quick))
     rows.extend(arch_boundary_rows(quick))
     return rows
 

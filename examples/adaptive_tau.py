@@ -1,0 +1,56 @@
+"""Adaptive-τ training (DESIGN.md §6): a ``TauController`` drives the
+communication period live, fed by the fused consensus-distance probe.
+
+Two runs of Overlap-Local-SGD on the synthetic classification task:
+
+* IID workers — consensus drift stays a small fraction of the parameter
+  norm, so the controller *grows* τ (fewer boundaries, more hidden
+  communication);
+* non-IID workers (64% single-class per worker) — local models scatter
+  during long rounds, so a controller started at a large τ *shrinks* it.
+
+Each distinct τ compiles one round program (τ is a static shape
+parameter); the run touches at most O(log τ_max) programs.
+
+    PYTHONPATH=src python examples/adaptive_tau.py [--rounds 8]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import ClassificationSpec, Experiment, TauController
+
+
+def run(name: str, noniid: bool, ctrl: TauController, rounds: int) -> None:
+    exp = Experiment(
+        task=ClassificationSpec(noniid=noniid),
+        strategy="overlap_local_sgd",
+        workers=4,
+        seed=0,
+    )
+    res = exp.fit(rounds=rounds, adaptive_tau=ctrl)
+    print(f"\n{name}: start τ={res.tau_schedule[0]['tau']}, band=[{ctrl.lo}, {ctrl.hi}]")
+    print(f"  {'round':>5} {'τ':>3} {'drift/scale':>12} {'decision':>9} {'next τ':>6}   loss")
+    for h, loss in zip(res.tau_schedule, res.losses):
+        print(
+            f"  {h['round']:5d} {h['tau']:3d} {h['drift_ratio']:12.4f} "
+            f"{h['decision']:>9} {h['next_tau']:6d}   {loss:.4f}"
+        )
+    taus = sorted({h["tau"] for h in res.tau_schedule})
+    print(
+        f"  {res.steps} local steps over {res.rounds} rounds; "
+        f"τ visited {taus}; {len(exp.tau_programs)} compiled round programs; "
+        f"test_acc={exp.evaluate()['test_acc']:.4f}"
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    args = ap.parse_args()
+    # IID: drift ratio starts ~0.02 at τ=1 — below lo, so τ grows
+    run("IID (τ grows)", False, TauController(tau=1, tau_min=1, tau_max=8, lo=0.05, hi=0.5), args.rounds)
+    # non-IID: drift ratio at τ=8 starts ~0.22 — above hi, so τ shrinks
+    run("non-IID (τ shrinks)", True, TauController(tau=8, tau_min=1, tau_max=8, lo=0.01, hi=0.15), args.rounds)

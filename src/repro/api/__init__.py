@@ -1,4 +1,12 @@
 """Public facade: config-driven training/evaluation/serving entrypoints."""
 from repro.api.experiment import ClassificationSpec, Experiment, FitResult, TokenStream, resolve_strategy
+from repro.control import TauController
 
-__all__ = ["ClassificationSpec", "Experiment", "FitResult", "TokenStream", "resolve_strategy"]
+__all__ = [
+    "ClassificationSpec",
+    "Experiment",
+    "FitResult",
+    "TauController",
+    "TokenStream",
+    "resolve_strategy",
+]

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import AlgoConfig, ModelConfig, OptimizerConfig, ParallelPlan, get_arch
+from repro.control import RoundProgramCache, TauController
 from repro.core.strategy import CommStrategy, resolve_strategy
 from repro.data.loaders import (
     ClassificationSplits,
@@ -93,6 +94,9 @@ class FitResult:
     rounds: int
     steps: int  # local steps taken (rounds × τ)
     wall_s: float
+    # adaptive-τ runs only: one controller telemetry record per round
+    # (round/tau/drift/scale/drift_ratio/decision/next_tau — DESIGN.md §6)
+    tau_schedule: Optional[List[dict]] = None
 
     @property
     def final_loss(self) -> float:
@@ -221,12 +225,22 @@ class Experiment:
         rounds: Optional[int] = None,
         steps: Optional[int] = None,
         log: Optional[Callable[[int, float], None]] = None,
+        adaptive_tau: Optional[TauController] = None,
     ) -> FitResult:
         """Run the round loop. ``steps`` (local steps) is an alternative to
         ``rounds``: rounds = steps // τ. ``log(round_idx, mean_loss)`` is
         called once per round when given. Fitting continues from the current
-        state, so repeated calls accumulate training."""
+        state, so repeated calls accumulate training.
+
+        ``adaptive_tau`` hands the round loop to a
+        :class:`repro.control.TauController` (DESIGN.md §6): each round runs
+        at the controller's current τ through a per-τ jitted program cache,
+        with the fused consensus probe feeding the controller between
+        rounds. The returned :class:`FitResult` carries the realized τ
+        schedule; ``steps`` then counts the actual local steps taken."""
         self.build()
+        if adaptive_tau is not None:
+            return self._fit_adaptive(adaptive_tau, rounds or self.rounds, log)
         tau = self.strategy_obj.tau
         if rounds is None:
             rounds = (steps // tau) if steps is not None else self.rounds
@@ -243,6 +257,51 @@ class Experiment:
         self.state = state
         return FitResult(
             losses=losses, state=state, rounds=rounds, steps=rounds * tau, wall_s=time.time() - t0
+        )
+
+    def _fit_adaptive(self, ctrl: TauController, rounds: int, log) -> FitResult:
+        """The adaptive-τ round loop: τ is a static shape parameter (the
+        round batch's leading axis), so the controller swaps between the
+        O(log τ_max) compiled programs held by ``self.tau_programs``; the
+        probe-enabled round step surfaces ``consensus_drift``/``_scale``
+        metrics that drive the controller's next decision."""
+        if not hasattr(self, "tau_programs"):
+            probed = make_round_step(
+                self.loss_fn,
+                self.opt_obj,
+                self.strategy_obj,
+                self.schedule_fn,
+                self.axes,
+                grad_clip=self.grad_clip,
+                microbatch=self.microbatch,
+                probe=True,
+            )
+            # one jit wrapper per τ: each distinct τ is a distinct XLA
+            # program (different scan trip count / batch shape)
+            self.tau_programs = RoundProgramCache(lambda tau: jax.jit(probed))
+        losses: List[float] = []
+        first = len(ctrl.history)
+        total_steps = 0
+        t0 = time.time()
+        state = self.state
+        for r in range(rounds):
+            tau = ctrl.tau
+            step = self.tau_programs.program_for(tau)
+            rb = round_batch(self.next_batch, tau)
+            state, ms = step(state, rb)
+            losses.append(float(np.asarray(ms["loss"]).mean()))
+            ctrl.update(float(ms["consensus_drift"]), float(ms["consensus_scale"]))
+            total_steps += tau
+            if log is not None:
+                log(r, losses[-1])
+        self.state = state
+        return FitResult(
+            losses=losses,
+            state=state,
+            rounds=rounds,
+            steps=total_steps,
+            wall_s=time.time() - t0,
+            tau_schedule=list(ctrl.history[first:]),
         )
 
     # -- evaluation ---------------------------------------------------------

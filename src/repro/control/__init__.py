@@ -1,0 +1,35 @@
+"""Adaptive-τ control plane (DESIGN.md §6).
+
+The paper fixes the communication period τ per run; this package makes it
+a *live* control variable on the production path:
+
+* :mod:`repro.control.controller` — the host-side :class:`TauController`
+  (AdaComm-style multiplicative rule with a hysteresis band, warmup,
+  cooldown and clamps) plus the bit-exact per-leaf ``consensus_drift``
+  oracle its fused measurement kernel is pinned against.
+* :mod:`repro.control.program_cache` — τ is a static shape parameter of
+  the compiled round program; :class:`RoundProgramCache` keeps the
+  O(log τ_max) jitted programs the doubling/halving rule can reach.
+* :mod:`repro.control.schedule` — τ-*schedule* cost modelling for the
+  dry-run: per-τ program costs extrapolated from one composed probe and a
+  controller trajectory simulated against the runtime model.
+
+The measurement side lives in :mod:`repro.kernels.consensus_probe` (fused
+into the boundary kernels); the drive side is
+``repro.api.Experiment.fit(adaptive_tau=...)``.
+"""
+from repro.control.controller import AdaptiveTau, TauController, consensus_drift
+from repro.control.program_cache import RoundProgramCache, TauScheduledTrainer
+from repro.control.schedule import per_tau_costs, runtime_algo, schedule_block, simulate_trajectory
+
+__all__ = [
+    "AdaptiveTau",
+    "TauController",
+    "consensus_drift",
+    "RoundProgramCache",
+    "TauScheduledTrainer",
+    "per_tau_costs",
+    "runtime_algo",
+    "schedule_block",
+    "simulate_trajectory",
+]

@@ -1,0 +1,125 @@
+"""Adaptive-τ controller — the host-side decision loop (DESIGN.md §6).
+
+The paper fixes τ per run and points at its companion work (ref. [14],
+AdaComm) for adapting it. The natural controller for Overlap-Local-SGD:
+grow τ while the anchor communication stays hidden and the workers'
+*consensus distance* stays a small fraction of the parameter norm, shrink
+it when local models drift too far (the non-IID failure mode of Table 2).
+
+    τ_{r+1} = clip(τ_r · 2,      if  drift_r < lo · scale_r
+              τ_r,               if  lo·scale ≤ drift ≤ hi·scale
+              max(τ_r / 2, 1),   if  drift_r > hi · scale_r)
+
+with drift_r = mean_i ‖x_i − x̄‖ and scale_r = ‖x̄‖, both measured on the
+*pre-boundary* plane by the fused consensus probe
+(:mod:`repro.kernels.consensus_probe`). The strict inequalities are the
+hysteresis band: a ratio sitting inside [lo, hi] — including exactly on
+either edge — holds τ, so the controller cannot flap between two values
+on a boundary-riding signal.
+
+The controller runs on the host between rounds: τ is a *static shape
+parameter* of the compiled round program (the round batch's leading axis),
+so changing it selects a different jitted program from
+:class:`repro.control.program_cache.RoundProgramCache` — the doubling
+/halving rule means at most O(log τ_max) programs ever compile.
+
+``warmup_rounds`` holds τ fixed while the freshly initialized workers are
+still scattering (the first rounds' drift reflects initialization, not the
+data distribution); ``cooldown_rounds`` holds τ for N rounds after every
+change so a decision is judged on drift measured *at the new τ*, not on
+the stale pre-change signal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class TauController:
+    """AdaComm-style multiplicative τ controller with hysteresis.
+
+    Telemetry: every :meth:`update` appends one structured record to
+    ``history`` with keys ``round``, ``tau`` (the τ the round ran at),
+    ``drift``, ``scale``, ``drift_ratio``, ``decision`` (one of
+    ``warmup | cooldown | grow | shrink | hold | clamp``) and ``next_tau``.
+    The training loop surfaces these records as the run's τ schedule.
+    """
+
+    tau: int = 1
+    tau_min: int = 1
+    tau_max: int = 32
+    lo: float = 0.01  # drift/scale below this: communicate less often
+    hi: float = 0.05  # drift/scale above this: communicate more often
+    warmup_rounds: int = 0  # hold τ for the first N rounds
+    cooldown_rounds: int = 0  # hold τ for N rounds after every change
+    history: List[dict] = field(default_factory=list)
+    _round: int = field(default=0, init=False, repr=False)
+    _cooldown: int = field(default=0, init=False, repr=False)
+
+    def update(self, drift: float, scale: float) -> int:
+        """Consume one round's consensus stats, return the next round's τ."""
+        ratio = float(drift) / max(float(scale), 1e-12)
+        old = self.tau
+        if self._round < self.warmup_rounds:
+            decision = "warmup"
+        elif self._cooldown > 0:
+            decision = "cooldown"
+            self._cooldown -= 1
+        elif ratio < self.lo:
+            self.tau = min(self.tau * 2, self.tau_max)
+            decision = "grow" if self.tau != old else "clamp"
+        elif ratio > self.hi:
+            self.tau = max(self.tau // 2, self.tau_min)
+            decision = "shrink" if self.tau != old else "clamp"
+        else:
+            decision = "hold"
+        if decision in ("grow", "shrink"):
+            self._cooldown = self.cooldown_rounds
+        self.history.append(
+            dict(
+                round=self._round,
+                tau=old,
+                drift=float(drift),
+                scale=float(scale),
+                drift_ratio=ratio,
+                decision=decision,
+                next_tau=self.tau,
+            )
+        )
+        self._round += 1
+        return self.tau
+
+    @property
+    def taus_seen(self) -> List[int]:
+        """Distinct τ values the schedule has run at (sorted)."""
+        return sorted({h["tau"] for h in self.history} | {self.tau})
+
+
+@dataclass
+class AdaptiveTau(TauController):
+    """Back-compat name for :class:`TauController` (the original controller
+    from ``repro.core.adaptive``, which shipped with a shared-mutable
+    ``history: list = None`` default — now a proper ``default_factory``).
+    Same defaults, no warmup/cooldown; history records are a superset of
+    the legacy ``{tau, drift_ratio, next_tau}`` schema."""
+
+
+def consensus_drift(x_stacked) -> tuple:
+    """(mean_i ‖x_i − x̄‖, ‖x̄‖) over the stacked worker params.
+
+    The bit-exact per-leaf oracle the fused probe's differential tests pin
+    against; works on pytrees and on ``Packed`` planes alike (the plane's
+    buffers are its leaves, and padding lanes hold zeros)."""
+    leaves = jax.tree.leaves(x_stacked)
+    sq_drift = 0.0
+    sq_scale = 0.0
+    for t in leaves:
+        tf = t.astype(jnp.float32)
+        mean = jnp.mean(tf, axis=0, keepdims=True)
+        sq_drift += jnp.sum(jnp.square(tf - mean)) / t.shape[0]
+        sq_scale += jnp.sum(jnp.square(mean))
+    return jnp.sqrt(sq_drift), jnp.sqrt(sq_scale)

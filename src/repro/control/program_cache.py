@@ -1,0 +1,81 @@
+"""Jitted round programs keyed by τ (DESIGN.md §6).
+
+τ is a static shape parameter of the compiled round program — the round
+batch carries τ as its leading axis, so every distinct τ is a distinct
+XLA program. The controller only ever doubles or halves τ inside
+[τ_min, τ_max], so a run touches at most O(log τ_max) distinct values;
+:class:`RoundProgramCache` memoizes the compiled program per τ and counts
+compilations so tests can pin that bound.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.control.controller import TauController, consensus_drift
+
+
+class RoundProgramCache:
+    """Memoized ``make_program(tau) -> program`` with a compilation counter.
+
+    ``make_program`` is called at most once per distinct τ; ``compilations``
+    counts those calls (the O(log τ_max) bound the cache exists to enforce).
+    """
+
+    def __init__(self, make_program: Callable[[int], Callable]):
+        self.make_program = make_program
+        self._programs: Dict[int, Callable] = {}
+        self.compilations = 0
+
+    def program_for(self, tau: int) -> Callable:
+        if tau not in self._programs:
+            self._programs[tau] = self.make_program(tau)
+            self.compilations += 1
+        return self._programs[tau]
+
+    @property
+    def taus(self):
+        """τ values with a compiled program (sorted)."""
+        return sorted(self._programs)
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def __contains__(self, tau: int) -> bool:
+        return tau in self._programs
+
+
+class TauScheduledTrainer:
+    """Host-side driver that re-selects τ between rounds (legacy surface).
+
+    ``make_step(tau)`` must return a jitted round_step for that τ; compiled
+    steps are cached through :class:`RoundProgramCache`. Kept for the
+    pre-control-plane API (``repro.core.adaptive``): it measures consensus
+    on the *post*-boundary state with the per-leaf oracle. The production
+    path is ``Experiment.fit(adaptive_tau=...)``, which reads the fused
+    pre-boundary probe out of the round program's metrics instead.
+    """
+
+    def __init__(self, make_step: Callable[[int], Callable], controller: TauController):
+        self.programs = RoundProgramCache(make_step)
+        self.ctrl = controller
+
+    @property
+    def make_step(self) -> Callable[[int], Callable]:
+        return self.programs.make_program
+
+    @property
+    def _cache(self) -> Dict[int, Callable]:
+        # legacy attribute: the underlying {tau: program} dict
+        return self.programs._programs
+
+    def step_for(self, tau: int) -> Callable:
+        return self.programs.program_for(tau)
+
+    def run_round(self, state, batch_fn):
+        tau = self.ctrl.tau
+        step = self.step_for(tau)
+        batch = batch_fn(tau)
+        state, metrics = step(state, batch)
+        drift, scale = consensus_drift(state.x)
+        self.ctrl.update(float(drift), float(scale))
+        return state, metrics, tau

@@ -1,87 +1,40 @@
-"""Adaptive communication period (beyond-paper extension).
+"""Deprecated location — the adaptive-τ machinery moved to ``repro.control``.
 
-The paper fixes τ per run and points at its companion work (ref. [14],
-AdaComm) for adapting it. We implement the natural controller for
-Overlap-Local-SGD: grow τ while the anchor communication stays hidden and
-the workers' *consensus distance* stays a small fraction of the parameter
-norm, shrink it when local models drift too far (the non-IID failure mode of
-Table 2).
-
-    τ_{r+1} = clip(τ_r · 2,      if  drift_r < lo · scale_r
-              τ_r,               if  lo·scale ≤ drift ≤ hi·scale
-              max(τ_r / 2, 1),   if  drift_r > hi · scale_r)
-
-with drift_r = mean_i ‖x_i − x̄‖ and scale_r = ‖x̄‖. The controller runs on
-the host between rounds (τ is a static shape parameter of the compiled round
-program; the framework keeps one jitted round_step per τ in a small cache).
+The original module mixed the controller, the consensus measurement and
+the per-τ program cache into one file (and shipped a shared-mutable
+``history: list = None`` default on the controller). The control plane now
+lives in :mod:`repro.control` (DESIGN.md §6): ``TauController`` /
+``AdaptiveTau`` and ``consensus_drift`` in ``repro.control.controller``,
+``TauScheduledTrainer`` (on top of ``RoundProgramCache``) in
+``repro.control.program_cache``. This shim re-exports the legacy names
+with a :class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Dict
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+_MOVED = {
+    "AdaptiveTau": "repro.control",
+    "TauScheduledTrainer": "repro.control",
+    "consensus_drift": "repro.control",
+}
 
-
-@dataclass
-class AdaptiveTau:
-    tau: int = 1
-    tau_min: int = 1
-    tau_max: int = 32
-    lo: float = 0.01  # drift/scale below this: communicate less often
-    hi: float = 0.05  # drift/scale above this: communicate more often
-    history: list = None
-
-    def __post_init__(self):
-        self.history = []
-
-    def update(self, drift: float, scale: float) -> int:
-        ratio = drift / max(scale, 1e-12)
-        old = self.tau
-        if ratio < self.lo:
-            self.tau = min(self.tau * 2, self.tau_max)
-        elif ratio > self.hi:
-            self.tau = max(self.tau // 2, self.tau_min)
-        self.history.append(dict(tau=old, drift_ratio=ratio, next_tau=self.tau))
-        return self.tau
+__all__ = sorted(_MOVED)
 
 
-def consensus_drift(x_stacked) -> tuple:
-    """(mean_i ‖x_i − x̄‖, ‖x̄‖) over the stacked worker params."""
-    leaves = jax.tree.leaves(x_stacked)
-    sq_drift = 0.0
-    sq_scale = 0.0
-    for t in leaves:
-        tf = t.astype(jnp.float32)
-        mean = jnp.mean(tf, axis=0, keepdims=True)
-        sq_drift += jnp.sum(jnp.square(tf - mean)) / t.shape[0]
-        sq_scale += jnp.sum(jnp.square(mean))
-    return jnp.sqrt(sq_drift), jnp.sqrt(sq_scale)
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.core.adaptive.{name} moved to {_MOVED[name]}.{name}; "
+            "repro.core.adaptive is a deprecated alias and will be removed.",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        import repro.control as _control
+
+        return getattr(_control, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-class TauScheduledTrainer:
-    """Host-side driver that re-selects τ between rounds.
-
-    ``make_step(tau)`` must return a jitted round_step for that τ; compiled
-    steps are cached (τ only takes O(log τ_max) distinct values)."""
-
-    def __init__(self, make_step: Callable[[int], Callable], controller: AdaptiveTau):
-        self.make_step = make_step
-        self.ctrl = controller
-        self._cache: Dict[int, Callable] = {}
-
-    def step_for(self, tau: int) -> Callable:
-        if tau not in self._cache:
-            self._cache[tau] = self.make_step(tau)
-        return self._cache[tau]
-
-    def run_round(self, state, batch_fn):
-        tau = self.ctrl.tau
-        step = self.step_for(tau)
-        batch = batch_fn(tau)
-        state, metrics = step(state, batch)
-        drift, scale = consensus_drift(state.x)
-        self.ctrl.update(float(drift), float(scale))
-        return state, metrics, tau
+def __dir__():
+    return sorted(set(globals()) | set(_MOVED))

@@ -69,6 +69,7 @@ import numpy as np
 
 from repro.config.base import AlgoConfig
 from repro.kernels.anchor_mix import ops as anchor_ops
+from repro.kernels.consensus_probe import ops as probe_ops
 from repro.parallel import anchor_axes, current_mesh
 from repro.parallel.packing import Packed, buffer_map, leaf_segments, pack, packed_like, unpack
 from repro.utils.tree import tree_lerp
@@ -307,7 +308,7 @@ class CommStrategy:
         consumption point."""
         return vars, None
 
-    def boundary_round(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    def boundary_round(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
         """One full round boundary: the apply phase then the launch phase.
 
         This is what the round engine calls. The two-phase contract is
@@ -322,18 +323,30 @@ class CommStrategy:
         the plane-resident engine hands over the plane its scan carries and
         gets the plane back (no pack/unpack seam at round granularity);
         per-leaf callers keep pytree-in/pytree-out semantics.
+
+        With ``probe`` the boundary additionally measures the *pre-boundary*
+        plane's consensus distance for the adaptive-τ controller
+        (DESIGN.md §6) and returns a 4-tuple
+        ``(x, vars, inflight, ConsensusStats)``. Pullback-family strategies
+        get the stats as fused extra outputs of their existing boundary
+        kernels (zero extra launches); strategies whose boundary does not
+        read the plane through the pullback run the standalone probe
+        (≤ 1 launch per dtype bucket).
         """
         if self.packed:
-            return self._packed_boundary(x_stacked, vars, inflight, axes_tree)
-        return self._boundary_phases(x_stacked, vars, inflight, axes_tree)
+            return self._packed_boundary(x_stacked, vars, inflight, axes_tree, probe=probe)
+        return self._boundary_phases(x_stacked, vars, inflight, axes_tree, probe=probe)
 
-    def _boundary_phases(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    def _boundary_phases(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
         """The shared two-phase composition: apply, then launch."""
+        stats = probe_ops.tree_probe(x_stacked) if probe else None
         x_stacked, vars = self.boundary_apply(x_stacked, vars, inflight, axes_tree)
         vars, inflight = self.boundary_launch(x_stacked, vars, axes_tree)
+        if probe:
+            return x_stacked, vars, inflight, stats
         return x_stacked, vars, inflight
 
-    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
         """Packed-plane boundary; strategies with boundary math override.
 
         Strategies with *no* boundary math at all (base, sync_sgd,
@@ -344,11 +357,17 @@ class CommStrategy:
         base_apply = type(self).boundary_apply is CommStrategy.boundary_apply
         base_launch = type(self).boundary_launch is CommStrategy.boundary_launch
         if base_apply and base_launch:
+            if probe:
+                return x_stacked, vars, None, probe_ops.packed_probe(_as_plane(x_stacked))
             return x_stacked, vars, None  # launch phase would carry None
         if isinstance(x_stacked, Packed):
-            x_tree, vars, inflight = self._boundary_phases(unpack(x_stacked), vars, inflight, axes_tree)
-            return pack(x_tree, layout=x_stacked.layout, lead=1), vars, inflight
-        return self._boundary_phases(x_stacked, vars, inflight, axes_tree)
+            outs = self._boundary_phases(unpack(x_stacked), vars, inflight, axes_tree, probe=probe)
+            x_tree, vars, inflight = outs[0], outs[1], outs[2]
+            px = pack(x_tree, layout=x_stacked.layout, lead=1)
+            if probe:
+                return px, vars, inflight, outs[3]
+            return px, vars, inflight
+        return self._boundary_phases(x_stacked, vars, inflight, axes_tree, probe=probe)
 
     # ---- AOT spec support (launch/specs.py) ----
     def state_axes(self, axes_tree) -> Tuple[Optional[AlgoVars], Any]:
@@ -408,11 +427,15 @@ class LocalSGDStrategy(CommStrategy):
         avg = _worker_mean(x_stacked)
         return _broadcast_like(avg, x_stacked), vars
 
-    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False):
         px = _as_plane(x_stacked)
+        # standalone probe of the pre-average plane: post-boundary drift is
+        # identically zero here, so the controller must see the round-end one
+        stats = probe_ops.packed_probe(px) if probe else None
         avg = _packed_worker_mean(px)
         x_new = buffer_map(lambda a, b: jnp.broadcast_to(a[None], b.shape), avg, px, layout=px.layout)
-        return _match_rep(x_stacked, x_new), vars, None
+        out = (_match_rep(x_stacked, x_new), vars, None)
+        return out + (stats,) if probe else out
 
 
 class OverlapLocalSGDStrategy(CommStrategy):
@@ -475,16 +498,18 @@ class OverlapLocalSGDStrategy(CommStrategy):
             z_new = mean_x
         return vars, _constrain_anchor(z_new, axes_tree)
 
-    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
         """Both phases in one fused kernel per dtype bucket: the pullback
         (eq. 4) writes the plane whose worker mean (eq. 5, + momentum
-        eqs. 10-11) is computed in the same HBM pass."""
+        eqs. 10-11) is computed in the same HBM pass. With ``probe`` the
+        same launches also emit the consensus partial sums — zero extra
+        kernel launches for the adaptive-τ probe."""
         alpha = self.cfg.alpha
         px = _as_plane(x_stacked)
         if self.momentum:
             beta = self.cfg.anchor_beta
             outs = [
-                anchor_ops.pullback_mean_momentum(bx, bz, bv, alpha, beta)
+                anchor_ops.pullback_mean_momentum(bx, bz, bv, alpha, beta, probe=probe)
                 for bx, bz, bv in zip(px.buffers, inflight.buffers, vars.v.buffers)
             ]
             x_new = Packed(tuple(o[0] for o in outs), px.layout)
@@ -493,12 +518,16 @@ class OverlapLocalSGDStrategy(CommStrategy):
             vars = AlgoVars(z=inflight, v=v_new, extra=vars.extra)
         else:
             outs = [
-                anchor_ops.pullback_mean(bx, bz, alpha)
+                anchor_ops.pullback_mean(bx, bz, alpha, probe=probe)
                 for bx, bz in zip(px.buffers, inflight.buffers)
             ]
             x_new = Packed(tuple(o[0] for o in outs), px.layout)
             z_next = Packed(tuple(o[1] for o in outs), inflight.layout)
-        return _match_rep(x_stacked, x_new), vars, _constrain_anchor_packed(z_next, axes_tree)
+        result = (_match_rep(x_stacked, x_new), vars, _constrain_anchor_packed(z_next, axes_tree))
+        if probe:
+            stats = probe_ops.stats_from_partials([o[-1] for o in outs], x_stacked_leading(x_stacked))
+            return result + (stats,)
+        return result
 
     def state_axes(self, axes_tree):
         if self.packed:
@@ -534,13 +563,14 @@ class EASGDStrategy(CommStrategy):
         z_new = _constrain_anchor(tree_lerp(z, mean_x, rate), axes_tree)
         return x_new, AlgoVars(z=z_new, v=vars.v, extra=vars.extra)
 
-    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
         alpha = self.cfg.alpha
         rate = min(alpha * x_stacked_leading(x_stacked), 1.0)
         px = _as_plane(x_stacked)
-        # fused pullback + pre-pullback mean (EASGD's symmetric W) per bucket
+        # fused pullback + pre-pullback mean (EASGD's symmetric W) per bucket;
+        # with probe the same launches emit the consensus partial sums
         outs = [
-            anchor_ops.pullback_mean(bx, bz, alpha, mean_pre=True)
+            anchor_ops.pullback_mean(bx, bz, alpha, mean_pre=True, probe=probe)
             for bx, bz in zip(px.buffers, vars.z.buffers)
         ]
         x_new = Packed(tuple(o[0] for o in outs), px.layout)
@@ -550,7 +580,11 @@ class EASGDStrategy(CommStrategy):
             vars.z.layout,
         )
         z_new = _constrain_anchor_packed(z_new, axes_tree)
-        return _match_rep(x_stacked, x_new), AlgoVars(z=z_new, v=vars.v, extra=vars.extra), None
+        result = (_match_rep(x_stacked, x_new), AlgoVars(z=z_new, v=vars.v, extra=vars.extra), None)
+        if probe:
+            stats = probe_ops.stats_from_partials([o[-1] for o in outs], x_stacked_leading(x_stacked))
+            return result + (stats,)
+        return result
 
     def state_axes(self, axes_tree):
         if self.packed:
@@ -612,9 +646,14 @@ class CoCoDStrategy(_AvgRebaseStrategy):
     def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
         return self._rebase(x_stacked, inflight), vars
 
-    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
-        x_new = self._rebase_packed(_as_plane(x_stacked), inflight)
-        return _match_rep(x_stacked, x_new), vars, self._packed_launch(x_new)
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False):
+        px = _as_plane(x_stacked)
+        # rebase does not read through the pullback kernels, so the probe is
+        # the standalone per-bucket launch on the pre-rebase plane
+        stats = probe_ops.packed_probe(px) if probe else None
+        x_new = self._rebase_packed(px, inflight)
+        out = (_match_rep(x_stacked, x_new), vars, self._packed_launch(x_new))
+        return out + (stats,) if probe else out
 
 
 class PowerSGDStrategy(CommStrategy):
@@ -703,14 +742,17 @@ class DelayedAveragingStrategy(_AvgRebaseStrategy):
             return self._rebase(x_stacked, inflight), vars
         return x_stacked, vars
 
-    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None):
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False):
         px = _as_plane(x_stacked)
+        stats = probe_ops.packed_probe(px) if probe else None
         if self.delay >= self.tau:
             x_new = self._rebase_packed(px, inflight)
-            return _match_rep(x_stacked, x_new), vars, self._packed_launch(x_new)
+            out = (_match_rep(x_stacked, x_new), vars, self._packed_launch(x_new))
+            return out + (stats,) if probe else out
         # mid-round consumption already happened; launch from the live plane
         # (x passes through in the caller's representation)
-        return x_stacked, vars, self._packed_launch(px)
+        out = (x_stacked, vars, self._packed_launch(px))
+        return out + (stats,) if probe else out
 
 
 def sparsify_topk(delta, k: float):
@@ -791,12 +833,13 @@ class SparseAnchorStrategy(CommStrategy):
         z_new = _constrain_anchor(z_new, axes_tree)
         return AlgoVars(z=vars.z, v=vars.v, extra=err), z_new
 
-    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
         px = _as_plane(x_stacked)
         # fused pullback + post-pullback mean; the consumed anchor (inflight)
-        # is the base of this round's launched delta
+        # is the base of this round's launched delta. With probe the same
+        # launches emit the consensus partial sums.
         outs = [
-            anchor_ops.pullback_mean(bx, bz, self.cfg.alpha)
+            anchor_ops.pullback_mean(bx, bz, self.cfg.alpha, probe=probe)
             for bx, bz in zip(px.buffers, inflight.buffers)
         ]
         x_new = Packed(tuple(o[0] for o in outs), px.layout)
@@ -819,7 +862,11 @@ class SparseAnchorStrategy(CommStrategy):
             z_next = Packed(tuple(z_bufs), inflight.layout)
             err = Packed(tuple(err_bufs), vars.extra.layout)
         z_next = _constrain_anchor_packed(z_next, axes_tree)
-        return _match_rep(x_stacked, x_new), AlgoVars(z=inflight, v=vars.v, extra=err), z_next
+        result = (_match_rep(x_stacked, x_new), AlgoVars(z=inflight, v=vars.v, extra=err), z_next)
+        if probe:
+            stats = probe_ops.stats_from_partials([o[-1] for o in outs], x_stacked_leading(x_stacked))
+            return result + (stats,)
+        return result
 
     def state_axes(self, axes_tree):
         if self.packed:

@@ -16,6 +16,16 @@ written x). The worker mean is computed per block entirely in VMEM: the
 worker axis m lives inside the block, so no cross-program reduction is
 needed and each grid step writes its (block,) slice of every output.
 
+With ``probe=True`` the ``pullback_mean(_momentum)`` variants additionally
+emit the consensus-distance partial sums of the adaptive-τ controller
+(DESIGN.md §6) as one extra (2, 128) output: Σ(x_i − x̄)² and Σ x̄² of the
+*pre-pullback* plane, computed from the block already resident in VMEM and
+accumulated across the sequential grid — the boundary's HBM traffic and
+launch count are unchanged (the zero-extra-launch contract pinned by the
+probe tests). The probe mean is always the pre-pullback worker mean, so the
+stats measure the drift the workers accumulated over the round regardless
+of ``mean_pre``.
+
 All cast chains mirror ``ref.py`` exactly — the packed boundary must stay
 bitwise identical to the per-leaf reference path.
 """
@@ -26,6 +36,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.consensus_probe.kernel import LANE, probe_block
 
 
 def _mix_kernel(x_ref, z_ref, o_ref, *, alpha: float):
@@ -53,7 +66,30 @@ def anchor_mix_flat(x, z, *, alpha: float, block: int = 1 << 16, interpret: bool
     )(x, z)
 
 
-def _pullback_mean_kernel(x_ref, z_ref, xo_ref, mo_ref, *, alpha: float, mean_pre: bool):
+def _accum_probe(x, st_ref, acc_ref):
+    """Accumulate the consensus partial sums of the pre-pullback tile x
+    (m, block) into the VMEM scratch; the final grid step writes the
+    (2, 128) output. Same lane-reduced accumulation as the standalone
+    ``consensus_probe`` kernel."""
+    i = pl.program_id(0)
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=0)  # (block,)
+    drift = jnp.sum(jnp.square(xf - mean[None, :]).reshape(-1, LANE), axis=0)
+    scale = jnp.sum(jnp.square(mean).reshape(-1, LANE), axis=0)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[0, :] += drift
+    acc_ref[1, :] += scale
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _():
+        st_ref[...] = acc_ref[...]
+
+
+def _pullback_mean_kernel(x_ref, z_ref, xo_ref, mo_ref, *refs, alpha: float, mean_pre: bool, probe: bool):
     z = z_ref[...].astype(jnp.float32)  # (block,)
     x = x_ref[...]  # (m, block)
     x_new = ((1.0 - alpha) * x.astype(jnp.float32) + alpha * z[None, :]).astype(xo_ref.dtype)
@@ -62,37 +98,50 @@ def _pullback_mean_kernel(x_ref, z_ref, xo_ref, mo_ref, *, alpha: float, mean_pr
     # mean over the worker axis lives inside the block — matches
     # jnp.mean(src, axis=0, dtype=f32).astype(param dtype) of the ref path
     mo_ref[...] = jnp.mean(src.astype(jnp.float32), axis=0).astype(mo_ref.dtype)
+    if probe:
+        st_ref, acc_ref = refs
+        _accum_probe(x, st_ref, acc_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "mean_pre", "block", "interpret"))
-def pullback_mean_flat(x, z, *, alpha: float, mean_pre: bool = False, block: int = 1 << 13, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("alpha", "mean_pre", "block", "probe", "interpret"))
+def pullback_mean_flat(x, z, *, alpha: float, mean_pre: bool = False, block: int = 1 << 13, probe: bool = False, interpret: bool = False):
     """x: (m, n) stacked plane, z: (n,) anchor plane; n % 128 == 0.
 
-    Returns (x_new, worker_mean) in one HBM pass.
+    Returns (x_new, worker_mean) in one HBM pass; with ``probe`` also the
+    (2, 128) consensus partial sums of the pre-pullback plane, in the same
+    launch.
     """
     m, n = x.shape
-    block = min(block, n)
+    block = probe_block(n, block) if probe else min(block, n)
     grid = (pl.cdiv(n, block),)
+    out_specs = [
+        pl.BlockSpec((m, block), lambda i: (0, i)),
+        pl.BlockSpec((block,), lambda i: (i,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), x.dtype),
+        jax.ShapeDtypeStruct((n,), x.dtype),
+    ]
+    scratch = []
+    if probe:
+        out_specs.append(pl.BlockSpec((2, LANE), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((2, LANE), jnp.float32))
+        scratch.append(pltpu.VMEM((2, LANE), jnp.float32))
     return pl.pallas_call(
-        functools.partial(_pullback_mean_kernel, alpha=alpha, mean_pre=mean_pre),
+        functools.partial(_pullback_mean_kernel, alpha=alpha, mean_pre=mean_pre, probe=probe),
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, block), lambda i: (0, i)),
             pl.BlockSpec((block,), lambda i: (i,)),
         ],
-        out_specs=[
-            pl.BlockSpec((m, block), lambda i: (0, i)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, n), x.dtype),
-            jax.ShapeDtypeStruct((n,), x.dtype),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(x, z)
 
 
-def _pullback_momentum_kernel(x_ref, z_ref, v_ref, xo_ref, zo_ref, vo_ref, *, alpha: float, beta: float):
+def _pullback_momentum_kernel(x_ref, z_ref, v_ref, xo_ref, zo_ref, vo_ref, *refs, alpha: float, beta: float, probe: bool):
     z = z_ref[...].astype(jnp.float32)  # (block,)
     x_new = ((1.0 - alpha) * x_ref[...].astype(jnp.float32) + alpha * z[None, :]).astype(xo_ref.dtype)
     xo_ref[...] = x_new
@@ -100,35 +149,47 @@ def _pullback_momentum_kernel(x_ref, z_ref, v_ref, xo_ref, zo_ref, vo_ref, *, al
     v_new = (beta * v_ref[...].astype(jnp.float32) + (mean.astype(jnp.float32) - z)).astype(vo_ref.dtype)
     vo_ref[...] = v_new
     zo_ref[...] = (z + v_new.astype(jnp.float32)).astype(zo_ref.dtype)
+    if probe:
+        st_ref, acc_ref = refs
+        _accum_probe(x_ref[...], st_ref, acc_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "beta", "block", "interpret"))
-def pullback_momentum_flat(x, z, v, *, alpha: float, beta: float, block: int = 1 << 13, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "block", "probe", "interpret"))
+def pullback_momentum_flat(x, z, v, *, alpha: float, beta: float, block: int = 1 << 13, probe: bool = False, interpret: bool = False):
     """x: (m, n), z/v: (n,); n % 128 == 0.
 
     Returns (x_new, z_next, v_new): eq. (4) pullback + eqs. (10)-(11) anchor
-    momentum, one read of each input, one write of each output.
+    momentum, one read of each input, one write of each output; with
+    ``probe`` also the (2, 128) consensus partial sums, in the same launch.
     """
     m, n = x.shape
-    block = min(block, n)
+    block = probe_block(n, block) if probe else min(block, n)
     grid = (pl.cdiv(n, block),)
+    out_specs = [
+        pl.BlockSpec((m, block), lambda i: (0, i)),
+        pl.BlockSpec((block,), lambda i: (i,)),
+        pl.BlockSpec((block,), lambda i: (i,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), x.dtype),
+        jax.ShapeDtypeStruct((n,), z.dtype),
+        jax.ShapeDtypeStruct((n,), v.dtype),
+    ]
+    scratch = []
+    if probe:
+        out_specs.append(pl.BlockSpec((2, LANE), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((2, LANE), jnp.float32))
+        scratch.append(pltpu.VMEM((2, LANE), jnp.float32))
     return pl.pallas_call(
-        functools.partial(_pullback_momentum_kernel, alpha=alpha, beta=beta),
+        functools.partial(_pullback_momentum_kernel, alpha=alpha, beta=beta, probe=probe),
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, block), lambda i: (0, i)),
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
         ],
-        out_specs=[
-            pl.BlockSpec((m, block), lambda i: (0, i)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, n), x.dtype),
-            jax.ShapeDtypeStruct((n,), z.dtype),
-            jax.ShapeDtypeStruct((n,), v.dtype),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(x, z, v)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.kernels import flags
 from repro.kernels.anchor_mix import kernel as _k
 from repro.kernels.anchor_mix import ref as _ref
+from repro.kernels.consensus_probe import ref as _probe_ref
 
 
 def _pad_last(a, pad: int):
@@ -43,35 +44,51 @@ def anchor_mix(x, z, alpha: float):
     return out.reshape(shape)
 
 
-def pullback_mean(x, z, alpha: float, mean_pre: bool = False):
+def pullback_mean(x, z, alpha: float, mean_pre: bool = False, probe: bool = False):
     """Fused eq. (4) + worker mean on a stacked plane. x: (m, n), z: (n,).
-    Returns (x_new, mean). Aligned buffers (n % 128 == 0) run pad-free."""
+    Returns (x_new, mean). Aligned buffers (n % 128 == 0) run pad-free.
+
+    With ``probe`` also returns the consensus-distance raw sums
+    ``(drift_sq, scale_sq)`` of the pre-pullback plane (DESIGN.md §6) as
+    extra outputs of the SAME kernel launch — the adaptive-τ probe rides
+    the boundary's existing HBM pass."""
     if not flags.use_pallas():
-        return _ref.pullback_mean(x, z, alpha, mean_pre=mean_pre)
+        out = _ref.pullback_mean(x, z, alpha, mean_pre=mean_pre)
+        return (out + (_probe_ref.plane_probe(x),)) if probe else out
     n = x.shape[-1]
     pad = (-n) % 128
-    x_new, mean = _k.pullback_mean_flat(
+    outs = _k.pullback_mean_flat(
         _pad_last(x, pad), _pad_last(z, pad),
-        alpha=float(alpha), mean_pre=mean_pre, interpret=flags.interpret_mode(),
+        alpha=float(alpha), mean_pre=mean_pre, probe=probe, interpret=flags.interpret_mode(),
     )
+    x_new, mean = outs[0], outs[1]
     if pad:
         x_new, mean = x_new[:, :n], mean[:n]
+    if probe:
+        st = outs[2]
+        return x_new, mean, (jnp.sum(st[0]), jnp.sum(st[1]))
     return x_new, mean
 
 
-def pullback_mean_momentum(x, z, v, alpha: float, beta: float):
+def pullback_mean_momentum(x, z, v, alpha: float, beta: float, probe: bool = False):
     """Fused eq. (4) + eqs. (10)-(11) on a stacked plane. x: (m, n), z/v: (n,).
-    Returns (x_new, z_next, v_new)."""
+    Returns (x_new, z_next, v_new); with ``probe`` also the pre-pullback
+    ``(drift_sq, scale_sq)`` raw sums, from the same launch."""
     if not flags.use_pallas():
-        return _ref.pullback_mean_momentum(x, z, v, alpha, beta)
+        out = _ref.pullback_mean_momentum(x, z, v, alpha, beta)
+        return (out + (_probe_ref.plane_probe(x),)) if probe else out
     n = x.shape[-1]
     pad = (-n) % 128
-    x_new, z_next, v_new = _k.pullback_momentum_flat(
+    outs = _k.pullback_momentum_flat(
         _pad_last(x, pad), _pad_last(z, pad), _pad_last(v, pad),
-        alpha=float(alpha), beta=float(beta), interpret=flags.interpret_mode(),
+        alpha=float(alpha), beta=float(beta), probe=probe, interpret=flags.interpret_mode(),
     )
+    x_new, z_next, v_new = outs[0], outs[1], outs[2]
     if pad:
         x_new, z_next, v_new = x_new[:, :n], z_next[:n], v_new[:n]
+    if probe:
+        st = outs[3]
+        return x_new, z_next, v_new, (jnp.sum(st[0]), jnp.sum(st[1]))
     return x_new, z_next, v_new
 
 

@@ -1,0 +1,24 @@
+"""Fused consensus-distance probe over the packed parameter plane.
+
+Feeds the adaptive-τ controller (DESIGN.md §6): per-dtype-bucket partial
+sums of ‖x_i − x̄‖² and ‖x̄‖² over the worker-stacked flat buffers, in the
+same HBM pass shape as the ``anchor_mix`` boundary kernels. Strategies whose
+boundary already runs ``pullback_mean(_momentum)`` get the probe fused into
+those kernels (zero extra launches); everything else uses the standalone
+one-launch-per-bucket probe here.
+"""
+from repro.kernels.consensus_probe.ops import (
+    ConsensusStats,
+    packed_probe,
+    probe_buffer,
+    stats_from_partials,
+    tree_probe,
+)
+
+__all__ = [
+    "ConsensusStats",
+    "packed_probe",
+    "probe_buffer",
+    "stats_from_partials",
+    "tree_probe",
+]

@@ -1,0 +1,80 @@
+"""Consensus-probe Pallas TPU kernel — standalone form.
+
+One pass over the worker-stacked flat buffer x (m, n): per block the worker
+mean, the squared deviations and the squared mean are computed entirely in
+VMEM (the worker axis m lives inside the block, exactly the ``anchor_mix``
+boundary tile shape), reduced to 128-lane partial sums and accumulated in a
+VMEM scratch across the sequential grid. The last grid step writes the
+(2, 128) partial-sum output — row 0 the drift sum Σ(x_i − x̄)², row 1 the
+scale sum Σ x̄² — which the ops wrapper reduces to two f32 scalars.
+
+This is the ≤ 1-launch-per-dtype-bucket path for strategies whose boundary
+does not already read the plane through ``pullback_mean`` (local_sgd, the
+avg-rebase family, strategies with no boundary math). Pullback-family
+strategies get the same partial sums fused into their existing boundary
+kernels (``anchor_mix.kernel`` with ``probe=True``) for zero extra
+launches.
+
+The grid accumulation requires the single grid dimension to execute
+sequentially (the Pallas TPU default for an un-annotated grid; interpret
+mode is sequential by construction), and the block size must divide n so no
+ragged tail feeds garbage into the sums — ``probe_block`` picks the largest
+lane-aligned divisor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def probe_block(n: int, block: int) -> int:
+    """Largest multiple of 128 that is ≤ ``block`` and divides n (n must be
+    lane-aligned). Reduction kernels cannot tolerate a ragged final block."""
+    block = min(block, n)
+    block -= block % LANE
+    while n % block:
+        block -= LANE
+    return block
+
+
+def _probe_kernel(x_ref, st_ref, acc_ref):
+    i = pl.program_id(0)
+    xf = x_ref[...].astype(jnp.float32)  # (m, block)
+    mean = jnp.mean(xf, axis=0)  # (block,)
+    drift = jnp.sum(jnp.square(xf - mean[None, :]).reshape(-1, LANE), axis=0)
+    scale = jnp.sum(jnp.square(mean).reshape(-1, LANE), axis=0)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[0, :] += drift
+    acc_ref[1, :] += scale
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _():
+        st_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def probe_flat(x, *, block: int = 1 << 13, interpret: bool = False):
+    """x: (m, n) stacked plane, n % 128 == 0. Returns (2, 128) f32 partial
+    sums (row 0: Σ(x_i − x̄)², row 1: Σ x̄²)."""
+    m, n = x.shape
+    block = probe_block(n, block)
+    grid = (n // block,)
+    return pl.pallas_call(
+        _probe_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((2, LANE), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, LANE), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((2, LANE), jnp.float32)],
+        interpret=interpret,
+    )(x)

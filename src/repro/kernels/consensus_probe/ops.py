@@ -1,0 +1,80 @@
+"""Public wrappers for the consensus-probe kernel family.
+
+``probe_buffer`` measures one worker-stacked flat buffer (one launch on
+TPU, the jnp oracle elsewhere); ``packed_probe`` sweeps a whole
+:class:`repro.parallel.packing.Packed` plane (≤ 1 launch per dtype bucket)
+and aggregates into the :class:`ConsensusStats` pair the adaptive-τ
+controller consumes. ``stats_from_partials`` is the shared aggregation used
+by strategies that collect the same per-bucket raw sums as fused extra
+outputs of their boundary kernels (``anchor_mix`` with ``probe=True``) —
+zero extra launches on that path.
+
+Padding lanes are zero-filled by ``pack`` and stay zero through training
+(optimizer cotangents and anchors are zero there too), so full-buffer sums
+equal per-leaf sums up to f32 summation order; the bit-exact per-leaf
+oracle is :func:`repro.control.consensus_drift` (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flags
+from repro.kernels.consensus_probe import kernel as _k
+from repro.kernels.consensus_probe import ref as _ref
+from repro.parallel.packing import Packed
+
+
+class ConsensusStats(NamedTuple):
+    """The controller's two inputs, as traced f32 scalars:
+    drift = mean_i ‖x_i − x̄‖ (RMS-aggregated), scale = ‖x̄‖."""
+
+    drift: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def probe_buffer(x):
+    """x: (m, n) stacked flat buffer -> (drift_sq, scale_sq) raw f32 sums
+    (not yet divided by m). One kernel launch on TPU; jnp oracle elsewhere.
+    Buffers already lane-aligned (packed planes always are) run pad-free."""
+    if not flags.use_pallas():
+        return _ref.plane_probe(x)
+    n = x.shape[-1]
+    pad = (-n) % 128
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad)])  # zeros: contribute 0 to both sums
+    st = _k.probe_flat(x, interpret=flags.interpret_mode())
+    return jnp.sum(st[0]), jnp.sum(st[1])
+
+
+def stats_from_partials(partials, m: int) -> ConsensusStats:
+    """Aggregate per-bucket ``(drift_sq, scale_sq)`` raw sums into the
+    controller's (drift, scale): divide the pooled drift sum by the worker
+    count once, then take square roots — the same normalization as the
+    per-leaf oracle (every leaf divides by the same m)."""
+    drift_sq = sum(p[0] for p in partials)
+    scale_sq = sum(p[1] for p in partials)
+    return ConsensusStats(jnp.sqrt(drift_sq / m), jnp.sqrt(scale_sq))
+
+
+def packed_probe(px: Packed) -> ConsensusStats:
+    """Standalone probe of a worker-stacked plane: ≤ 1 launch per dtype
+    bucket, aggregated across buckets."""
+    m = int(px.lead_shape[0]) if px.lead_shape else 1
+    return stats_from_partials([probe_buffer(b) for b in px.buffers], m)
+
+
+def tree_probe(x_stacked) -> ConsensusStats:
+    """Per-leaf pytree form (the packed=False reference path): same
+    semantics as :func:`repro.control.consensus_drift`, returned as
+    :class:`ConsensusStats`."""
+    drift_sq = 0.0
+    scale_sq = 0.0
+    for t in jax.tree.leaves(x_stacked):
+        tf = t.astype(jnp.float32)
+        mean = jnp.mean(tf, axis=0, keepdims=True)
+        drift_sq += jnp.sum(jnp.square(tf - mean)) / t.shape[0]
+        scale_sq += jnp.sum(jnp.square(mean))
+    return ConsensusStats(jnp.sqrt(drift_sq), jnp.sqrt(scale_sq))

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the consensus-distance probe.
+
+The probe measures the *round-end* (pre-boundary) worker-stacked plane: how
+far the workers drifted apart during the τ local steps, and how large the
+consensus model is — the two inputs of the adaptive-τ controller
+(DESIGN.md §6, AdaComm-style ratio test).
+
+``plane_probe`` is the per-buffer form the kernels mirror: raw f32 sums,
+NOT normalized — the aggregator (``ops.stats_from_partials``) divides the
+drift sum by the worker count m once, across all dtype buckets, matching
+the per-leaf ``repro.control.consensus_drift`` oracle up to f32 summation
+order (each leaf's elements live contiguously in exactly one bucket, and
+padding lanes are zero-filled by ``pack`` so they contribute 0 to both
+sums).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def plane_probe(x):
+    """x: (m, n) worker-stacked flat buffer.
+
+    Returns ``(drift_sq, scale_sq)`` raw f32 sums: Σ (x_i − x̄)² over all
+    workers and elements, and Σ x̄² over elements, with x̄ the per-element
+    worker mean in f32.
+    """
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=0)
+    drift_sq = jnp.sum(jnp.square(xf - mean[None, :]))
+    scale_sq = jnp.sum(jnp.square(mean))
+    return drift_sq, scale_sq

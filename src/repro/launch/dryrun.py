@@ -249,6 +249,17 @@ def run_pair(
     if composed is not None and "boundary" in composed.get("parts", {}):
         boundary_collectives = composed["parts"]["boundary"].get("collectives")
 
+    # adaptive-τ schedule cost model (train mode): the composed cost is
+    # linear in τ, so the dry-run prices the whole τ *schedule* a controller
+    # would realize — per-τ program costs + simulated trajectory against
+    # the runtime model (repro.control.schedule, DESIGN.md §6)
+    tau_schedule = None
+    if meta["mode"] == "train":
+        from repro.control import TauController, schedule_block
+
+        ctrl = TauController(tau=meta["tau"], tau_min=1, tau_max=32)
+        tau_schedule = schedule_block(meta["strategy"], ctrl, rounds=50, composed=composed)
+
     result = dict(
         meta,
         ok=True,
@@ -270,6 +281,7 @@ def run_pair(
         roofline=roof.as_dict(),
         schedule_view=roof_sched.as_dict(),
         composed=composed,
+        tau_schedule=tau_schedule,
     )
     if verbose:
         strat_note = f", strategy {meta['strategy']}" if "strategy" in meta else ""
@@ -285,6 +297,13 @@ def run_pair(
         )
         ratio = result["useful_flops_ratio"]
         print(f"   MODEL_FLOPS/HLO_FLOPS = {ratio:.3f}" if ratio else "   MODEL_FLOPS ratio n/a")
+        if tau_schedule is not None:
+            taus = [t["tau"] for t in tau_schedule["per_tau"]]
+            print(
+                f"   tau schedule: {tau_schedule['rounds']} rounds over taus {taus} "
+                f"({tau_schedule['compiled_programs']} programs), "
+                f"scheduled {tau_schedule['total_time_s']:.1f}s vs fixed-tau {tau_schedule['fixed_tau_time_s']:.1f}s"
+            )
         print(f"   collective schedule: {roof_sched.collectives}")
         print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s probes {composed['probe_s'] if composed else 0}s")
     if out_dir:

@@ -83,7 +83,12 @@ def make_round_step(
     axes_tree: Any = None,
     grad_clip: float = 0.0,
     microbatch: Optional[int] = None,
+    probe: bool = False,
 ):
+    """``probe=True`` runs the boundary with the fused consensus probe
+    (DESIGN.md §6) and adds scalar ``consensus_drift`` / ``consensus_scale``
+    metrics — the adaptive-τ controller's inputs, measured on the round-end
+    plane at zero extra kernel launches for pullback-family strategies."""
     strategy = as_strategy(strategy)
     # plane-resident local step: the scan carries the packed plane, the loss
     # is differentiated with the plane as the primal (params reach the model
@@ -180,7 +185,11 @@ def make_round_step(
         # plane (one collective + one kernel launch per boundary) and return
         # the plane itself — x never leaves the packed representation, so
         # there is no pack/unpack seam at round granularity.
-        x, vars, inflight = strategy.boundary_round(x, vars, inflight, axes_tree)
+        if probe:
+            x, vars, inflight, stats = strategy.boundary_round(x, vars, inflight, axes_tree, probe=True)
+            metrics = dict(metrics, consensus_drift=stats.drift, consensus_scale=stats.scale)
+        else:
+            x, vars, inflight = strategy.boundary_round(x, vars, inflight, axes_tree)
         new_state = TrainState(x=x, opt=opt, vars=vars, step=step, inflight=inflight)
         return new_state, metrics
 

@@ -1,0 +1,337 @@
+"""Consensus-distance probe: differential + launch-budget suite (DESIGN.md §6).
+
+Pins the adaptive-τ controller's measurement path three ways:
+
+1. differential — the packed probe (full-buffer sums over the plane) equals
+   the bit-exact per-leaf ``repro.control.consensus_drift`` oracle across
+   {f32, bf16} dtype buckets and padded (n % 128 ≠ 0) planes, on both the
+   jnp fallback and the Pallas kernels in interpret mode;
+2. fusion — ``pullback_mean(_momentum)`` with ``probe=True`` returns the
+   same stats AND bitwise-identical boundary math as ``probe=False``, and
+   every strategy's probed ``boundary_round`` leaves x/vars/inflight
+   untouched relative to the unprobed call;
+3. budget — jaxpr ``pallas_call`` counts: the probe adds ZERO launches for
+   pullback-family strategies (overlap ± momentum, easgd, sparse_anchor)
+   and exactly one launch per dtype bucket for strategies whose boundary
+   does not read the plane through the pullback (local_sgd, cocod).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AlgoConfig
+from repro.control import consensus_drift
+from repro.core import make_strategy
+from repro.kernels import flags
+from repro.kernels.anchor_mix import ops as anchor_ops
+from repro.kernels.consensus_probe import ops as probe_ops
+from repro.kernels.consensus_probe import ref as probe_ref
+from repro.kernels.consensus_probe.kernel import probe_block, probe_flat
+from repro.optim import schedules, sgd
+from repro.parallel.packing import Packed, pack
+from repro.training import make_round_step, make_train_state
+
+M = 4
+
+
+def _stacked_tree(rng, bf16=False):
+    """Worker-stacked (M, ...) tree with odd leaf sizes, so every dtype
+    bucket ends up lane-padded (total elements % 128 != 0)."""
+    mat = jnp.bfloat16 if bf16 else jnp.float32
+    return {
+        "w0": jnp.asarray(rng.normal(size=(M, 3, 5)), mat),
+        "w1": jnp.asarray(rng.normal(size=(M, 4, 6)), mat),
+        "vec": jnp.asarray(rng.normal(size=(M, 7)), jnp.float32),
+        "scalar": jnp.asarray(rng.normal(size=(M,)), jnp.float32),
+    }
+
+
+def _tol(bf16):
+    # bucket sums vs per-leaf sums differ only in f32 summation order
+    return dict(rtol=1e-5, atol=1e-6) if not bf16 else dict(rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+
+def test_probe_block_picks_lane_aligned_divisor():
+    assert probe_block(384, 1 << 13) == 384
+    assert probe_block(1024, 256) == 256
+    assert probe_block(640, 512) == 128  # largest 128-multiple dividing 640 that is <= 512
+    assert probe_block(128, 128) == 128
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [128, 384, 1024])
+def test_standalone_kernel_matches_ref_interpret(rng, dtype, n):
+    x = jnp.asarray(rng.normal(size=(M, n)).astype(np.float32)).astype(dtype)
+    d_ref, s_ref = probe_ref.plane_probe(x)
+    st = probe_flat(x, block=128, interpret=True)  # multi-block grid accumulation
+    np.testing.assert_allclose(float(jnp.sum(st[0])), float(d_ref), rtol=1e-6)
+    np.testing.assert_allclose(float(jnp.sum(st[1])), float(s_ref), rtol=1e-6)
+
+
+def test_probe_buffer_pads_with_zeros(rng):
+    # n % 128 != 0: the kernel path pads; zeros must contribute 0 to both sums
+    x = jnp.asarray(rng.normal(size=(M, 200)).astype(np.float32))
+    d_ref, s_ref = probe_ref.plane_probe(x)
+    with flags.force_pallas():
+        d_k, s_k = probe_ops.probe_buffer(x)
+    np.testing.assert_allclose(float(d_k), float(d_ref), rtol=1e-6)
+    np.testing.assert_allclose(float(s_k), float(s_ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# differential: packed probe vs per-leaf oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bf16", [False, True])
+@pytest.mark.parametrize("pallas", [False, True])
+def test_packed_probe_matches_per_leaf_oracle(rng, bf16, pallas):
+    tree = _stacked_tree(rng, bf16)
+    d_ref, s_ref = consensus_drift(tree)
+    px = pack(tree, lead=1)
+    if pallas:
+        with flags.force_pallas():
+            stats = probe_ops.packed_probe(px)
+    else:
+        stats = probe_ops.packed_probe(px)
+    np.testing.assert_allclose(float(stats.drift), float(d_ref), **_tol(bf16))
+    np.testing.assert_allclose(float(stats.scale), float(s_ref), **_tol(bf16))
+
+
+def test_tree_probe_is_the_oracle(rng):
+    tree = _stacked_tree(rng, bf16=True)
+    d, s = consensus_drift(tree)
+    stats = probe_ops.tree_probe(tree)
+    assert float(stats.drift) == float(d) and float(stats.scale) == float(s)
+
+
+# ---------------------------------------------------------------------------
+# fusion: probed boundary kernels change nothing but add the stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pallas", [False, True])
+def test_fused_pullback_mean_probe(rng, pallas):
+    x = jnp.asarray(rng.normal(size=(M, 384)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(384,)).astype(np.float32))
+    d_ref, s_ref = probe_ref.plane_probe(x)
+
+    def run():
+        plain = anchor_ops.pullback_mean(x, z, 0.6)
+        probed = anchor_ops.pullback_mean(x, z, 0.6, probe=True)
+        return plain, probed
+
+    if pallas:
+        with flags.force_pallas():
+            (x0, m0), (x1, m1, (d, s)) = run()
+    else:
+        (x0, m0), (x1, m1, (d, s)) = run()
+    assert (x0 == x1).all() and (m0 == m1).all()  # boundary math untouched
+    np.testing.assert_allclose(float(d), float(d_ref), rtol=1e-6)
+    np.testing.assert_allclose(float(s), float(s_ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("pallas", [False, True])
+def test_fused_pullback_momentum_probe(rng, pallas):
+    x = jnp.asarray(rng.normal(size=(M, 384)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(384,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(384,)).astype(np.float32))
+    d_ref, s_ref = probe_ref.plane_probe(x)  # pre-pullback plane
+
+    def run():
+        plain = anchor_ops.pullback_mean_momentum(x, z, v, 0.6, 0.7)
+        probed = anchor_ops.pullback_mean_momentum(x, z, v, 0.6, 0.7, probe=True)
+        return plain, probed
+
+    if pallas:
+        with flags.force_pallas():
+            (x0, z0, v0), (x1, z1, v1, (d, s)) = run()
+    else:
+        (x0, z0, v0), (x1, z1, v1, (d, s)) = run()
+    assert (x0 == x1).all() and (z0 == z1).all() and (v0 == v1).all()
+    np.testing.assert_allclose(float(d), float(d_ref), rtol=1e-6)
+    np.testing.assert_allclose(float(s), float(s_ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# boundary_round probe across strategies
+# ---------------------------------------------------------------------------
+
+CASES = [
+    ("overlap_local_sgd", dict(alpha=0.6, anchor_beta=0.0)),
+    ("overlap_local_sgd", dict(alpha=0.6, anchor_beta=0.7)),
+    ("easgd", dict(alpha=0.1)),
+    ("local_sgd", {}),
+    ("cocod", {}),
+    ("delayed_avg", dict(delay_steps=2)),
+    ("sparse_anchor", dict(alpha=0.6, sparse_k=0.5)),
+]
+
+
+def _boundary_state(cfg: AlgoConfig, px: Packed):
+    strat = make_strategy(cfg)
+    vars = strat.init_vars(px)
+    inflight = strat.init_inflight(px, vars)
+    return strat, vars, inflight
+
+
+@pytest.mark.parametrize("name,kw", CASES)
+@pytest.mark.parametrize("bf16", [False, True])
+def test_boundary_probe_measures_preboundary_plane(rng, name, kw, bf16):
+    """Probed boundary: stats equal the per-leaf oracle of the PRE-boundary
+    stacked tree, and x/vars/inflight are bitwise the unprobed results."""
+    tree = _stacked_tree(rng, bf16)
+    d_ref, s_ref = consensus_drift(tree)
+    cfg = AlgoConfig(name=name, tau=2, packed=True, **kw)
+    px = pack(tree, lead=1)
+    strat, vars, inflight = _boundary_state(cfg, px)
+    x0, v0, i0 = strat.boundary_round(px, vars, inflight)
+    x1, v1, i1, stats = strat.boundary_round(px, vars, inflight, probe=True)
+    for a, b in zip(jax.tree.leaves(x0), jax.tree.leaves(x1)):
+        assert (a == b).all()
+    for a, b in zip(jax.tree.leaves(v0), jax.tree.leaves(v1)):
+        assert (a == b).all()
+    for a, b in zip(jax.tree.leaves(i0), jax.tree.leaves(i1)):
+        assert (a == b).all()
+    np.testing.assert_allclose(float(stats.drift), float(d_ref), **_tol(bf16))
+    np.testing.assert_allclose(float(stats.scale), float(s_ref), **_tol(bf16))
+
+
+def test_per_leaf_boundary_probe_matches_oracle(rng):
+    """packed=False (the oracle path) probes through tree_probe."""
+    tree = _stacked_tree(rng)
+    d_ref, s_ref = consensus_drift(tree)
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, packed=False)
+    strat = make_strategy(cfg)
+    vars = strat.init_vars(tree)
+    inflight = strat.init_inflight(tree, vars)
+    _, _, _, stats = strat.boundary_round(tree, vars, inflight, probe=True)
+    assert float(stats.drift) == float(d_ref) and float(stats.scale) == float(s_ref)
+
+
+# ---------------------------------------------------------------------------
+# launch budget (jaxpr pallas_call counts)
+# ---------------------------------------------------------------------------
+
+
+def _count_primitives(jaxpr, names):
+    """Count equation primitives by name, recursing through sub-jaxprs but
+    not into pallas_call bodies (their internal ops are in-VMEM)."""
+    counts = dict.fromkeys(names, 0)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in counts:
+            counts[eqn.primitive.name] += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            sub = None
+            if isinstance(v, jax.extend.core.ClosedJaxpr):
+                sub = v.jaxpr
+            elif hasattr(v, "eqns"):
+                sub = v
+            if sub is not None:
+                for k, c in _count_primitives(sub, names).items():
+                    counts[k] += c
+    return counts
+
+
+def _boundary_launches(rng, name, kw, probe, bf16=True):
+    tree = _stacked_tree(rng, bf16)  # 2 dtype buckets
+    cfg = AlgoConfig(name=name, tau=2, packed=True, **kw)
+    px = pack(tree, lead=1)
+    strat, vars, inflight = _boundary_state(cfg, px)
+    with flags.force_pallas():
+        jaxpr = jax.make_jaxpr(lambda x, v, i: strat.boundary_round(x, v, i, probe=probe))(
+            px, vars, inflight
+        )
+    return _count_primitives(jaxpr.jaxpr, ["pallas_call"])["pallas_call"]
+
+
+@pytest.mark.parametrize(
+    "name,kw",
+    [
+        ("overlap_local_sgd", dict(alpha=0.6, anchor_beta=0.0)),
+        ("overlap_local_sgd", dict(alpha=0.6, anchor_beta=0.7)),
+        ("easgd", dict(alpha=0.1)),
+        ("sparse_anchor", dict(alpha=0.6, sparse_k=0.5)),
+    ],
+)
+def test_probe_is_free_for_pullback_family(rng, name, kw):
+    """The fused probe adds ZERO extra kernel launches: the partial sums are
+    extra outputs of the boundary kernels the strategy already runs."""
+    plain = _boundary_launches(rng, name, kw, probe=False)
+    probed = _boundary_launches(rng, name, kw, probe=True)
+    assert probed == plain, (name, plain, probed)
+    assert plain == 2  # one fused boundary kernel per dtype bucket
+
+
+@pytest.mark.parametrize("name,kw", [("local_sgd", {}), ("cocod", {})])
+def test_standalone_probe_is_one_launch_per_bucket(rng, name, kw):
+    """Strategies whose boundary never reads x through the pullback kernels
+    pay exactly one standalone probe launch per dtype bucket."""
+    plain = _boundary_launches(rng, name, kw, probe=False)
+    probed = _boundary_launches(rng, name, kw, probe=True)
+    assert probed == plain + 2, (name, plain, probed)  # +1 per bucket (2 buckets)
+
+
+def _loss(params, batch):
+    A, b = batch
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(params)])
+    r = A @ flat - b
+    loss = 0.5 * jnp.sum(r * r)
+    return loss, dict(loss=loss)
+
+
+def test_full_round_budget_unchanged_with_probe(rng):
+    """Whole-round jaxpr for the paper's strategy: probe=True keeps the
+    packed budget — 1 fused opt step + 1 fused boundary per bucket."""
+    params = {
+        "w": jnp.asarray(rng.normal(size=(3, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(5,)), jnp.float32),
+    }
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=3, alpha=0.6, anchor_beta=0.7, packed=True)
+    strat = make_strategy(cfg)
+    optimizer = sgd()
+    state = make_train_state(params, M, optimizer, strat, None)
+    n_flat = sum(l.size for l in jax.tree.leaves(params))
+    A = jnp.zeros((3, M, 4, n_flat), jnp.float32)
+    b = jnp.zeros((3, M, 4), jnp.float32)
+    counts = []
+    for probe in (False, True):
+        step = make_round_step(_loss, optimizer, strat, schedules.constant(0.03), None, probe=probe)
+        with flags.force_pallas():
+            jaxpr = jax.make_jaxpr(step)(state, (A, b))
+        counts.append(_count_primitives(jaxpr.jaxpr, ["pallas_call"])["pallas_call"])
+    assert counts[0] == counts[1] == 2, counts
+
+
+def test_round_step_probe_metrics(rng):
+    """make_round_step(probe=True) surfaces consensus_drift/_scale metrics,
+    identical (up to summation order) between plane-resident and per-leaf."""
+    params = {
+        "w": jnp.asarray(rng.normal(size=(3, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(5,)), jnp.float32),
+    }
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=True)
+    optimizer = sgd()
+    n_flat = sum(l.size for l in jax.tree.leaves(params))
+    A = jnp.asarray(rng.normal(size=(2, M, 4, n_flat)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, M, 4)), jnp.float32)
+    vals = []
+    for c in (cfg, dataclasses.replace(cfg, packed=False)):
+        strat = make_strategy(c)
+        state = make_train_state(params, M, optimizer, strat, None)
+        step = jax.jit(make_round_step(_loss, optimizer, strat, schedules.constant(0.03), None, probe=True))
+        _, ms = step(state, (A, b))
+        assert ms["consensus_drift"].shape == () and ms["consensus_scale"].shape == ()
+        assert np.isfinite(float(ms["consensus_drift"])) and float(ms["consensus_scale"]) > 0
+        vals.append((float(ms["consensus_drift"]), float(ms["consensus_scale"])))
+    np.testing.assert_allclose(vals[0], vals[1], rtol=1e-5)

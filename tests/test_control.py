@@ -1,0 +1,287 @@
+"""Adaptive-τ control plane: controller, program cache, schedule, live fit.
+
+Pins the DESIGN.md §6 subsystem:
+
+* ``TauController`` decision logic — hysteresis band (no flapping at the
+  edges), warmup/cooldown holds, τ_min/τ_max clamps, telemetry schema;
+* the mutable-default fix — two controllers never share a history list;
+* ``RoundProgramCache`` — ≤ O(log τ_max) compilations over a long
+  adaptive run;
+* the deprecating ``repro.core.adaptive`` shim;
+* ``schedule_block`` — the dry-run's τ-schedule JSON block;
+* ``Experiment.fit(adaptive_tau=...)`` end to end — τ actually grows on
+  the IID task (low drift) and shrinks on the non-IID task (high drift),
+  with the realized schedule in ``FitResult.tau_schedule``.
+"""
+import math
+import warnings
+
+import pytest
+
+from repro.api import ClassificationSpec, Experiment, TauController
+from repro.control import (
+    AdaptiveTau,
+    RoundProgramCache,
+    per_tau_costs,
+    runtime_algo,
+    schedule_block,
+    simulate_trajectory,
+)
+
+SCHEMA = {"round", "tau", "drift", "scale", "drift_ratio", "decision", "next_tau"}
+
+
+# ---------------------------------------------------------------------------
+# controller decisions
+# ---------------------------------------------------------------------------
+
+
+def test_grow_shrink_hold():
+    c = TauController(tau=4, tau_min=1, tau_max=32, lo=0.01, hi=0.05)
+    assert c.update(drift=0.005, scale=1.0) == 8  # ratio < lo → grow
+    assert c.update(drift=0.03, scale=1.0) == 8  # in band → hold
+    assert c.update(drift=0.2, scale=1.0) == 4  # ratio > hi → shrink
+    assert [h["decision"] for h in c.history] == ["grow", "hold", "shrink"]
+
+
+def test_hysteresis_band_edges_hold():
+    """Ratios exactly on lo/hi hold τ — strict inequalities are the
+    hysteresis band, so a boundary-riding signal cannot flap τ."""
+    c = TauController(tau=4, lo=0.01, hi=0.05)
+    assert c.update(drift=0.01, scale=1.0) == 4
+    assert c.update(drift=0.05, scale=1.0) == 4
+    assert [h["decision"] for h in c.history] == ["hold", "hold"]
+    # a signal jittering anywhere inside [lo, hi] never moves τ
+    c2 = TauController(tau=4, lo=0.01, hi=0.05)
+    taus = [c2.update(drift=d, scale=1.0) for d in [0.011, 0.049, 0.01, 0.05, 0.03]]
+    assert taus == [4] * 5
+    assert {h["decision"] for h in c2.history} == {"hold"}
+
+
+def test_warmup_holds_tau():
+    c = TauController(tau=2, lo=0.01, hi=0.05, warmup_rounds=3)
+    for _ in range(3):
+        assert c.update(drift=0.001, scale=1.0) == 2  # would grow, but warmup
+    assert c.update(drift=0.001, scale=1.0) == 4  # warmup over
+    assert [h["decision"] for h in c.history] == ["warmup"] * 3 + ["grow"]
+
+
+def test_cooldown_after_change():
+    c = TauController(tau=2, lo=0.01, hi=0.05, cooldown_rounds=2)
+    assert c.update(drift=0.001, scale=1.0) == 4  # grow, starts cooldown
+    assert c.update(drift=0.001, scale=1.0) == 4  # cooldown 1
+    assert c.update(drift=0.001, scale=1.0) == 4  # cooldown 2
+    assert c.update(drift=0.001, scale=1.0) == 8  # free again
+    assert [h["decision"] for h in c.history] == ["grow", "cooldown", "cooldown", "grow"]
+
+
+def test_clamps():
+    c = TauController(tau=32, tau_min=1, tau_max=32, lo=0.01, hi=0.05)
+    assert c.update(drift=0.001, scale=1.0) == 32  # at tau_max
+    assert c.history[-1]["decision"] == "clamp"
+    c2 = TauController(tau=1, tau_min=1, tau_max=32, lo=0.01, hi=0.05)
+    assert c2.update(drift=0.9, scale=1.0) == 1  # at tau_min
+    assert c2.history[-1]["decision"] == "clamp"
+
+
+def test_zero_scale_is_safe():
+    c = TauController(tau=4, lo=0.01, hi=0.05)
+    assert c.update(drift=1.0, scale=0.0) == 2  # huge ratio, no div-by-zero
+    assert math.isfinite(c.history[-1]["drift_ratio"])
+
+
+def test_telemetry_schema():
+    c = TauController(tau=2, lo=0.01, hi=0.05)
+    c.update(drift=0.001, scale=1.0)
+    c.update(drift=0.03, scale=1.0)
+    for i, h in enumerate(c.history):
+        assert set(h) == SCHEMA
+        assert h["round"] == i
+        assert h["next_tau"] == (c.history[i + 1]["tau"] if i + 1 < len(c.history) else c.tau)
+    assert c.taus_seen == [2, 4]
+
+
+def test_history_not_shared_between_instances():
+    """The legacy ``history: list = None`` mutable default is gone: fresh
+    controllers get fresh lists."""
+    a, b = TauController(), TauController()
+    assert a.history is not b.history
+    a.update(drift=0.001, scale=1.0)
+    assert b.history == []
+    a2, b2 = AdaptiveTau(), AdaptiveTau()
+    assert a2.history is not b2.history
+
+
+# ---------------------------------------------------------------------------
+# program cache
+# ---------------------------------------------------------------------------
+
+
+def test_program_cache_compiles_once_per_tau():
+    calls = []
+    cache = RoundProgramCache(lambda tau: calls.append(tau) or (lambda s: (s, tau)))
+    for tau in [1, 2, 1, 4, 2, 2, 4, 1]:
+        prog = cache.program_for(tau)
+        assert prog(None)[1] == tau
+    assert calls == [1, 2, 4]
+    assert cache.compilations == 3 == len(cache)
+    assert cache.taus == [1, 2, 4] and 2 in cache and 8 not in cache
+
+
+def test_adaptive_run_compiles_log_tau_max_programs():
+    """50 controller-driven rounds touch at most log2(τ_max)+1 distinct τ
+    values — the doubling/halving rule keeps the compile count logarithmic."""
+    ctrl = TauController(tau=2, tau_min=1, tau_max=32, lo=0.01, hi=0.05)
+    cache = RoundProgramCache(lambda tau: lambda s: s)
+    t = 0
+    for _ in range(50):
+        tau = ctrl.tau
+        cache.program_for(tau)
+        ratio = ctrl.hi * math.sqrt(tau) / math.sqrt(1.0 + t)
+        ctrl.update(drift=ratio, scale=1.0)
+        t += tau
+    bound = int(math.log2(ctrl.tau_max)) + 1
+    assert cache.compilations <= bound
+    assert set(cache.taus) == set(ctrl.taus_seen) or set(cache.taus) >= {h["tau"] for h in ctrl.history}
+
+
+# ---------------------------------------------------------------------------
+# legacy shim
+# ---------------------------------------------------------------------------
+
+
+def test_core_adaptive_shim_warns_and_forwards():
+    import repro.control as control
+    import repro.core.adaptive as legacy
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert legacy.AdaptiveTau is control.AdaptiveTau
+        assert legacy.TauScheduledTrainer is control.TauScheduledTrainer
+        assert legacy.consensus_drift is control.consensus_drift
+    assert len(w) == 3 and all(issubclass(x.category, DeprecationWarning) for x in w)
+    assert "repro.control" in str(w[0].message)
+    assert set(legacy.__all__) <= set(dir(legacy))
+    with pytest.raises(AttributeError):
+        legacy.not_a_thing
+
+
+# ---------------------------------------------------------------------------
+# schedule / cost model
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_algo_mapping():
+    assert runtime_algo("overlap_local_sgd") == "overlap_local_sgd"
+    assert runtime_algo("local_sgd") == "local_sgd"
+    assert runtime_algo("delayed_avg") == "cocod"
+    assert runtime_algo("sparse_anchor") == "overlap_local_sgd"
+    assert runtime_algo("something_else") == "local_sgd"
+
+
+def test_per_tau_costs_linear_in_tau_except_boundary():
+    composed = dict(
+        tau=2,
+        parts={
+            "block:attn": dict(mult=8.0, flops=10.0, bytes=4.0, coll=0.0),
+            "optimizer": dict(mult=2.0, flops=1.0, bytes=2.0, coll=0.0),
+            "boundary": dict(mult=1.0, flops=0.5, bytes=1.0, coll=3.0),
+        },
+    )
+    rows = {r["tau"]: r for r in per_tau_costs(composed, [1, 2, 4])}
+    # τ=2 reproduces the composed total exactly
+    assert rows[2]["flops"] == pytest.approx(8 * 10 + 2 * 1 + 0.5)
+    # τ-proportional parts halve/double; the boundary part does not
+    assert rows[1]["flops"] == pytest.approx(4 * 10 + 1 * 1 + 0.5)
+    assert rows[4]["coll"] == pytest.approx(3.0)  # collective cost is per-round
+    assert rows[4]["bytes"] == pytest.approx(2 * (8 * 4 + 2 * 2) + 1.0)
+
+
+def test_simulate_trajectory_sweeps_decisions():
+    ctrl = TauController(tau=4, tau_min=1, tau_max=32, lo=0.01, hi=0.05)
+    hist = simulate_trajectory(ctrl, 50)
+    assert len(hist) == 50
+    decisions = {h["decision"] for h in hist}
+    assert "grow" in decisions  # the √(1+t) decay eventually relaxes τ
+    assert all(ctrl.tau_min <= h["next_tau"] <= ctrl.tau_max for h in hist)
+
+
+def test_schedule_block_structure():
+    ctrl = TauController(tau=2, tau_min=1, tau_max=32, lo=0.01, hi=0.05)
+    block = schedule_block("overlap_local_sgd", ctrl, rounds=40)
+    assert set(block["controller"]) == {
+        "tau0", "tau_min", "tau_max", "lo", "hi", "warmup_rounds", "cooldown_rounds",
+    }
+    assert block["rounds"] == 40 and len(block["trajectory"]) == 40
+    assert block["total_local_steps"] == sum(t["tau"] for t in block["trajectory"])
+    assert block["compiled_programs"] <= int(math.log2(32)) + 1
+    assert block["compiled_programs"] == len(block["per_tau"])
+    assert all(r["round_time_s"] > 0 for r in block["per_tau"])
+    assert block["total_time_s"] > 0 and block["fixed_tau_time_s"] > 0
+    for t in block["trajectory"]:
+        assert set(t) == {"round", "tau", "drift_ratio", "decision", "next_tau"}
+
+
+def test_schedule_block_with_composed_costs():
+    composed = dict(
+        tau=2,
+        parts={"block:mlp": dict(mult=4.0, flops=7.0, bytes=3.0, coll=0.0),
+               "boundary": dict(mult=1.0, flops=0.1, bytes=0.2, coll=5.0)},
+    )
+    ctrl = TauController(tau=2, tau_min=1, tau_max=8, lo=0.01, hi=0.05)
+    block = schedule_block("local_sgd", ctrl, rounds=20, composed=composed)
+    for row in block["per_tau"]:
+        assert {"flops", "bytes", "coll"} <= set(row)
+        assert row["coll"] == pytest.approx(5.0)  # per-round collective
+
+
+# ---------------------------------------------------------------------------
+# live adaptive fit (Experiment.fit(adaptive_tau=...))
+# ---------------------------------------------------------------------------
+
+
+def _fit(noniid, ctrl, rounds):
+    exp = Experiment(
+        task=ClassificationSpec(noniid=noniid, seed=0),
+        strategy="overlap_local_sgd",
+        workers=4,
+        rounds=rounds,
+        seed=0,
+    )
+    res = exp.fit(adaptive_tau=ctrl)
+    return exp, res
+
+
+def test_fit_adaptive_grows_tau_on_iid():
+    """IID workers drift little → the controller lengthens the rounds."""
+    ctrl = TauController(tau=1, tau_min=1, tau_max=8, lo=0.05, hi=0.5)
+    exp, res = _fit(False, ctrl, rounds=6)
+    assert res.tau_schedule is not None and len(res.tau_schedule) == 6
+    assert max(h["next_tau"] for h in res.tau_schedule) > 1
+    assert "grow" in {h["decision"] for h in res.tau_schedule}
+    # steps counts the realized local steps, not rounds × a fixed τ
+    assert res.steps == sum(h["tau"] for h in res.tau_schedule)
+    # one compiled program per distinct τ, within the log bound
+    assert len(exp.tau_programs) == len(set(h["tau"] for h in res.tau_schedule))
+    assert len(exp.tau_programs) <= int(math.log2(ctrl.tau_max)) + 1
+    for h in res.tau_schedule:
+        assert set(h) == SCHEMA and h["drift_ratio"] > 0
+
+
+def test_fit_adaptive_shrinks_tau_on_noniid():
+    """Non-IID workers drift apart during long rounds → the controller cuts
+    τ back; the IID run at the same thresholds holds (discriminating pair)."""
+    shrink = TauController(tau=8, tau_min=1, tau_max=8, lo=0.01, hi=0.15)
+    _, res = _fit(True, shrink, rounds=4)
+    assert min(h["next_tau"] for h in res.tau_schedule) < 8
+    assert "shrink" in {h["decision"] for h in res.tau_schedule}
+    hold = TauController(tau=8, tau_min=1, tau_max=8, lo=0.01, hi=0.15)
+    _, res_iid = _fit(False, hold, rounds=1)
+    assert res_iid.tau_schedule[0]["decision"] == "hold"
+
+
+def test_fit_adaptive_losses_decrease():
+    ctrl = TauController(tau=2, tau_min=1, tau_max=8, lo=0.05, hi=0.5, warmup_rounds=1)
+    _, res = _fit(False, ctrl, rounds=5)
+    assert res.losses[-1] < res.losses[0]
+    assert res.tau_schedule[0]["decision"] == "warmup"
