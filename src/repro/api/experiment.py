@@ -97,6 +97,10 @@ class FitResult:
     # adaptive-τ runs only: one controller telemetry record per round
     # (round/tau/drift/scale/drift_ratio/decision/next_tau — DESIGN.md §6)
     tau_schedule: Optional[List[dict]] = None
+    # faulted runs only: the harness's membership records — one per round
+    # where the fleet departed from fully-live (round/live/excluded/resynced/
+    # reason — DESIGN.md §7)
+    fault_log: Optional[List[dict]] = None
 
     @property
     def final_loss(self) -> float:
@@ -226,6 +230,7 @@ class Experiment:
         steps: Optional[int] = None,
         log: Optional[Callable[[int, float], None]] = None,
         adaptive_tau: Optional[TauController] = None,
+        faults: Optional[Any] = None,
     ) -> FitResult:
         """Run the round loop. ``steps`` (local steps) is an alternative to
         ``rounds``: rounds = steps // τ. ``log(round_idx, mean_loss)`` is
@@ -237,8 +242,17 @@ class Experiment:
         at the controller's current τ through a per-τ jitted program cache,
         with the fused consensus probe feeding the controller between
         rounds. The returned :class:`FitResult` carries the realized τ
-        schedule; ``steps`` then counts the actual local steps taken."""
+        schedule; ``steps`` then counts the actual local steps taken.
+
+        ``faults`` (a :class:`repro.fault.FaultPlan`) runs the loop under
+        the deterministic fault harness (DESIGN.md §7): each round's
+        membership mask is resolved before the round, rejoining workers are
+        re-synced from the anchor, and degraded rounds run the
+        membership-masked boundary. Composes with ``adaptive_tau`` — fault
+        rounds become ``fault_hold`` controller decisions."""
         self.build()
+        if faults is not None:
+            return self._fit_faulted(faults, rounds or self.rounds, log, ctrl=adaptive_tau)
         if adaptive_tau is not None:
             return self._fit_adaptive(adaptive_tau, rounds or self.rounds, log)
         tau = self.strategy_obj.tau
@@ -259,12 +273,7 @@ class Experiment:
             losses=losses, state=state, rounds=rounds, steps=rounds * tau, wall_s=time.time() - t0
         )
 
-    def _fit_adaptive(self, ctrl: TauController, rounds: int, log) -> FitResult:
-        """The adaptive-τ round loop: τ is a static shape parameter (the
-        round batch's leading axis), so the controller swaps between the
-        O(log τ_max) compiled programs held by ``self.tau_programs``; the
-        probe-enabled round step surfaces ``consensus_drift``/``_scale``
-        metrics that drive the controller's next decision."""
+    def _ensure_tau_programs(self) -> None:
         if not hasattr(self, "tau_programs"):
             probed = make_round_step(
                 self.loss_fn,
@@ -279,6 +288,14 @@ class Experiment:
             # one jit wrapper per τ: each distinct τ is a distinct XLA
             # program (different scan trip count / batch shape)
             self.tau_programs = RoundProgramCache(lambda tau: jax.jit(probed))
+
+    def _fit_adaptive(self, ctrl: TauController, rounds: int, log) -> FitResult:
+        """The adaptive-τ round loop: τ is a static shape parameter (the
+        round batch's leading axis), so the controller swaps between the
+        O(log τ_max) compiled programs held by ``self.tau_programs``; the
+        probe-enabled round step surfaces ``consensus_drift``/``_scale``
+        metrics that drive the controller's next decision."""
+        self._ensure_tau_programs()
         losses: List[float] = []
         first = len(ctrl.history)
         total_steps = 0
@@ -302,6 +319,58 @@ class Experiment:
             steps=total_steps,
             wall_s=time.time() - t0,
             tau_schedule=list(ctrl.history[first:]),
+        )
+
+    def _fit_faulted(self, plan, rounds: int, log, ctrl: Optional[TauController] = None) -> FitResult:
+        """The fault-harness round loop (DESIGN.md §7). Each round:
+        ``harness.before_round`` resolves the plan's membership (re-syncing
+        rejoining workers' plane slices from the anchor) and stashes it in
+        the state; the round program masks its boundary accordingly. A
+        membership toggling between ``None`` (fully live) and a mask only
+        retraces the jitted step once per structure — two programs total per
+        τ. With ``ctrl``, fault rounds are fed into the controller as
+        ``fault_hold`` decisions so a crash cannot masquerade as drift."""
+        from repro.fault import FaultHarness, FaultPlan
+
+        if not isinstance(plan, FaultPlan):
+            raise TypeError(f"faults= expects a repro.fault.FaultPlan, got {type(plan).__name__}")
+        if plan.m != self.workers:
+            raise ValueError(f"fault plan is over m={plan.m} workers, experiment has workers={self.workers}")
+        harness = FaultHarness(plan)
+        if ctrl is not None:
+            self._ensure_tau_programs()
+        losses: List[float] = []
+        first = len(ctrl.history) if ctrl is not None else 0
+        total_steps = 0
+        t0 = time.time()
+        state = self.state
+        for r in range(rounds):
+            state = harness.before_round(state, r)
+            tau = ctrl.tau if ctrl is not None else self.strategy_obj.tau
+            step = self.tau_programs.program_for(tau) if ctrl is not None else self.step_fn
+            rb = round_batch(self.next_batch, tau)
+            state, ms = step(state, rb)
+            losses.append(float(np.asarray(ms["loss"]).mean()))
+            if ctrl is not None:
+                ctrl.update(
+                    float(ms["consensus_drift"]),
+                    float(ms["consensus_scale"]),
+                    fault=harness.fault_reason(r),
+                )
+            total_steps += tau
+            if log is not None:
+                log(r, losses[-1])
+        # leave the experiment fully live: a later fit() without faults=
+        # must run the unmasked (budget-pinned) program
+        self.state = state._replace(membership=None)
+        return FitResult(
+            losses=losses,
+            state=self.state,
+            rounds=rounds,
+            steps=total_steps,
+            wall_s=time.time() - t0,
+            tau_schedule=list(ctrl.history[first:]) if ctrl is not None else None,
+            fault_log=list(harness.records),
         )
 
     # -- evaluation ---------------------------------------------------------

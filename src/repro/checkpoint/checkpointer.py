@@ -108,9 +108,26 @@ def save(path: str, tree: Any) -> None:
     os.replace(tmp, path)
 
 
-def _fit_leaf(arr: np.ndarray, leaf, key: str) -> np.ndarray:
+def _fit_leaf(arr: np.ndarray, leaf, key: str, elastic: bool = False) -> np.ndarray:
     arr = np.asarray(arr)
     shape = tuple(getattr(leaf, "shape", arr.shape))
+    if (
+        elastic
+        and arr.shape != shape
+        and arr.ndim == len(shape)
+        and arr.ndim >= 1
+        and arr.shape[1:] == shape[1:]
+    ):
+        # elastic worker resize along the lead axis: a shrinking fleet keeps
+        # the first m_new slots; a growing fleet seeds new slots from slot 0
+        # (the fault harness re-syncs joining slots from the anchor on their
+        # first round anyway — DESIGN.md §7)
+        m_old, m_new = arr.shape[0], shape[0]
+        if m_new < m_old:
+            arr = arr[:m_new]
+        else:
+            pad = np.broadcast_to(arr[:1], (m_new - m_old,) + arr.shape[1:])
+            arr = np.concatenate([arr, pad], axis=0)
     if arr.shape != shape:
         # packed scalar step count ↔ per-leaf (m,) per-worker counts: the
         # workers step in lockstep, so one value describes all of them
@@ -151,13 +168,22 @@ def _expand_stored_packed(arrays: dict, layouts: dict, nodes) -> None:
 def _pack_perleaf_into(arrays: dict, prefix: str, node: Packed):
     """Per-leaf checkpoint → packed template: gather the subtree's per-leaf
     arrays (paths derived from the template layout's treedef) and pack them
-    into buffers with the template's layout."""
+    into buffers with the template's layout. The lead (worker) axis is
+    inferred from the *stored* arrays, not the template — an elastic restore
+    packs at the checkpoint's worker count and lets ``_fit_leaf`` resize."""
     lay = node.layout
     dummy = jax.tree_util.tree_unflatten(lay.treedef, list(range(lay.num_leaves)))
     flat, _ = jax.tree_util.tree_flatten_with_path(dummy)
     key_by_index = {leaf: _join(*(_path_str(p) for p in path)) for path, leaf in flat}
-    lead = tuple(int(s) for s in node.buffers[0].shape[:-1])
-    bufs = [np.zeros(tuple(b.shape), jax.numpy.dtype(b.dtype)) for b in node.buffers]
+    first_key = _join(prefix, key_by_index[lay.slots[0].index])
+    if first_key not in arrays:
+        raise KeyError(f"checkpoint missing {first_key!r} (needed to pack {prefix or '<root>'!r})")
+    a0 = np.asarray(arrays[first_key])
+    lead = tuple(int(s) for s in a0.shape[: a0.ndim - len(lay.slots[0].shape)])
+    bufs = [
+        np.zeros(lead + (int(n),), jax.numpy.dtype(d))
+        for d, n in zip(lay.bucket_dtypes, lay.bucket_sizes)
+    ]
     for slot in lay.slots:
         key = _join(prefix, key_by_index[slot.index])
         if key not in arrays:
@@ -167,7 +193,15 @@ def _pack_perleaf_into(arrays: dict, prefix: str, node: Packed):
     return bufs
 
 
-def restore(path: str, template: Any) -> Any:
+def restore(path: str, template: Any, elastic: bool = False) -> Any:
+    """Rebuild ``template``'s structure from the checkpoint at ``path``.
+
+    ``elastic`` enables worker-count resize (DESIGN.md §7): any leaf or
+    packed buffer whose trailing dims match the template but whose lead
+    (worker) axis differs is resized — shrink keeps the first ``m_new``
+    slots, grow seeds new slots from slot 0. The packed ``__layout__``
+    sidecars make this work across formats too: a packed checkpoint from an
+    m=8 fleet restores into an m=4 per-leaf template and vice versa."""
     with np.load(path) as z:
         arrays = {k: z[k] for k in z.files}
     layouts = {}
@@ -185,14 +219,15 @@ def restore(path: str, template: Any) -> Any:
         if isinstance(node, Packed):
             bufkeys = [_join(prefix, str(i)) for i in range(len(node.buffers))]
             if all(k in arrays for k in bufkeys):
-                leaves.extend(_fit_leaf(arrays[k], b, k) for k, b in zip(bufkeys, node.buffers))
+                leaves.extend(_fit_leaf(arrays[k], b, k, elastic) for k, b in zip(bufkeys, node.buffers))
             else:
                 leaves.extend(
-                    _fit_leaf(a, b, prefix) for a, b in zip(_pack_perleaf_into(arrays, prefix, node), node.buffers)
+                    _fit_leaf(a, b, prefix, elastic)
+                    for a, b in zip(_pack_perleaf_into(arrays, prefix, node), node.buffers)
                 )
         else:
             if prefix not in arrays:
                 raise KeyError(f"checkpoint missing {prefix!r}")
-            leaves.append(_fit_leaf(arrays[prefix], node, prefix))
+            leaves.append(_fit_leaf(arrays[prefix], node, prefix, elastic))
     _, tdef = jax.tree_util.tree_flatten(template)
     return jax.tree_util.tree_unflatten(tdef, leaves)

@@ -45,8 +45,10 @@ class TauController:
     Telemetry: every :meth:`update` appends one structured record to
     ``history`` with keys ``round``, ``tau`` (the τ the round ran at),
     ``drift``, ``scale``, ``drift_ratio``, ``decision`` (one of
-    ``warmup | cooldown | grow | shrink | hold | clamp``) and ``next_tau``.
-    The training loop surfaces these records as the run's τ schedule.
+    ``warmup | cooldown | grow | shrink | hold | clamp | fault_hold``) and
+    ``next_tau``; records of fault rounds additionally carry a ``fault``
+    key with the harness's reason string. The training loop surfaces these
+    records as the run's τ schedule.
     """
 
     tau: int = 1
@@ -60,11 +62,21 @@ class TauController:
     _round: int = field(default=0, init=False, repr=False)
     _cooldown: int = field(default=0, init=False, repr=False)
 
-    def update(self, drift: float, scale: float) -> int:
-        """Consume one round's consensus stats, return the next round's τ."""
+    def update(self, drift: float, scale: float, fault: "str | None" = None) -> int:
+        """Consume one round's consensus stats, return the next round's τ.
+
+        ``fault`` (a reason string from the fault harness, e.g.
+        ``"crash+deadline"``) marks a degraded round: τ is held — the
+        round's drift was measured under a partial membership, so acting on
+        it would let a crash masquerade as a non-IID drift signal — and the
+        record carries the reason. Fault holds do not consume cooldown:
+        the post-change observation window resumes on the next clean round.
+        """
         ratio = float(drift) / max(float(scale), 1e-12)
         old = self.tau
-        if self._round < self.warmup_rounds:
+        if fault is not None:
+            decision = "fault_hold"
+        elif self._round < self.warmup_rounds:
             decision = "warmup"
         elif self._cooldown > 0:
             decision = "cooldown"
@@ -79,17 +91,18 @@ class TauController:
             decision = "hold"
         if decision in ("grow", "shrink"):
             self._cooldown = self.cooldown_rounds
-        self.history.append(
-            dict(
-                round=self._round,
-                tau=old,
-                drift=float(drift),
-                scale=float(scale),
-                drift_ratio=ratio,
-                decision=decision,
-                next_tau=self.tau,
-            )
+        record = dict(
+            round=self._round,
+            tau=old,
+            drift=float(drift),
+            scale=float(scale),
+            drift_ratio=ratio,
+            decision=decision,
+            next_tau=self.tau,
         )
+        if fault is not None:
+            record["fault"] = str(fault)
+        self.history.append(record)
         self._round += 1
         return self.tau
 

@@ -61,21 +61,27 @@ def per_tau_costs(composed: dict, taus: Iterable[int]) -> List[dict]:
     return rows
 
 
-def simulate_trajectory(ctrl: TauController, rounds: int, r0: Optional[float] = None) -> List[dict]:
+def simulate_trajectory(ctrl: TauController, rounds: int, r0: Optional[float] = None, fault_plan=None) -> List[dict]:
     """Drive ``ctrl`` for ``rounds`` rounds of the reference drift model and
     return its telemetry history. Mutates ``ctrl`` (pass a fresh instance).
 
     ``r0`` anchors the model: it is the drift ratio of the very first round
     at τ=1. The default sits on the controller's upper threshold, so the
     schedule starts communication-bound and relaxes as the √(1+t) decay
-    sets in — the trajectory sweeps shrink/hold/grow territory."""
+    sets in — the trajectory sweeps shrink/hold/grow territory.
+
+    ``fault_plan`` (:class:`repro.fault.plan.FaultPlan`) marks each round's
+    fault reason into the controller exactly as the live harness does: a
+    degraded round is a ``fault_hold`` and its record carries the reason —
+    the trajectory proves adaptive-τ and fault handling compose."""
     if r0 is None:
         r0 = ctrl.hi
     t = 0  # local steps taken
-    for _ in range(rounds):
+    for r in range(rounds):
         tau = ctrl.tau
         ratio = r0 * math.sqrt(tau) / math.sqrt(1.0 + t)
-        ctrl.update(drift=ratio, scale=1.0)
+        fault = fault_plan.fault_reason(r) if fault_plan is not None else None
+        ctrl.update(drift=ratio, scale=1.0, fault=fault)
         t += tau
     return ctrl.history
 
@@ -95,6 +101,7 @@ def schedule_block(
     rt: Optional[RuntimeConfig] = None,
     composed: Optional[dict] = None,
     r0: Optional[float] = None,
+    fault_plan=None,
 ) -> dict:
     """Build the dry-run's ``tau_schedule`` JSON block.
 
@@ -102,11 +109,17 @@ def schedule_block(
     touches (runtime-model round time; composed flops/bytes/coll when a
     composed cost is supplied), and totals the scheduled run against the
     fixed-τ baseline spending the same local-step budget at the starting τ.
+
+    ``fault_plan`` threads the fault schedule through both halves: the
+    trajectory records ``fault_hold`` decisions on degraded rounds, and the
+    runtime config (unless explicitly given) takes the plan's straggler/
+    jitter distributions via :meth:`FaultPlan.runtime_config`.
     """
-    rt = rt or RuntimeConfig()
+    if rt is None:
+        rt = fault_plan.runtime_config() if fault_plan is not None else RuntimeConfig()
     algo = runtime_algo(strategy)
     tau0 = ctrl.tau
-    history = simulate_trajectory(ctrl, rounds, r0=r0)
+    history = simulate_trajectory(ctrl, rounds, r0=r0, fault_plan=fault_plan)
     taus = ctrl.taus_seen
     times = {tau: _round_time(algo, tau, rt) for tau in taus}
     per_tau = [dict(tau=tau, round_time_s=times[tau]) for tau in taus]
@@ -130,7 +143,14 @@ def schedule_block(
         rounds=rounds,
         total_local_steps=total_steps,
         trajectory=[
-            dict(round=h["round"], tau=h["tau"], drift_ratio=h["drift_ratio"], decision=h["decision"], next_tau=h["next_tau"])
+            dict(
+                round=h["round"],
+                tau=h["tau"],
+                drift_ratio=h["drift_ratio"],
+                decision=h["decision"],
+                next_tau=h["next_tau"],
+                **({"fault": h["fault"]} if "fault" in h else {}),
+            )
             for h in history
         ],
         per_tau=per_tau,

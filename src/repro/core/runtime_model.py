@@ -4,12 +4,22 @@ Simulates per-worker clocks under a straggler model and a communication
 model, for every algorithm in the comparison. This is how the paper's
 runtime claims are validated quantitatively on CPU-only hardware: the
 *convergence* curves come from real training runs; the *time axis* comes
-from this model, calibrated with the paper's own measured constants
-(ResNet-18/CIFAR-10 on 16 × Titan X over 40 Gbps Ethernet):
+from this model. The default constants are the paper's own measured 2020
+setup (ResNet-18/CIFAR-10 on 16 × Titan X over 40 Gbps Ethernet):
 
     compute ≈ 4.6 s/epoch  (24-25 steps/epoch ⇒ ~0.19 s/step)
     fully-sync all-reduce ≈ 1.5 s/epoch (comm/compute ≈ 34.6% incl. overhead)
     PowerSGD rank-1 compresses 243× but keeps the handshake latency.
+
+They are *defaults, not assumptions*: :func:`calibrated_config` rebuilds a
+``RuntimeConfig`` from a production dry-run JSON — worker count from the
+parallel plan, per-step compute from the roofline, collective time from the
+measured boundary-collective bytes over a given link — and
+:meth:`repro.fault.plan.FaultPlan.runtime_config` layers a fault plan's
+straggler/jitter distributions on top (replacing the hardcoded straggler
+knobs). :func:`simulate` accepts an optional ``fault_plan`` whose per-round
+compute factors, crash windows, and network jitter drive the clocks: dead
+workers drop out of barriers, rejoining workers resume at the round clock.
 
 Blocking semantics per algorithm:
     sync_sgd   — barrier + blocking all-reduce every step
@@ -23,8 +33,10 @@ Blocking semantics per algorithm:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict
+import json
+import os
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -69,7 +81,60 @@ def _step_times(cfg: RuntimeConfig, rng, steps: int) -> np.ndarray:
     return t
 
 
-def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig) -> RuntimeResult:
+def calibrated_config(dryrun_json, *, link_gbps: float = 40.0, base: Optional[RuntimeConfig] = None) -> RuntimeConfig:
+    """A :class:`RuntimeConfig` calibrated from a production dry-run JSON
+    (``repro.launch.dryrun``) instead of the paper's 2020 constants.
+
+    * ``m``       — the parallel plan's worker count.
+    * ``t_step``  — the roofline's per-round device time (max of compute and
+      memory terms) divided by τ: what one local step actually costs on the
+      modelled hardware.
+    * ``t_comm``  — the measured boundary-collective payload (falling back
+      to the packed plane's x-buffer bytes when the boundary probe was
+      skipped) over ``link_gbps``, plus the handshake.
+
+    ``dryrun_json`` is a path or an already-loaded result dict; ``base``
+    seeds every field not derivable from the JSON (straggler knobs, seed —
+    typically :meth:`repro.fault.plan.FaultPlan.runtime_config` output so a
+    fault plan's distributions ride on calibrated hardware constants).
+    """
+    if isinstance(dryrun_json, (str, os.PathLike)):
+        with open(dryrun_json) as f:
+            d = json.load(f)
+    else:
+        d = dryrun_json
+    cfg = base if base is not None else RuntimeConfig()
+    m = int((d.get("plan") or {}).get("workers", cfg.m))
+    tau = int(d.get("tau") or 1)
+    t_step = cfg.t_step
+    roof = d.get("roofline") or {}
+    t_round = max(float(roof.get("compute_s") or 0.0), float(roof.get("memory_s") or 0.0))
+    if t_round > 0:
+        t_step = t_round / max(tau, 1)
+    coll_bytes = sum(float(v.get("bytes", 0)) for v in (d.get("boundary_collectives") or {}).values())
+    if coll_bytes <= 0:
+        coll_bytes = float((d.get("plane") or {}).get("x_buffer_bytes") or 0.0)
+    t_comm = cfg.t_comm
+    if coll_bytes > 0 and link_gbps > 0:
+        t_comm = cfg.t_handshake + coll_bytes / (link_gbps * 1e9 / 8)
+    return replace(cfg, m=m, t_step=t_step, t_comm=t_comm)
+
+
+def _fault_round(r: int, m: int, fault_plan):
+    """(live mask, comm-jitter factor) for round r; trivial without a plan."""
+    if fault_plan is None:
+        return np.ones(m, bool), 1.0
+    return fault_plan.mask_at(r), fault_plan.comm_jitter(r)
+
+
+def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=None) -> RuntimeResult:
+    """``fault_plan`` (:class:`repro.fault.plan.FaultPlan`, optional) drives
+    degraded rounds: its per-round compute factors scale the step times, its
+    crash windows + straggler deadlines take workers out of barriers (the
+    deadline policy — an excluded worker cannot hold the round), its network
+    jitter scales each round's collective, and a rejoining worker resumes at
+    the round clock (the anchor re-sync). Without a plan the clocks are the
+    historical fully-live model, value for value."""
     rng = np.random.default_rng(cfg.seed)
     t = _step_times(cfg, rng, steps)
     m = cfg.m
@@ -80,29 +145,41 @@ def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig) -> RuntimeResu
     if algo == "sync_sgd" or algo == "powersgd":
         tau = 1
 
+    if fault_plan is not None:
+        if fault_plan.m != m:
+            raise ValueError(f"fault plan is over m={fault_plan.m} workers, config has m={m}")
+        rounds = steps // tau
+        if rounds > 0:
+            factors = np.stack([fault_plan.round_compute_factors(r) for r in range(rounds)])
+            t[: rounds * tau] *= np.repeat(factors, tau, axis=0)
+
     compute_total = float(t.sum(axis=0).max())  # critical-path compute
     mean_compute = float(t.sum(axis=0).mean())
 
     if algo in ("sync_sgd", "powersgd", "local_sgd", "easgd"):
-        # barrier every tau steps, then blocking collective
+        # barrier every tau steps (over LIVE workers only), then blocking
+        # collective; dead/excluded workers rejoin at the round clock
         clock = 0.0
         exposed = 0.0
         idle = 0.0
         worker_clock = np.zeros(m)
         for r in range(steps // tau):
             seg = t[r * tau : (r + 1) * tau].sum(axis=0)
+            live, jitter = _fault_round(r, m, fault_plan)
             arrive = worker_clock + seg
-            barrier = arrive.max()
-            idle += float((barrier - arrive).sum()) / m
-            clock = barrier + comm
-            exposed += comm
+            barrier = arrive[live].max()
+            idle += float((barrier - arrive[live]).sum()) / m
+            c = comm * jitter
+            clock = barrier + c
+            exposed += c
             worker_clock = np.full(m, clock)
         return RuntimeResult(clock, mean_compute, exposed, idle, steps)
 
     if algo in OVERLAPPED:
         # non-blocking: collective for boundary r completes at
         # max_i(arrival_r) + comm; worker i blocks at boundary r+1 only if
-        # that completion is later than its own arrival.
+        # that completion is still in flight when it arrives there. Only
+        # live workers contribute to (or wait on) the collective.
         worker_clock = np.zeros(m)
         ready = 0.0  # completion time of the in-flight collective
         exposed = 0.0
@@ -110,14 +187,18 @@ def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig) -> RuntimeResu
         rounds = steps // tau
         for r in range(rounds):
             seg = t[r * tau : (r + 1) * tau].sum(axis=0)
+            live, jitter = _fault_round(r, m, fault_plan)
             arrive = worker_clock + seg
             # wait (only) for the previous round's collective
             stall = np.maximum(ready - arrive, 0.0)
-            exposed += float(stall.max())
-            idle += float(stall.mean())
-            worker_clock = arrive + stall
-            # launch this round's collective once all contributions exist
-            ready = float(worker_clock.max()) + comm
+            exposed += float(stall[live].max())
+            idle += float(stall[live].mean())
+            advanced = arrive + stall
+            # launch this round's collective once all LIVE contributions
+            # exist; excluded workers park at the round clock (re-sync)
+            round_clock = float(advanced[live].max())
+            worker_clock = np.where(live, advanced, round_clock)
+            ready = round_clock + comm * jitter
         total = float(worker_clock.max())
         return RuntimeResult(total, mean_compute, exposed, idle, steps)
 

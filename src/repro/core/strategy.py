@@ -88,12 +88,41 @@ class AlgoVars(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def _worker_mean(x_stacked):
+def _worker_mean(x_stacked, weights=None):
     """Average over the worker axis; on a mesh this is the paper's model
     all-reduce (lowered as reduce-scatter when the consumer is sharded).
     The fp32 accumulation is fused into the reduction (``dtype=``) so XLA
-    never materializes an fp32 copy of the full stacked params."""
-    return jax.tree.map(lambda t: jnp.mean(t, axis=0, dtype=jnp.float32).astype(t.dtype), x_stacked)
+    never materializes an fp32 copy of the full stacked params.
+
+    ``weights`` ((m,) f32 renormalized membership weights, DESIGN.md §7)
+    turns this into the masked mean Σ_i w_i·x_i over live workers; ``None``
+    keeps the historical fully-live reduction bit for bit."""
+    if weights is None:
+        return jax.tree.map(lambda t: jnp.mean(t, axis=0, dtype=jnp.float32).astype(t.dtype), x_stacked)
+    wf = weights.astype(jnp.float32)
+
+    def one(t):
+        w = wf.reshape((-1,) + (1,) * (t.ndim - 1))
+        return jnp.sum(t.astype(jnp.float32) * w, axis=0).astype(t.dtype)
+
+    return jax.tree.map(one, x_stacked)
+
+
+def _live_where(mask, new_tree, old_tree):
+    """Per-leaf ``where`` over the worker axis: live rows take ``new``, dead
+    rows keep ``old`` (they are not participating this boundary)."""
+    live = mask > 0
+
+    def one(n, o):
+        lb = live.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(lb, n, o)
+
+    return jax.tree.map(one, new_tree, old_tree)
+
+
+def _mem_weights(membership):
+    """The (m,) f32 weights of a membership, or None (fully-live path)."""
+    return None if membership is None else membership.weights
 
 
 def _broadcast_like(z, x_stacked):
@@ -174,10 +203,20 @@ def _match_rep(x_in, x_new: Packed):
     return x_new if isinstance(x_in, Packed) else unpack(x_new)
 
 
-def _packed_worker_mean(p: Packed) -> Packed:
+def _packed_worker_mean(p: Packed, weights=None) -> Packed:
     """One mean per dtype bucket over the stacked plane — the boundary's
-    single worker-mean collective (vs one per leaf on the tree path)."""
-    return buffer_map(lambda b: jnp.mean(b, axis=0, dtype=jnp.float32).astype(b.dtype), p)
+    single worker-mean collective (vs one per leaf on the tree path).
+    ``weights`` selects the masked weighted sum (see :func:`_worker_mean`)."""
+    if weights is None:
+        return buffer_map(lambda b: jnp.mean(b, axis=0, dtype=jnp.float32).astype(b.dtype), p)
+    wf = weights.astype(jnp.float32)
+    return buffer_map(lambda b: jnp.sum(b.astype(jnp.float32) * wf[:, None], axis=0).astype(b.dtype), p)
+
+
+def _packed_live_where(mask, p_new: Packed, p_old: Packed) -> Packed:
+    """Packed form of :func:`_live_where`: live rows take the new plane."""
+    live = mask > 0
+    return buffer_map(lambda n, o: jnp.where(live[:, None], n, o), p_new, p_old, layout=p_new.layout)
 
 
 def _constrain_anchor_packed(p: Packed, axes_tree=None) -> Packed:
@@ -298,17 +337,23 @@ class CommStrategy:
         return pack(self.local_post_update(unpack(px), vars, inflight, k_in_round), layout=px.layout, lead=1)
 
     # ---- round-boundary phases ----
-    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
-        """Phase 1 — consume the collective launched last round (eq. 4)."""
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, membership=None):
+        """Phase 1 — consume the collective launched last round (eq. 4).
+
+        ``membership`` (:class:`repro.fault.membership.Membership` or None,
+        DESIGN.md §7) masks the phase to live workers: dead rows pass
+        through untouched and any worker mean renormalizes over the live
+        set. ``None`` — the default, and what every clean round passes — is
+        the exact pre-fault program."""
         return x_stacked, vars
 
-    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None):
+    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None, membership=None):
         """Phase 2 — launch this round's collective (eq. 5); returns
         ``(vars, inflight)`` with the launched value carried to the next
-        consumption point."""
+        consumption point. ``membership`` as in :meth:`boundary_apply`."""
         return vars, None
 
-    def boundary_round(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
+    def boundary_round(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False, membership=None):
         """One full round boundary: the apply phase then the launch phase.
 
         This is what the round engine calls. The two-phase contract is
@@ -332,21 +377,26 @@ class CommStrategy:
         kernels (zero extra launches); strategies whose boundary does not
         read the plane through the pullback run the standalone probe
         (≤ 1 launch per dtype bucket).
+
+        ``membership`` masks the whole boundary to live workers
+        (DESIGN.md §7); the probe, when requested, still covers the full
+        plane — the consensus measure is defined over all worker slots, and
+        fault rounds hold τ anyway (``TauController`` fault_hold).
         """
         if self.packed:
-            return self._packed_boundary(x_stacked, vars, inflight, axes_tree, probe=probe)
-        return self._boundary_phases(x_stacked, vars, inflight, axes_tree, probe=probe)
+            return self._packed_boundary(x_stacked, vars, inflight, axes_tree, probe=probe, membership=membership)
+        return self._boundary_phases(x_stacked, vars, inflight, axes_tree, probe=probe, membership=membership)
 
-    def _boundary_phases(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
+    def _boundary_phases(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False, membership=None):
         """The shared two-phase composition: apply, then launch."""
         stats = probe_ops.tree_probe(x_stacked) if probe else None
-        x_stacked, vars = self.boundary_apply(x_stacked, vars, inflight, axes_tree)
-        vars, inflight = self.boundary_launch(x_stacked, vars, axes_tree)
+        x_stacked, vars = self.boundary_apply(x_stacked, vars, inflight, axes_tree, membership=membership)
+        vars, inflight = self.boundary_launch(x_stacked, vars, axes_tree, membership=membership)
         if probe:
             return x_stacked, vars, inflight, stats
         return x_stacked, vars, inflight
 
-    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False, membership=None):
         """Packed-plane boundary; strategies with boundary math override.
 
         Strategies with *no* boundary math at all (base, sync_sgd,
@@ -361,13 +411,13 @@ class CommStrategy:
                 return x_stacked, vars, None, probe_ops.packed_probe(_as_plane(x_stacked))
             return x_stacked, vars, None  # launch phase would carry None
         if isinstance(x_stacked, Packed):
-            outs = self._boundary_phases(unpack(x_stacked), vars, inflight, axes_tree, probe=probe)
+            outs = self._boundary_phases(unpack(x_stacked), vars, inflight, axes_tree, probe=probe, membership=membership)
             x_tree, vars, inflight = outs[0], outs[1], outs[2]
             px = pack(x_tree, layout=x_stacked.layout, lead=1)
             if probe:
                 return px, vars, inflight, outs[3]
             return px, vars, inflight
-        return self._boundary_phases(x_stacked, vars, inflight, axes_tree, probe=probe)
+        return self._boundary_phases(x_stacked, vars, inflight, axes_tree, probe=probe, membership=membership)
 
     # ---- AOT spec support (launch/specs.py) ----
     def state_axes(self, axes_tree) -> Tuple[Optional[AlgoVars], Any]:
@@ -423,17 +473,23 @@ class LocalSGDStrategy(CommStrategy):
 
     name = "local_sgd"
 
-    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
-        avg = _worker_mean(x_stacked)
-        return _broadcast_like(avg, x_stacked), vars
+    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None, membership=None):
+        avg = _worker_mean(x_stacked, _mem_weights(membership))
+        x_new = _broadcast_like(avg, x_stacked)
+        if membership is not None:
+            # dead rows keep their stale params; they re-sync on rejoin
+            x_new = _live_where(membership.mask, x_new, x_stacked)
+        return x_new, vars
 
-    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False):
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False, membership=None):
         px = _as_plane(x_stacked)
         # standalone probe of the pre-average plane: post-boundary drift is
         # identically zero here, so the controller must see the round-end one
         stats = probe_ops.packed_probe(px) if probe else None
-        avg = _packed_worker_mean(px)
+        avg = _packed_worker_mean(px, _mem_weights(membership))
         x_new = buffer_map(lambda a, b: jnp.broadcast_to(a[None], b.shape), avg, px, layout=px.layout)
+        if membership is not None:
+            x_new = _packed_live_where(membership.mask, x_new, px)
         out = (_match_rep(x_stacked, x_new), vars, None)
         return out + (stats,) if probe else out
 
@@ -473,15 +529,18 @@ class OverlapLocalSGDStrategy(CommStrategy):
         z = jax.tree.map(lambda t: t[0], x_stacked)
         return _constrain_anchor(z, axes_tree)
 
-    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, membership=None):
         x_new = _pullback(x_stacked, inflight, self.cfg.alpha)
+        if membership is not None:
+            # dead workers skip the pullback (they were not part of the round)
+            x_new = _live_where(membership.mask, x_new, x_stacked)
         if self.momentum:
             # remember the consumed anchor: launch needs it for eq. (10)
             vars = AlgoVars(z=inflight, v=vars.v, extra=vars.extra)
         return x_new, vars
 
-    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None):
-        mean_x = _worker_mean(x_stacked)
+    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None, membership=None):
+        mean_x = _worker_mean(x_stacked, _mem_weights(membership))
         if self.momentum:
             beta = self.cfg.anchor_beta
             v_new = jax.tree.map(
@@ -498,18 +557,21 @@ class OverlapLocalSGDStrategy(CommStrategy):
             z_new = mean_x
         return vars, _constrain_anchor(z_new, axes_tree)
 
-    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False, membership=None):
         """Both phases in one fused kernel per dtype bucket: the pullback
         (eq. 4) writes the plane whose worker mean (eq. 5, + momentum
         eqs. 10-11) is computed in the same HBM pass. With ``probe`` the
         same launches also emit the consensus partial sums — zero extra
-        kernel launches for the adaptive-τ probe."""
+        kernel launches for the adaptive-τ probe. With ``membership`` the
+        same fused kernels run their masked variant (one extra (m,) input,
+        same launch count)."""
         alpha = self.cfg.alpha
+        weights = _mem_weights(membership)
         px = _as_plane(x_stacked)
         if self.momentum:
             beta = self.cfg.anchor_beta
             outs = [
-                anchor_ops.pullback_mean_momentum(bx, bz, bv, alpha, beta, probe=probe)
+                anchor_ops.pullback_mean_momentum(bx, bz, bv, alpha, beta, probe=probe, weights=weights)
                 for bx, bz, bv in zip(px.buffers, inflight.buffers, vars.v.buffers)
             ]
             x_new = Packed(tuple(o[0] for o in outs), px.layout)
@@ -518,7 +580,7 @@ class OverlapLocalSGDStrategy(CommStrategy):
             vars = AlgoVars(z=inflight, v=v_new, extra=vars.extra)
         else:
             outs = [
-                anchor_ops.pullback_mean(bx, bz, alpha, probe=probe)
+                anchor_ops.pullback_mean(bx, bz, alpha, probe=probe, weights=weights)
                 for bx, bz in zip(px.buffers, inflight.buffers)
             ]
             x_new = Packed(tuple(o[0] for o in outs), px.layout)
@@ -552,25 +614,35 @@ class EASGDStrategy(CommStrategy):
         z = jax.tree.map(lambda t: t[0], x_stacked)
         return AlgoVars(z=_constrain_anchor(z, axes_tree))
 
-    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    @staticmethod
+    def _rate(alpha, x_stacked, membership):
+        """z's mixing rate min(α·m_live, 1): a python float on the fully-live
+        path (exactly the historical program), traced when masked (m_live is
+        data-dependent on the membership)."""
+        if membership is None:
+            return min(alpha * x_stacked_leading(x_stacked), 1.0)
+        return jnp.minimum(alpha * membership.live_count(), 1.0)
+
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, membership=None):
         alpha = self.cfg.alpha
         z = vars.z
         x_new = _pullback(x_stacked, z, alpha)
-        # symmetric update: z ← z + α·Σ_i (x_i − z) = (1−mα)z + mα·mean(x)
-        m = x_stacked_leading(x_stacked)
-        rate = min(alpha * m, 1.0)
-        mean_x = _worker_mean(x_stacked)  # pre-pullback models (symmetric W)
+        if membership is not None:
+            x_new = _live_where(membership.mask, x_new, x_stacked)
+        # symmetric update: z ← z + α·Σ_live (x_i − z) = (1−m_live·α)z + m_live·α·mean_live(x)
+        rate = self._rate(alpha, x_stacked, membership)
+        mean_x = _worker_mean(x_stacked, _mem_weights(membership))  # pre-pullback models (symmetric W)
         z_new = _constrain_anchor(tree_lerp(z, mean_x, rate), axes_tree)
         return x_new, AlgoVars(z=z_new, v=vars.v, extra=vars.extra)
 
-    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False, membership=None):
         alpha = self.cfg.alpha
-        rate = min(alpha * x_stacked_leading(x_stacked), 1.0)
+        rate = self._rate(alpha, x_stacked, membership)
         px = _as_plane(x_stacked)
         # fused pullback + pre-pullback mean (EASGD's symmetric W) per bucket;
         # with probe the same launches emit the consensus partial sums
         outs = [
-            anchor_ops.pullback_mean(bx, bz, alpha, mean_pre=True, probe=probe)
+            anchor_ops.pullback_mean(bx, bz, alpha, mean_pre=True, probe=probe, weights=_mem_weights(membership))
             for bx, bz in zip(px.buffers, vars.z.buffers)
         ]
         x_new = Packed(tuple(o[0] for o in outs), px.layout)
@@ -619,13 +691,14 @@ class _AvgRebaseStrategy(CommStrategy):
     def _rebase_packed(self, px: Packed, inflight) -> Packed:
         return buffer_map(self._rebase_leaf, px, inflight.x0, inflight.avg, layout=px.layout)
 
-    def _packed_launch(self, px: Packed):
+    def _packed_launch(self, px: Packed, weights=None):
         """Launch from an already-packed plane: one mean per dtype bucket;
         the plane itself doubles as the x₀ correction term (no extra copy)."""
-        return self.Inflight(avg=_packed_worker_mean(px), x0=px)
+        return self.Inflight(avg=_packed_worker_mean(px, weights), x0=px)
 
-    def boundary_launch(self, x_stacked, vars, axes_tree=None):
-        return vars, self.Inflight(avg=_worker_mean(x_stacked), x0=jax.tree.map(jnp.copy, x_stacked))
+    def boundary_launch(self, x_stacked, vars, axes_tree=None, membership=None):
+        avg = _worker_mean(x_stacked, _mem_weights(membership))
+        return vars, self.Inflight(avg=avg, x0=jax.tree.map(jnp.copy, x_stacked))
 
     def state_axes(self, axes_tree):
         if self.packed:
@@ -643,16 +716,21 @@ class CoCoDStrategy(_AvgRebaseStrategy):
 
     name = "cocod"
 
-    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
-        return self._rebase(x_stacked, inflight), vars
+    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None, membership=None):
+        x_new = self._rebase(x_stacked, inflight)
+        if membership is not None:
+            x_new = _live_where(membership.mask, x_new, x_stacked)
+        return x_new, vars
 
-    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False):
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False, membership=None):
         px = _as_plane(x_stacked)
         # rebase does not read through the pullback kernels, so the probe is
         # the standalone per-bucket launch on the pre-rebase plane
         stats = probe_ops.packed_probe(px) if probe else None
         x_new = self._rebase_packed(px, inflight)
-        out = (_match_rep(x_stacked, x_new), vars, self._packed_launch(x_new))
+        if membership is not None:
+            x_new = _packed_live_where(membership.mask, x_new, px)
+        out = (_match_rep(x_stacked, x_new), vars, self._packed_launch(x_new, _mem_weights(membership)))
         return out + (stats,) if probe else out
 
 
@@ -737,21 +815,30 @@ class DelayedAveragingStrategy(_AvgRebaseStrategy):
         arrived = k_in_round == self.delay - 1
         return jax.lax.cond(arrived, lambda p: self._rebase_packed(p, inflight), lambda p: p, px)
 
-    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
+    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None, membership=None):
+        # membership masks only the boundary-phase consumption; the mid-round
+        # ``local_post_update`` rebase stays unmasked (the collective it
+        # consumes was launched under last round's membership — DESIGN.md §7)
         if self.delay >= self.tau:
-            return self._rebase(x_stacked, inflight), vars
+            x_new = self._rebase(x_stacked, inflight)
+            if membership is not None:
+                x_new = _live_where(membership.mask, x_new, x_stacked)
+            return x_new, vars
         return x_stacked, vars
 
-    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False):
+    def _packed_boundary(self, x_stacked, vars, inflight, axes_tree=None, probe: bool = False, membership=None):
         px = _as_plane(x_stacked)
         stats = probe_ops.packed_probe(px) if probe else None
+        weights = _mem_weights(membership)
         if self.delay >= self.tau:
             x_new = self._rebase_packed(px, inflight)
-            out = (_match_rep(x_stacked, x_new), vars, self._packed_launch(x_new))
+            if membership is not None:
+                x_new = _packed_live_where(membership.mask, x_new, px)
+            out = (_match_rep(x_stacked, x_new), vars, self._packed_launch(x_new, weights))
             return out + (stats,) if probe else out
         # mid-round consumption already happened; launch from the live plane
         # (x passes through in the caller's representation)
-        out = (x_stacked, vars, self._packed_launch(px))
+        out = (x_stacked, vars, self._packed_launch(px, weights))
         return out + (stats,) if probe else out
 
 
@@ -813,13 +900,15 @@ class SparseAnchorStrategy(CommStrategy):
             return _constrain_anchor_packed(_pack_anchor(x_stacked), axes_tree)
         return _constrain_anchor(jax.tree.map(lambda t: t[0], x_stacked), axes_tree)
 
-    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None):
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, membership=None):
         x_new = _pullback(x_stacked, inflight, self.cfg.alpha)
+        if membership is not None:
+            x_new = _live_where(membership.mask, x_new, x_stacked)
         # the consumed anchor is the base of this round's launched delta
         return x_new, AlgoVars(z=inflight, v=vars.v, extra=vars.extra)
 
-    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None):
-        mean_x = _worker_mean(x_stacked)
+    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None, membership=None):
+        mean_x = _worker_mean(x_stacked, _mem_weights(membership))
         if self.k >= 1.0:  # dense: bitwise-identical to OverlapLocalSGDStrategy
             z_new = mean_x
             err = vars.extra
@@ -833,13 +922,13 @@ class SparseAnchorStrategy(CommStrategy):
         z_new = _constrain_anchor(z_new, axes_tree)
         return AlgoVars(z=vars.z, v=vars.v, extra=err), z_new
 
-    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False):
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False, membership=None):
         px = _as_plane(x_stacked)
         # fused pullback + post-pullback mean; the consumed anchor (inflight)
         # is the base of this round's launched delta. With probe the same
         # launches emit the consensus partial sums.
         outs = [
-            anchor_ops.pullback_mean(bx, bz, self.cfg.alpha, probe=probe)
+            anchor_ops.pullback_mean(bx, bz, self.cfg.alpha, probe=probe, weights=_mem_weights(membership))
             for bx, bz in zip(px.buffers, inflight.buffers)
         ]
         x_new = Packed(tuple(o[0] for o in outs), px.layout)
@@ -901,7 +990,12 @@ class LegacyStrategy(CommStrategy):
     def transform_grads(self, grads_stacked, vars):
         return self.algorithm.transform_grads(grads_stacked, vars)
 
-    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None):
+    def boundary_apply(self, x_stacked, vars, inflight, axes_tree=None, membership=None):
+        if membership is not None:
+            raise ValueError(
+                "legacy algorithms predate the membership contract; run fault "
+                "plans against a native strategy (DESIGN.md §7)"
+            )
         return self.algorithm.boundary(x_stacked, vars, axes_tree)
 
     def state_axes(self, axes_tree):

@@ -1,0 +1,14 @@
+"""Fault-tolerance layer: deterministic fault plans, live-worker membership,
+and the host-side injection harness (DESIGN.md §7)."""
+from repro.fault.harness import FaultHarness, resync_from_anchor
+from repro.fault.membership import Membership, from_mask, full
+from repro.fault.plan import FaultPlan
+
+__all__ = [
+    "FaultHarness",
+    "FaultPlan",
+    "Membership",
+    "from_mask",
+    "full",
+    "resync_from_anchor",
+]

@@ -1,0 +1,135 @@
+"""Host-side fault injection around the jitted round (DESIGN.md §7).
+
+The harness sits *between* rounds, where state is concrete: before round r
+it (1) re-syncs the plane slices of workers rejoining at r from the anchor
+— the paper's anchor-as-recovery-point story: the anchor z is exactly the
+consensus model a recovered worker should resume from — and (2) installs
+the round's :class:`~repro.fault.membership.Membership` into
+``TrainState.membership`` so the jitted boundary runs masked. Strategy code
+is never touched: strategies only ever see the membership kwarg their
+boundary hooks already accept.
+
+Fully-live rounds install ``membership=None`` (not a full mask), so clean
+rounds execute the exact baseline program — bitwise pins and jaxpr budgets
+untouched — and only degraded rounds pay the masked trace.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fault.membership import Membership, from_mask
+from repro.fault.plan import FaultPlan
+from repro.parallel.packing import Packed, buffer_map
+
+
+def _anchor_of(state) -> Optional[Any]:
+    """The recovery point: the unstacked model a rejoining worker resumes
+    from. Preference order: the inflight collective (the freshest anchor —
+    unwrap the ``avg`` slot of avg-rebase inflights), then the strategy's
+    anchor variable z. ``None`` means the strategy carries no anchor
+    (local_sgd, sync_sgd): the caller falls back to the live-worker mean."""
+    infl = state.inflight
+    if infl is not None:
+        return getattr(infl, "avg", infl)
+    if getattr(state.vars, "z", None) is not None:
+        return state.vars.z
+    return None
+
+
+def resync_from_anchor(state, resync_mask):
+    """Overwrite the plane slices of workers flagged in ``resync_mask``
+    ((m,) bool) with the anchor model; all other rows pass through.
+
+    Only x is re-synced: the rejoining worker's local optimizer state
+    (momentum/Adam moments) is left as-is — stale but structurally valid,
+    matching a real recovery where optimizer state restarts from whatever
+    the checkpoint held. Strategy vars are untouched (they are anchor-shaped,
+    not per-worker).
+    """
+    mask = jnp.asarray(np.asarray(resync_mask), bool)
+    anchor = _anchor_of(state)
+    x = state.x
+    if isinstance(x, Packed):
+        if anchor is None:
+            # no anchor state: recover onto the mean of the workers that
+            # were NOT excluded (the live consensus)
+            w = (~mask).astype(jnp.float32)
+            w = w / jnp.sum(w)
+            anchor = buffer_map(
+                lambda b: jnp.sum(b.astype(jnp.float32) * w[:, None], axis=0).astype(b.dtype), x
+            )
+        x_new = buffer_map(
+            lambda b, a: jnp.where(mask[:, None], a[None].astype(b.dtype), b), x, anchor, layout=x.layout
+        )
+    else:
+        if anchor is None:
+            w = (~mask).astype(jnp.float32)
+            w = w / jnp.sum(w)
+
+            def live_mean(t):
+                wb = w.reshape((-1,) + (1,) * (t.ndim - 1))
+                return jnp.sum(t.astype(jnp.float32) * wb, axis=0).astype(t.dtype)
+
+            anchor = jax.tree.map(live_mean, x)
+
+        def one(t, a):
+            mb = mask.reshape((-1,) + (1,) * (t.ndim - 1))
+            return jnp.where(mb, a[None].astype(t.dtype), t)
+
+        x_new = jax.tree.map(one, x, anchor)
+    return state._replace(x=x_new)
+
+
+class FaultHarness:
+    """Replays a :class:`FaultPlan` against a training run, round by round.
+
+    Usage (what ``Experiment._fit_faulted`` does):
+
+        harness = FaultHarness(plan)
+        for r in range(rounds):
+            state = harness.before_round(state, r)
+            state, metrics = round_step(state, batches)
+
+    ``records`` accumulates one dict per degraded round (mirror of the
+    dry-run's ``degraded_rounds`` schedule) for post-hoc inspection.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.records: List[dict] = []
+
+    def membership_at(self, r: int) -> Optional[Membership]:
+        """The round's membership — ``None`` (baseline fast path) when
+        everyone is live, a renormalized :class:`Membership` otherwise."""
+        mask = self.plan.mask_at(r)
+        if mask.all():
+            return None
+        return from_mask(mask.astype(np.float32))
+
+    def before_round(self, state, r: int):
+        """Apply round r's faults to concrete host-side state: re-sync
+        rejoining workers from the anchor, then install the membership."""
+        resync = self.plan.resync_at(r)
+        if resync.any():
+            state = resync_from_anchor(state, resync)
+        mem = self.membership_at(r)
+        if mem is not None or resync.any():
+            mask = self.plan.mask_at(r)
+            self.records.append(
+                dict(
+                    round=r,
+                    live=int(mask.sum()),
+                    excluded=[int(i) for i in np.nonzero(~mask)[0]],
+                    resynced=[int(i) for i in np.nonzero(resync)[0]],
+                    reason=self.plan.fault_reason(r),
+                )
+            )
+        return state._replace(membership=mem)
+
+    def fault_reason(self, r: int) -> Optional[str]:
+        """Per-round label for TauController telemetry (None = clean)."""
+        return self.plan.fault_reason(r)

@@ -1,0 +1,65 @@
+"""Live-worker membership for degraded round boundaries (DESIGN.md §7).
+
+A :class:`Membership` is the traced, device-side face of the fault layer:
+a {0,1} liveness mask over the worker axis plus the renormalized averaging
+weights w_i = mask_i / Σ mask (Stochastic-Gradient-Push-style weight
+renormalization, arXiv 1811.10792). It rides in ``TrainState.membership``
+and is consumed only by the round-boundary phases: a masked boundary pulls
+back / averages *live* rows only, and dead rows pass through untouched —
+the re-sync of a rejoining worker happens host-side from the anchor (the
+paper's recovery point), not inside the jitted round.
+
+``membership=None`` (the default everywhere) is the fully-live fast path:
+strategies take the exact pre-fault code path, so the baseline program —
+and its bitwise pins and jaxpr launch/collective budgets — is untouched.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Membership(NamedTuple):
+    """Live-worker mask + renormalized averaging weights, both (m,) f32.
+
+    ``mask`` holds {0., 1.} liveness; ``weights`` is the mask renormalized
+    to sum to 1 over live workers — the masked worker mean is
+    Σ_i w_i · x_i, which equals the plain mean when everyone is live.
+    Liveness is recoverable from the weights alone (``weights > 0``), so
+    kernels take only the weights vector.
+    """
+
+    mask: jnp.ndarray
+    weights: jnp.ndarray
+
+    @property
+    def m(self) -> int:
+        return int(self.mask.shape[0])
+
+    def live_count(self):
+        return jnp.sum(self.mask)
+
+    def is_full(self) -> bool:
+        """Host-side check (concrete arrays only): everyone live?"""
+        return bool(np.asarray(self.mask).all())
+
+
+def full(m: int) -> Membership:
+    """The fully-live membership over ``m`` workers."""
+    mask = jnp.ones((m,), jnp.float32)
+    return Membership(mask=mask, weights=mask / float(m))
+
+
+def from_mask(mask) -> Membership:
+    """Build a membership from a {0,1} liveness mask, renormalizing the
+    averaging weights over the live set. At least one worker must be live
+    (an all-dead round has no defined boundary)."""
+    mask = jnp.asarray(mask, jnp.float32)
+    if mask.ndim != 1:
+        raise ValueError(f"membership mask must be 1-D over workers, got shape {mask.shape}")
+    n_live = np.asarray(jnp.sum(mask))
+    if float(n_live) <= 0:
+        raise ValueError("membership mask has no live workers")
+    return Membership(mask=mask, weights=mask / jnp.sum(mask))

@@ -89,31 +89,56 @@ def _accum_probe(x, st_ref, acc_ref):
         st_ref[...] = acc_ref[...]
 
 
-def _pullback_mean_kernel(x_ref, z_ref, xo_ref, mo_ref, *refs, alpha: float, mean_pre: bool, probe: bool):
+def _pullback_mean_kernel(x_ref, z_ref, *refs, alpha: float, mean_pre: bool, probe: bool, masked: bool):
+    refs = list(refs)
+    w_ref = refs.pop(0) if masked else None
+    xo_ref, mo_ref = refs.pop(0), refs.pop(0)
     z = z_ref[...].astype(jnp.float32)  # (block,)
     x = x_ref[...]  # (m, block)
     x_new = ((1.0 - alpha) * x.astype(jnp.float32) + alpha * z[None, :]).astype(xo_ref.dtype)
-    xo_ref[...] = x_new
-    src = x if mean_pre else x_new
-    # mean over the worker axis lives inside the block — matches
-    # jnp.mean(src, axis=0, dtype=f32).astype(param dtype) of the ref path
-    mo_ref[...] = jnp.mean(src.astype(jnp.float32), axis=0).astype(mo_ref.dtype)
+    if masked:
+        # membership-masked boundary (DESIGN.md §7): dead rows (w == 0) skip
+        # the pullback; the mean is the renormalized weighted sum over live
+        # rows — same elementwise chain as the ref/per-leaf oracle
+        w = w_ref[...].astype(jnp.float32)  # (m,)
+        x_new = jnp.where((w > 0)[:, None], x_new, x)
+        xo_ref[...] = x_new
+        src = x if mean_pre else x_new
+        mo_ref[...] = jnp.sum(src.astype(jnp.float32) * w[:, None], axis=0).astype(mo_ref.dtype)
+    else:
+        xo_ref[...] = x_new
+        src = x if mean_pre else x_new
+        # mean over the worker axis lives inside the block — matches
+        # jnp.mean(src, axis=0, dtype=f32).astype(param dtype) of the ref path
+        mo_ref[...] = jnp.mean(src.astype(jnp.float32), axis=0).astype(mo_ref.dtype)
     if probe:
         st_ref, acc_ref = refs
         _accum_probe(x, st_ref, acc_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "mean_pre", "block", "probe", "interpret"))
-def pullback_mean_flat(x, z, *, alpha: float, mean_pre: bool = False, block: int = 1 << 13, probe: bool = False, interpret: bool = False):
+def pullback_mean_flat(x, z, weights=None, *, alpha: float, mean_pre: bool = False, block: int = 1 << 13, probe: bool = False, interpret: bool = False):
     """x: (m, n) stacked plane, z: (n,) anchor plane; n % 128 == 0.
 
     Returns (x_new, worker_mean) in one HBM pass; with ``probe`` also the
     (2, 128) consensus partial sums of the pre-pullback plane, in the same
-    launch.
+    launch. ``weights`` ((m,) f32, zeros on dead workers) selects the
+    membership-masked variant — same launch count, one extra tiny input.
+    The probe stats always cover the full pre-pullback plane (the consensus
+    measure is defined over all worker slots), masked or not.
     """
     m, n = x.shape
+    masked = weights is not None
     block = probe_block(n, block) if probe else min(block, n)
     grid = (pl.cdiv(n, block),)
+    in_specs = [
+        pl.BlockSpec((m, block), lambda i: (0, i)),
+        pl.BlockSpec((block,), lambda i: (i,)),
+    ]
+    args = [x, z]
+    if masked:
+        in_specs.append(pl.BlockSpec((m,), lambda i: (0,)))
+        args.append(weights)
     out_specs = [
         pl.BlockSpec((m, block), lambda i: (0, i)),
         pl.BlockSpec((block,), lambda i: (i,)),
@@ -128,43 +153,62 @@ def pullback_mean_flat(x, z, *, alpha: float, mean_pre: bool = False, block: int
         out_shape.append(jax.ShapeDtypeStruct((2, LANE), jnp.float32))
         scratch.append(pltpu.VMEM((2, LANE), jnp.float32))
     return pl.pallas_call(
-        functools.partial(_pullback_mean_kernel, alpha=alpha, mean_pre=mean_pre, probe=probe),
+        functools.partial(_pullback_mean_kernel, alpha=alpha, mean_pre=mean_pre, probe=probe, masked=masked),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((m, block), lambda i: (0, i)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
-    )(x, z)
+    )(*args)
 
 
-def _pullback_momentum_kernel(x_ref, z_ref, v_ref, xo_ref, zo_ref, vo_ref, *refs, alpha: float, beta: float, probe: bool):
+def _pullback_momentum_kernel(x_ref, z_ref, v_ref, *refs, alpha: float, beta: float, probe: bool, masked: bool):
+    refs = list(refs)
+    w_ref = refs.pop(0) if masked else None
+    xo_ref, zo_ref, vo_ref = refs.pop(0), refs.pop(0), refs.pop(0)
     z = z_ref[...].astype(jnp.float32)  # (block,)
-    x_new = ((1.0 - alpha) * x_ref[...].astype(jnp.float32) + alpha * z[None, :]).astype(xo_ref.dtype)
-    xo_ref[...] = x_new
-    mean = jnp.mean(x_new.astype(jnp.float32), axis=0).astype(x_ref.dtype)
+    x = x_ref[...]
+    x_new = ((1.0 - alpha) * x.astype(jnp.float32) + alpha * z[None, :]).astype(xo_ref.dtype)
+    if masked:
+        w = w_ref[...].astype(jnp.float32)  # (m,)
+        x_new = jnp.where((w > 0)[:, None], x_new, x)
+        xo_ref[...] = x_new
+        mean = jnp.sum(x_new.astype(jnp.float32) * w[:, None], axis=0).astype(x_ref.dtype)
+    else:
+        xo_ref[...] = x_new
+        mean = jnp.mean(x_new.astype(jnp.float32), axis=0).astype(x_ref.dtype)
     v_new = (beta * v_ref[...].astype(jnp.float32) + (mean.astype(jnp.float32) - z)).astype(vo_ref.dtype)
     vo_ref[...] = v_new
     zo_ref[...] = (z + v_new.astype(jnp.float32)).astype(zo_ref.dtype)
     if probe:
         st_ref, acc_ref = refs
-        _accum_probe(x_ref[...], st_ref, acc_ref)
+        _accum_probe(x, st_ref, acc_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "block", "probe", "interpret"))
-def pullback_momentum_flat(x, z, v, *, alpha: float, beta: float, block: int = 1 << 13, probe: bool = False, interpret: bool = False):
+def pullback_momentum_flat(x, z, v, weights=None, *, alpha: float, beta: float, block: int = 1 << 13, probe: bool = False, interpret: bool = False):
     """x: (m, n), z/v: (n,); n % 128 == 0.
 
     Returns (x_new, z_next, v_new): eq. (4) pullback + eqs. (10)-(11) anchor
     momentum, one read of each input, one write of each output; with
     ``probe`` also the (2, 128) consensus partial sums, in the same launch.
+    ``weights`` selects the membership-masked variant (see
+    :func:`pullback_mean_flat`).
     """
     m, n = x.shape
+    masked = weights is not None
     block = probe_block(n, block) if probe else min(block, n)
     grid = (pl.cdiv(n, block),)
+    in_specs = [
+        pl.BlockSpec((m, block), lambda i: (0, i)),
+        pl.BlockSpec((block,), lambda i: (i,)),
+        pl.BlockSpec((block,), lambda i: (i,)),
+    ]
+    args = [x, z, v]
+    if masked:
+        in_specs.append(pl.BlockSpec((m,), lambda i: (0,)))
+        args.append(weights)
     out_specs = [
         pl.BlockSpec((m, block), lambda i: (0, i)),
         pl.BlockSpec((block,), lambda i: (i,)),
@@ -181,15 +225,11 @@ def pullback_momentum_flat(x, z, v, *, alpha: float, beta: float, block: int = 1
         out_shape.append(jax.ShapeDtypeStruct((2, LANE), jnp.float32))
         scratch.append(pltpu.VMEM((2, LANE), jnp.float32))
     return pl.pallas_call(
-        functools.partial(_pullback_momentum_kernel, alpha=alpha, beta=beta, probe=probe),
+        functools.partial(_pullback_momentum_kernel, alpha=alpha, beta=beta, probe=probe, masked=masked),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((m, block), lambda i: (0, i)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
-    )(x, z, v)
+    )(*args)

@@ -44,21 +44,26 @@ def anchor_mix(x, z, alpha: float):
     return out.reshape(shape)
 
 
-def pullback_mean(x, z, alpha: float, mean_pre: bool = False, probe: bool = False):
+def pullback_mean(x, z, alpha: float, mean_pre: bool = False, probe: bool = False, weights=None):
     """Fused eq. (4) + worker mean on a stacked plane. x: (m, n), z: (n,).
     Returns (x_new, mean). Aligned buffers (n % 128 == 0) run pad-free.
 
     With ``probe`` also returns the consensus-distance raw sums
     ``(drift_sq, scale_sq)`` of the pre-pullback plane (DESIGN.md §6) as
     extra outputs of the SAME kernel launch — the adaptive-τ probe rides
-    the boundary's existing HBM pass."""
+    the boundary's existing HBM pass.
+
+    ``weights`` ((m,) f32 renormalized membership weights, zeros on dead
+    workers) selects the masked boundary (DESIGN.md §7): dead rows skip the
+    pullback and the mean is the weighted sum over live rows. ``None`` is
+    byte-identical to the pre-fault path."""
     if not flags.use_pallas():
-        out = _ref.pullback_mean(x, z, alpha, mean_pre=mean_pre)
+        out = _ref.pullback_mean(x, z, alpha, mean_pre=mean_pre, weights=weights)
         return (out + (_probe_ref.plane_probe(x),)) if probe else out
     n = x.shape[-1]
     pad = (-n) % 128
     outs = _k.pullback_mean_flat(
-        _pad_last(x, pad), _pad_last(z, pad),
+        _pad_last(x, pad), _pad_last(z, pad), weights,
         alpha=float(alpha), mean_pre=mean_pre, probe=probe, interpret=flags.interpret_mode(),
     )
     x_new, mean = outs[0], outs[1]
@@ -70,17 +75,18 @@ def pullback_mean(x, z, alpha: float, mean_pre: bool = False, probe: bool = Fals
     return x_new, mean
 
 
-def pullback_mean_momentum(x, z, v, alpha: float, beta: float, probe: bool = False):
+def pullback_mean_momentum(x, z, v, alpha: float, beta: float, probe: bool = False, weights=None):
     """Fused eq. (4) + eqs. (10)-(11) on a stacked plane. x: (m, n), z/v: (n,).
     Returns (x_new, z_next, v_new); with ``probe`` also the pre-pullback
-    ``(drift_sq, scale_sq)`` raw sums, from the same launch."""
+    ``(drift_sq, scale_sq)`` raw sums, from the same launch. ``weights``
+    selects the membership-masked variant (see :func:`pullback_mean`)."""
     if not flags.use_pallas():
-        out = _ref.pullback_mean_momentum(x, z, v, alpha, beta)
+        out = _ref.pullback_mean_momentum(x, z, v, alpha, beta, weights=weights)
         return (out + (_probe_ref.plane_probe(x),)) if probe else out
     n = x.shape[-1]
     pad = (-n) % 128
     outs = _k.pullback_momentum_flat(
-        _pad_last(x, pad), _pad_last(z, pad), _pad_last(v, pad),
+        _pad_last(x, pad), _pad_last(z, pad), _pad_last(v, pad), weights,
         alpha=float(alpha), beta=float(beta), probe=probe, interpret=flags.interpret_mode(),
     )
     x_new, z_next, v_new = outs[0], outs[1], outs[2]

@@ -7,6 +7,13 @@ pass over worker-stacked flat buffers. Every cast in these oracles mirrors
 the historical per-leaf tree ops bit for bit — the packed boundary is pinned
 to the per-leaf path by golden tests, so the cast chains here are load-
 bearing, not style.
+
+Masked boundaries (DESIGN.md §7): the fused ops accept an optional
+``weights`` vector — (m,) f32 renormalized averaging weights, zero on dead
+workers. A dead worker's row passes through the pullback untouched (it is
+not participating this round), and the worker mean becomes the weighted sum
+Σ_i w_i·x_i over live rows. ``weights=None`` is the fully-live path and is
+byte-identical to the pre-fault code.
 """
 from __future__ import annotations
 
@@ -20,12 +27,16 @@ def anchor_mix(x: jnp.ndarray, z: jnp.ndarray, alpha: float) -> jnp.ndarray:
     return ((1.0 - alpha) * xf + alpha * zf).astype(x.dtype)
 
 
-def pullback_mean(x, z, alpha: float, mean_pre: bool = False):
+def pullback_mean(x, z, alpha: float, mean_pre: bool = False, weights=None):
     """Fused eq. (4) + worker mean over a stacked flat buffer.
 
     x: (m, n) worker-stacked plane, z: (n,) anchor plane.
     Returns (x_new, mean) where mean averages the pulled-back plane (or the
     pre-pullback plane when ``mean_pre`` — EASGD's symmetric W).
+
+    With ``weights`` ((m,) f32, zeros on dead workers) the boundary is
+    membership-masked: dead rows skip the pullback and the mean is the
+    weighted sum over live rows.
 
     Kept shape-for-shape identical to the per-leaf tree ops (no rows
     reshape, no reassociation): XLA's fusion/FMA choices are shape-
@@ -35,12 +46,19 @@ def pullback_mean(x, z, alpha: float, mean_pre: bool = False):
     xf = x.astype(jnp.float32)
     zf = z.astype(jnp.float32)
     x_new = ((1.0 - alpha) * xf + alpha * zf[None]).astype(x.dtype)
+    if weights is None:
+        src = x if mean_pre else x_new
+        mean = jnp.mean(src, axis=0, dtype=jnp.float32).astype(x.dtype)
+        return x_new, mean
+    w = weights.astype(jnp.float32)
+    live = w > 0
+    x_new = jnp.where(live[:, None], x_new, x)
     src = x if mean_pre else x_new
-    mean = jnp.mean(src, axis=0, dtype=jnp.float32).astype(x.dtype)
+    mean = jnp.sum(src.astype(jnp.float32) * w[:, None], axis=0).astype(x.dtype)
     return x_new, mean
 
 
-def pullback_mean_momentum(x, z, v, alpha: float, beta: float):
+def pullback_mean_momentum(x, z, v, alpha: float, beta: float, weights=None):
     """Fused eq. (4) + eqs. (10)-(11) anchor momentum in one pass.
 
     x: (m, n), z: (n,) consumed anchor, v: (n,) anchor momentum.
@@ -49,8 +67,11 @@ def pullback_mean_momentum(x, z, v, alpha: float, beta: float):
         mean   = mean_i(x_new_i)               (eq. 5 collective)
         v_new  = β·v + (mean − z)              (eq. 10)
         z_next = z + v_new                     (eq. 11)
+
+    ``weights`` masks the pullback/mean exactly as in :func:`pullback_mean`;
+    the momentum recurrence itself is anchor-shaped and unmasked.
     """
-    x_new, mean = pullback_mean(x, z, alpha)
+    x_new, mean = pullback_mean(x, z, alpha, weights=weights)
     zf = z.astype(jnp.float32)
     v_new = (beta * v.astype(jnp.float32) + (mean.astype(jnp.float32) - zf)).astype(v.dtype)
     z_next = (zf + v_new.astype(jnp.float32)).astype(z.dtype)

@@ -83,8 +83,14 @@ def plane_meta(state_sds) -> dict:
     )
 
 
-def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False, strategy: str = None):
-    """Returns (lowered, meta) for one (arch × shape × mesh)."""
+def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False, strategy: str = None, faults: str = None):
+    """Returns (lowered, meta) for one (arch × shape × mesh).
+
+    ``faults`` (a :meth:`repro.fault.plan.FaultPlan.parse` spec) lowers the
+    *membership-carrying* round program for train shapes: ``TrainState``
+    gains the replicated live-mask/weights vectors and the boundary traces
+    its masked form (DESIGN.md §7). Without it the baseline fully-live
+    program — the one pinned by the collective budgets — is lowered."""
     arch = get_arch(arch_name)
     shape = INPUT_SHAPES[shape_name]
     if not arch.supports(shape):
@@ -106,6 +112,8 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: in
         plan=dict(workers=plan.workers, fsdp=plan.fsdp, tensor=plan.tensor),
         variant=variant,
     )
+    if faults is not None:
+        meta["faults"] = faults
 
     with mesh_context(lmesh, rules):
         if shape.mode == "train":
@@ -118,7 +126,9 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: in
             meta["tau"] = tau
             optimizer = sgd(momentum=0.9, nesterov=True, weight_decay=1e-4)
             sched = schedules.constant(0.1)
-            state_sds, state_sh, axes = specs.train_state_specs(cfg, plan, strat, optimizer, lmesh, rules)
+            state_sds, state_sh, axes = specs.train_state_specs(
+                cfg, plan, strat, optimizer, lmesh, rules, with_membership=faults is not None
+            )
             meta["plane"] = plane_meta(state_sds)
             batch_sds = specs.train_batch_specs(cfg, shape, plan, tau)
             batch_sh = specs.batch_shardings(batch_sds, lmesh, rules)
@@ -199,9 +209,10 @@ def run_pair(
     with_probes: bool = True,
     opt: bool = False,
     strategy: str = None,
+    faults: str = None,
 ):
     t0 = time.time()
-    lowered, meta, cfg = lower_pair(arch_name, shape_name, multi_pod, opt=opt, strategy=strategy)
+    lowered, meta, cfg = lower_pair(arch_name, shape_name, multi_pod, opt=opt, strategy=strategy, faults=faults)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -254,11 +265,25 @@ def run_pair(
     # would realize — per-τ program costs + simulated trajectory against
     # the runtime model (repro.control.schedule, DESIGN.md §6)
     tau_schedule = None
+    degraded_rounds = None
     if meta["mode"] == "train":
         from repro.control import TauController, schedule_block
 
+        # deterministic fault schedule (DESIGN.md §7): the membership-masked
+        # program was lowered above; here the plan's resolved schedule is
+        # recorded and threaded into the controller trajectory so the JSON
+        # proves adaptive-τ and fault handling compose (fault_hold rounds)
+        fault_plan = None
+        if faults is not None:
+            from repro.fault import FaultPlan
+
+            fault_plan = FaultPlan.parse(faults, m=meta["plan"]["workers"])
+            degraded_rounds = fault_plan.degraded_rounds(50)
+
         ctrl = TauController(tau=meta["tau"], tau_min=1, tau_max=32)
-        tau_schedule = schedule_block(meta["strategy"], ctrl, rounds=50, composed=composed)
+        tau_schedule = schedule_block(
+            meta["strategy"], ctrl, rounds=50, composed=composed, fault_plan=fault_plan
+        )
 
     result = dict(
         meta,
@@ -282,6 +307,7 @@ def run_pair(
         schedule_view=roof_sched.as_dict(),
         composed=composed,
         tau_schedule=tau_schedule,
+        degraded_rounds=degraded_rounds,
     )
     if verbose:
         strat_note = f", strategy {meta['strategy']}" if "strategy" in meta else ""
@@ -304,6 +330,12 @@ def run_pair(
                 f"({tau_schedule['compiled_programs']} programs), "
                 f"scheduled {tau_schedule['total_time_s']:.1f}s vs fixed-tau {tau_schedule['fixed_tau_time_s']:.1f}s"
             )
+        if degraded_rounds is not None:
+            n_holds = sum(1 for tr in tau_schedule["trajectory"] if tr["decision"] == "fault_hold")
+            print(
+                f"   faults: {degraded_rounds['degraded']}/{degraded_rounds['rounds']} degraded rounds, "
+                f"{n_holds} fault_hold tau decisions"
+            )
         print(f"   collective schedule: {roof_sched.collectives}")
         print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s probes {composed['probe_s'] if composed else 0}s")
     if out_dir:
@@ -315,6 +347,10 @@ def run_pair(
             # only train shapes resolve a strategy; serve pairs under
             # --all --strategy keep their untagged filenames
             tag += f"_{meta['strategy']}"
+        if faults is not None and "strategy" in meta:
+            # the membership-carrying lowering is a different program; keep
+            # the baseline JSONs (and their budget comparisons) untouched
+            tag += "_faults"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(result, f, indent=2, default=str)
     return result
@@ -333,6 +369,14 @@ def main() -> None:
         choices=sorted(STRATEGIES),
         help="two-phase CommStrategy for train shapes (default: specs.default_train_strategy — "
         "overlap_local_sgd, degenerating to local_sgd at w=1)",
+    )
+    ap.add_argument(
+        "--faults",
+        type=str,
+        default=None,
+        help="fault-plan spec for train shapes (repro.fault.FaultPlan.parse grammar, e.g. "
+        "'crash:1@2-5,slow:2x4'): lowers the membership-masked round program and records "
+        "the degraded_rounds schedule + fault_hold tau decisions (DESIGN.md §7)",
     )
     ap.add_argument("--no-probes", action="store_true", help="skip the scan-corrected component probes (faster smoke)")
     ap.add_argument("--all", action="store_true")
@@ -356,6 +400,7 @@ def main() -> None:
                 out_dir=args.out,
                 opt=args.opt,
                 strategy=args.strategy,
+                faults=args.faults,
                 with_probes=not args.no_probes,
             )
         except Exception as e:  # noqa: BLE001

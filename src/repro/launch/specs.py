@@ -248,11 +248,28 @@ def strategy_state_specs(cfg: ModelConfig, plan: ParallelPlan, strategy: CommStr
     return (x_sds, x_sh), (vars_sds, vars_sh), (inflight_sds, inflight_sh), axes
 
 
-def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mesh: Mesh, rules: dict):
+def membership_specs(plan: ParallelPlan, mesh: Mesh):
+    """Abstract :class:`repro.fault.membership.Membership` + shardings: two
+    (m,) f32 vectors, replicated — every device needs the full mask for the
+    masked boundary's where/weighted-sum, and at a few bytes per worker the
+    vectors are far below any useful shard granularity."""
+    from repro.fault.membership import Membership
+
+    m_sds = Membership(mask=_sds((plan.workers,), jnp.float32), weights=_sds((plan.workers,), jnp.float32))
+    rep = NamedSharding(mesh, P())
+    return m_sds, Membership(mask=rep, weights=rep)
+
+
+def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mesh: Mesh, rules: dict, with_membership: bool = False):
     """Abstract TrainState + shardings for ``algo`` — a two-phase
     ``CommStrategy`` (whose ``state_axes`` hook supplies the vars/inflight
     layouts, including the carried anchor collective) or, for the oracle
-    tests only, a legacy deprecated ``Algorithm``."""
+    tests only, a legacy deprecated ``Algorithm``.
+
+    ``with_membership`` adds the degraded-boundary membership slot
+    (DESIGN.md §7) to the state specs — the fault-injection dry-run lowers
+    the masked round program; the default keeps the baseline fully-live
+    state (``membership=None``), whose program is pinned by the budgets."""
     strategy_packed = isinstance(algo, CommStrategy) and getattr(algo, "packed", False)
     if isinstance(algo, CommStrategy):
         plane_resident = strategy_packed and opt_mod.packed_capable(optimizer)
@@ -285,8 +302,15 @@ def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mes
         )
         inflight_sh = None
 
-    state_sds = TrainState(x=x_sds, opt=opt_sds, vars=vars_sds, step=_sds((), jnp.int32), inflight=inflight_sds)
-    state_sh = TrainState(x=x_sh, opt=opt_sh, vars=vars_sh, step=NamedSharding(mesh, P()), inflight=inflight_sh)
+    mem_sds = mem_sh = None
+    if with_membership:
+        mem_sds, mem_sh = membership_specs(plan, mesh)
+    state_sds = TrainState(
+        x=x_sds, opt=opt_sds, vars=vars_sds, step=_sds((), jnp.int32), inflight=inflight_sds, membership=mem_sds
+    )
+    state_sh = TrainState(
+        x=x_sh, opt=opt_sh, vars=vars_sh, step=NamedSharding(mesh, P()), inflight=inflight_sh, membership=mem_sh
+    )
     return state_sds, state_sh, axes
 
 

@@ -3,11 +3,18 @@
 ``decode_step`` is the function the decode-shape dry-runs lower: one new
 token against a KV/state cache of the benchmark's seq_len. Caches follow the
 per-segment layout of ``repro.models.transformer.init_caches``.
+
+Robustness: batch entry points validate shapes up front (an empty or
+oversized batch fails with a clear error instead of an XLA trace dump), and
+:func:`hot_swap` wraps anchor-checkpoint reads in a bounded
+retry-with-backoff — a trainer mid-save produces transiently unreadable
+files, and serving should ride through that window, not crash.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import time
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +73,12 @@ def generate(
     seed: int = 0,
 ) -> np.ndarray:
     """Greedy/sampled generation for the examples (CPU-scale models)."""
+    if prompt.ndim != 2:
+        raise ValueError(f"prompt must be (batch, seq) int tokens, got shape {tuple(prompt.shape)}")
+    if prompt.shape[0] == 0 or prompt.shape[1] == 0:
+        raise ValueError(f"empty prompt batch: shape {tuple(prompt.shape)}")
+    if max_new < 1:
+        raise ValueError(f"max_new must be >= 1, got {max_new}")
     logits, caches = jax.jit(functools.partial(prefill, cfg))(params, dict(tokens=prompt))
     target_len = prompt.shape[-1] + max_new
     caches = _grow_all(caches, cfg, target_len)
@@ -82,6 +95,27 @@ def generate(
     return np.concatenate([np.asarray(t) for t in out], axis=1)
 
 
+def hot_swap(path: str, template, retries: int = 3, backoff: float = 0.05, _sleep: Callable[[float], None] = time.sleep):
+    """Restore a params checkpoint for serving, retrying transient read
+    failures (a trainer mid-save, a slow network filesystem) with bounded
+    exponential backoff: attempt k sleeps ``backoff * 2**k``. Structural
+    mismatches (``KeyError``: wrong template) are NOT retried — they cannot
+    heal by waiting. Raises the last transient error after ``retries``
+    failed attempts."""
+    from repro.checkpoint import restore
+
+    import zipfile
+
+    last = None
+    for attempt in range(max(int(retries), 1)):
+        try:
+            return restore(path, template)
+        except (OSError, EOFError, ValueError, zipfile.BadZipFile) as e:
+            last = e
+            _sleep(backoff * (2**attempt))
+    raise last
+
+
 class BatchedEngine:
     """Minimal batched-request server: fixed-slot continuous batching.
 
@@ -92,13 +126,36 @@ class BatchedEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, slots: int = 4, max_len: int = 256):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if max_len < 2:
+            raise ValueError(f"max_len must be >= 2 (one prompt token + one generated), got {max_len}")
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.queue: list = []
         self.results: dict = {}
 
     def submit(self, req_id, prompt: np.ndarray, max_new: int):
+        prompt = np.asarray(prompt)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            raise ValueError(
+                f"request {req_id!r}: prompt must be a non-empty 1-D token array, got shape {tuple(prompt.shape)}"
+            )
+        if max_new < 1:
+            raise ValueError(f"request {req_id!r}: max_new must be >= 1, got {max_new}")
+        if prompt.shape[0] + max_new > self.max_len:
+            raise ValueError(
+                f"request {req_id!r}: prompt ({prompt.shape[0]}) + max_new ({max_new}) exceeds "
+                f"engine max_len ({self.max_len})"
+            )
+        if req_id in self.results or any(rid == req_id for rid, _, _ in self.queue):
+            raise ValueError(f"duplicate request id {req_id!r}")
         self.queue.append((req_id, prompt, max_new))
+
+    def swap_params(self, path: str, retries: int = 3, backoff: float = 0.05) -> None:
+        """Hot-swap the served parameters from a checkpoint (see
+        :func:`hot_swap`) — the anchor-following deployment path."""
+        self.params = hot_swap(path, self.params, retries=retries, backoff=backoff)
 
     def run(self) -> dict:
         while self.queue:

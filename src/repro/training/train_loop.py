@@ -185,12 +185,18 @@ def make_round_step(
         # plane (one collective + one kernel launch per boundary) and return
         # the plane itself — x never leaves the packed representation, so
         # there is no pack/unpack seam at round granularity.
+        # the membership installed by the fault harness (None on clean
+        # rounds) masks the boundary; it is carried through unchanged — the
+        # harness owns installing/clearing it between rounds (DESIGN.md §7)
+        membership = state.membership
         if probe:
-            x, vars, inflight, stats = strategy.boundary_round(x, vars, inflight, axes_tree, probe=True)
+            x, vars, inflight, stats = strategy.boundary_round(
+                x, vars, inflight, axes_tree, probe=True, membership=membership
+            )
             metrics = dict(metrics, consensus_drift=stats.drift, consensus_scale=stats.scale)
         else:
-            x, vars, inflight = strategy.boundary_round(x, vars, inflight, axes_tree)
-        new_state = TrainState(x=x, opt=opt, vars=vars, step=step, inflight=inflight)
+            x, vars, inflight = strategy.boundary_round(x, vars, inflight, axes_tree, membership=membership)
+        new_state = TrainState(x=x, opt=opt, vars=vars, step=step, inflight=inflight, membership=membership)
         return new_state, metrics
 
     return round_step

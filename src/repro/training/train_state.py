@@ -41,6 +41,9 @@ class TrainState(NamedTuple):
     vars: AlgoVars  # strategy variables (anchor z, momentum v, extras)
     step: jnp.ndarray  # global local-step counter
     inflight: Any = None  # collective launched last boundary, consumed next (eq. 5 → eq. 4)
+    membership: Any = None  # live-worker Membership for degraded boundaries
+    #         (repro.fault, DESIGN.md §7); None = fully live, the baseline
+    #         program — the fault harness installs/clears it between rounds
 
 
 def make_train_state(

@@ -127,6 +127,127 @@ def test_perleaf_checkpoint_restores_into_packed_template(tmp_path, opt_name):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# -- crash-recovery determinism (ISSUE 7 satellite) --------------------------
+
+
+def _round_batches(rounds, seed=3):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(rounds):
+        x = jnp.asarray(rng.normal(size=(2, 4, 8, 8)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 4, size=(2, 4, 8)), jnp.int32)
+        out.append((x, y))
+    return out
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+def test_crash_recovery_bitwise(tmp_path, opt_name, dtype):
+    """Kill-and-restore determinism: checkpoint after round 2, discard the
+    live state, restore, continue — bitwise-identical to the uninterrupted
+    run for every {optimizer} × {param dtype} (bf16 round-trips losslessly
+    through the npz f32 widening)."""
+    opt = sgd() if opt_name == "sgd" else adamw()
+    params, axes = init_mlp(jax.random.PRNGKey(0), 8, 4, dtype=dtype)
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=True)
+    strat = make_strategy(cfg)
+    step = jax.jit(make_round_step(mlp_loss, opt, strat, schedules.constant(0.05), axes))
+    batches = _round_batches(5)
+
+    straight = make_train_state(params, 4, opt, strat, axes)
+    for b in batches:
+        straight = step(straight, b)[0]
+
+    interrupted = make_train_state(params, 4, opt, strat, axes)
+    for b in batches[:2]:
+        interrupted = step(interrupted, b)[0]
+    path = str(tmp_path / "crash.npz")
+    save(path, interrupted)
+    del interrupted  # the crash: only the checkpoint survives
+    resumed = restore(path, _fresh_template(cfg, params, axes, opt, packed=True))
+    for b in batches[2:]:
+        resumed = step(resumed, b)[0]
+
+    for a, b in zip(jax.tree.leaves(straight), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
+def test_crash_recovery_cross_format(tmp_path, opt_name):
+    """Kill-and-restore across formats: a packed checkpoint written at round
+    2 resumes in a per-leaf program and still matches the uninterrupted
+    per-leaf run (bitwise for sgd; adamw pays the pack/unpack f32 rounding
+    of its scalar-count conversion path, a few ULPs)."""
+    opt = sgd() if opt_name == "sgd" else adamw()
+    params, axes = init_mlp(jax.random.PRNGKey(0), 8, 4)
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=True)
+    strat_p, strat_l = make_strategy(cfg), make_strategy(dataclasses.replace(cfg, packed=False))
+    step_p = jax.jit(make_round_step(mlp_loss, opt, strat_p, schedules.constant(0.05), axes))
+    step_l = jax.jit(make_round_step(mlp_loss, opt, strat_l, schedules.constant(0.05), axes))
+    batches = _round_batches(5)
+
+    straight = make_train_state(params, 4, opt, strat_l, axes)
+    for b in batches:
+        straight = step_l(straight, b)[0]
+
+    interrupted = make_train_state(params, 4, opt, strat_p, axes)
+    for b in batches[:2]:
+        interrupted = step_p(interrupted, b)[0]
+    path = str(tmp_path / "crosscrash.npz")
+    save(path, interrupted)
+    resumed = restore(path, _fresh_template(cfg, params, axes, opt, packed=False))
+    for b in batches[2:]:
+        resumed = step_l(resumed, b)[0]
+
+    tol = dict(rtol=0, atol=0) if opt_name == "sgd" else dict(rtol=3e-6, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(straight.x), jax.tree.leaves(resumed.x)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **tol)
+
+
+# -- elastic restore (ISSUE 7 tentpole: elastic join/leave) -------------------
+
+
+@pytest.mark.parametrize("m_new", [2, 6], ids=["shrink", "grow"])
+def test_elastic_restore_resizes_worker_axis(tmp_path, m_new):
+    """``restore(..., elastic=True)`` rehydrates a checkpoint into a
+    template with a different worker count: shrink keeps the first m_new
+    slots, grow seeds new slots from slot 0 (the harness re-syncs them from
+    the anchor on their first round — DESIGN.md §7)."""
+    opt = sgd()
+    (s_p, _), (cfg, params, axes) = _trained_pair(opt)
+    path = str(tmp_path / "elastic.npz")
+    save(path, s_p)
+    template = make_train_state(params, m_new, opt, make_strategy(cfg), axes)
+
+    with pytest.raises(ValueError):
+        restore(path, template)  # without elastic=, a resize is an error
+
+    restored = restore(path, template, elastic=True)
+    old_rows = jax.tree.leaves(unpack(s_p.x))
+    new_rows = jax.tree.leaves(unpack(restored.x))
+    for old, new in zip(old_rows, new_rows):
+        old, new = np.asarray(old), np.asarray(new)
+        assert new.shape[0] == m_new
+        k = min(m_new, old.shape[0])
+        np.testing.assert_array_equal(new[:k], old[:k])
+        for j in range(old.shape[0], m_new):
+            np.testing.assert_array_equal(new[j], old[0])
+
+
+def test_elastic_restore_cross_format(tmp_path):
+    """Elastic + cross-format at once: a packed m=4 checkpoint restores into
+    an m=2 per-leaf template through the layout sidecar."""
+    opt = sgd()
+    (s_p, _), (cfg, params, axes) = _trained_pair(opt)
+    path = str(tmp_path / "elastic_cross.npz")
+    save(path, s_p)
+    template = make_train_state(params, 2, opt, make_strategy(dataclasses.replace(cfg, packed=False)), axes)
+    restored = restore(path, template, elastic=True)
+    assert not isinstance(restored.x, Packed)
+    for old, new in zip(jax.tree.leaves(unpack(s_p.x)), jax.tree.leaves(restored.x)):
+        np.testing.assert_array_equal(np.asarray(new), np.asarray(old)[:2])
+
+
 def test_dtype_preserved(tmp_path):
     tree = {"a": jnp.ones((3,), jnp.bfloat16), "b": {"c": jnp.arange(4, dtype=jnp.int32)}}
     path = str(tmp_path / "t.npz")

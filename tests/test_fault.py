@@ -1,0 +1,426 @@
+"""Fault-tolerant boundaries (ISSUE 7): deterministic FaultPlan schedules,
+elastic membership masks through every strategy's boundary (packed vs
+per-leaf bitwise), the harness's anchor re-sync, controller fault_hold
+composition, runtime-model fault simulation and calibration, and the
+serving robustness guards."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AlgoConfig
+from repro.control import TauController, schedule_block
+from repro.core import make_strategy
+from repro.core.runtime_model import RuntimeConfig, calibrated_config, simulate
+from repro.core.strategy import _worker_mean
+from repro.fault import FaultHarness, FaultPlan, from_mask, full, resync_from_anchor
+from repro.kernels import flags
+from repro.parallel.packing import pack, unpack
+
+M = 4
+
+
+# -- FaultPlan: determinism + grammar ----------------------------------------
+
+
+def test_plan_determinism():
+    """Same (spec, seed) → identical per-round schedule, from independent
+    instances and in any query order; a different seed departs."""
+    mk = lambda seed: FaultPlan.parse("std:0.4,prob:0.1@5,jitter:0.2", m=8, seed=seed)
+    a, b = mk(3), mk(3)
+    for r in (5, 0, 11, 2):  # order-independent: per-(seed, round) substreams
+        np.testing.assert_array_equal(a.mask_at(r), b.mask_at(r))
+        np.testing.assert_array_equal(a.round_compute_factors(r), b.round_compute_factors(r))
+        assert a.comm_jitter(r) == b.comm_jitter(r)
+    c = mk(4)
+    assert any(
+        not np.array_equal(a.round_compute_factors(r), c.round_compute_factors(r)) for r in range(8)
+    )
+
+
+def test_plan_parse_grammar():
+    plan = FaultPlan.parse("crash:1@2-5, slow:2x4, std:0.2, prob:0.05@6, jitter:0.1, deadline:2.5", m=4, seed=7)
+    assert plan.crashes == ((1, 2, 5),) and plan.slowdown == ((2, 4.0),)
+    assert plan.straggle_std == 0.2 and plan.straggle_prob == 0.05 and plan.straggle_factor == 6.0
+    assert plan.jitter_std == 0.1 and plan.deadline_factor == 2.5
+    # permanent crash (no rejoin round)
+    assert FaultPlan.parse("crash:0@3", m=2).crashes == ((0, 3, None),)
+    with pytest.raises(ValueError):
+        FaultPlan.parse("explode:1@2", m=4)
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(m=4, crashes=((7, 1, None),))  # worker out of range
+    with pytest.raises(ValueError):
+        FaultPlan(m=4, crashes=((1, 5, 3),))  # rejoin before crash
+    with pytest.raises(ValueError):
+        FaultPlan(m=4, slowdown=((0, -1.0),))
+
+
+def test_plan_schedule_semantics():
+    """Crash window [2, 5), persistent straggler past the deadline, rejoin
+    re-sync exactly at the window's end."""
+    plan = FaultPlan.parse("crash:1@2-5,slow:2x4", m=4, seed=7)  # deadline 3.0 < 4x
+    for r in range(8):
+        mask = plan.mask_at(r)
+        assert not mask[2], "persistent straggler must miss every deadline"
+        assert mask[1] == (not 2 <= r < 5)
+    np.testing.assert_array_equal(plan.resync_at(5), [False, True, False, False])
+    assert plan.resync_at(0).sum() == 0
+    block = plan.degraded_rounds(8)
+    assert block["degraded"] == 8 and block["rounds"] == 8
+    assert [r["round"] for r in block["schedule"] if r["resynced"]] == [5]
+    assert plan.fault_reason(3) == "crash+deadline"
+    assert plan.fault_reason(5) == "deadline+rejoin"
+    assert FaultPlan(m=4).fault_reason(0) is None
+
+
+def test_mask_at_keeps_one_live():
+    """A boundary over zero workers is undefined: when every worker is
+    excluded, the fastest survives."""
+    plan = FaultPlan(m=3, slowdown=((0, 10.0), (1, 8.0), (2, 12.0)))
+    mask = plan.mask_at(0)
+    assert mask.sum() == 1 and mask[1]  # 8x is the least-slow
+
+
+# -- Membership ---------------------------------------------------------------
+
+
+def test_membership_from_mask():
+    mem = from_mask(np.array([1.0, 0.0, 1.0, 1.0], np.float32))
+    np.testing.assert_allclose(np.asarray(mem.weights), [1 / 3, 0.0, 1 / 3, 1 / 3])
+    assert int(mem.live_count()) == 3 and not mem.is_full()
+    assert full(4).is_full()
+    with pytest.raises(ValueError):
+        from_mask(np.zeros(4, np.float32))  # no live workers
+    with pytest.raises(ValueError):
+        from_mask(np.ones((2, 2), np.float32))
+
+
+# -- masked boundaries: packed vs per-leaf, dead-row passthrough --------------
+
+
+def _leafy(rng):
+    p = {"s": jnp.float32(rng.normal())}
+    for i in range(4):
+        p[f"w{i}"] = jnp.asarray(rng.normal(size=(3 + i, 5 + 2 * i)), jnp.float32)
+    p["aligned"] = jnp.asarray(rng.normal(size=(2, 128)), jnp.float32)
+    return p
+
+
+def _stacked(rng, params):
+    return jax.tree.map(
+        lambda t: jnp.asarray(rng.normal(size=(M,) + t.shape), jnp.float32), params
+    )
+
+
+def test_masked_worker_mean_matches_oracle(rng):
+    """The membership-weighted worker mean (per-leaf and packed) equals the
+    explicit masked-fp32 oracle bitwise, for any mask."""
+    x = _stacked(rng, _leafy(rng))
+    w = jnp.asarray([0.5, 0.0, 0.25, 0.25], jnp.float32)
+    mean = _worker_mean(x, w)
+    for leaf, got in zip(jax.tree.leaves(x), jax.tree.leaves(mean)):
+        wf = np.asarray(w, np.float32).reshape((-1,) + (1,) * (leaf.ndim - 1))
+        want = np.sum(np.asarray(leaf, np.float32) * wf, axis=0)
+        np.testing.assert_array_equal(np.asarray(got), want)
+    # packed plane agrees bitwise with the per-leaf path
+    from repro.core.strategy import _packed_worker_mean
+
+    px = pack(x, lead=1)
+    pm = _packed_worker_mean(px, w)
+    for a, b in zip(jax.tree.leaves(unpack(pm)), jax.tree.leaves(mean)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+MASKED_STRATEGIES = [
+    ("overlap_local_sgd", dict(anchor_beta=0.0)),
+    ("overlap_local_sgd", dict(anchor_beta=0.7)),
+    ("local_sgd", {}),
+    ("easgd", {}),
+    ("cocod", {}),
+    ("delayed_avg", dict(delay_steps=3)),  # boundary-phase consume
+    ("sparse_anchor", dict(sparse_k=0.5)),
+]
+
+
+@pytest.mark.parametrize("name,kw", MASKED_STRATEGIES, ids=[f"{n}-{v}" for n, v in MASKED_STRATEGIES])
+def test_masked_boundary_packed_matches_perleaf(name, kw, rng):
+    """Tentpole golden test: under a partial membership the packed boundary
+    stays bitwise-identical to the per-leaf path, and every dead worker's
+    row passes through the boundary untouched."""
+    cfg = AlgoConfig(name=name, tau=3, alpha=0.6, packed=True, **kw)
+    mem = from_mask(np.array([1.0, 0.0, 1.0, 1.0], np.float32))
+    x = _stacked(rng, _leafy(rng))
+
+    strat_l = make_strategy(dataclasses.replace(cfg, packed=False))
+    vars_l = strat_l.init_vars(x, None)
+    infl_l = strat_l.init_inflight(x, vars_l, None)
+    x_l, vars_l2, infl_l2 = strat_l.boundary_round(x, vars_l, infl_l, None, membership=mem)
+
+    strat_p = make_strategy(cfg)
+    px = pack(x, lead=1)
+    vars_p = strat_p.init_vars(px, None)
+    infl_p = strat_p.init_inflight(px, vars_p, None)
+    px2, vars_p2, infl_p2 = strat_p.boundary_round(px, vars_p, infl_p, None, membership=mem)
+
+    for a, b in zip(jax.tree.leaves(unpack(px2)), jax.tree.leaves(x_l)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # dead worker 1: parameters pass through the boundary untouched
+    for before, after in zip(jax.tree.leaves(x), jax.tree.leaves(x_l)):
+        np.testing.assert_array_equal(np.asarray(before)[1], np.asarray(after)[1])
+
+
+def test_masked_pullback_kernel_matches_ref(rng):
+    """The masked anchor-mix kernels (fused pullback+mean, fused
+    pullback+momentum) match the jnp reference to f32 ULP tolerance (the
+    same bound the unmasked fused-kernel sweeps pin — XLA may fuse the
+    where/mul chain differently inside the pallas body)."""
+    from repro.kernels.anchor_mix import ops as ops_
+    from repro.kernels.anchor_mix import ref as ref_
+
+    tol = dict(rtol=1e-6, atol=5e-7)
+    for n in (128, 257):
+        x = jnp.asarray(rng.normal(size=(M, n)), jnp.float32)
+        z = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        w = jnp.asarray([0.5, 0.0, 0.25, 0.25], jnp.float32)
+        with flags.force_pallas():
+            got = ops_.pullback_mean(x, z, 0.6, weights=w)
+        want = ref_.pullback_mean(x, z, 0.6, weights=w)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), **tol)
+        with flags.force_pallas():
+            got_m = ops_.pullback_mean_momentum(x, z, v, 0.6, 0.7, weights=w)
+        want_m = ref_.pullback_mean_momentum(x, z, v, 0.6, 0.7, weights=w)
+        for a, b in zip(got_m, want_m):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), **tol)
+        # dead worker 1 passes through both paths untouched, exactly
+        np.testing.assert_array_equal(np.asarray(got[0])[1], np.asarray(x)[1])
+        np.testing.assert_array_equal(np.asarray(want[0])[1], np.asarray(x)[1])
+
+
+def test_fully_live_trace_unchanged(rng):
+    """membership=None must produce byte-for-byte the same boundary program
+    as not passing membership at all — the fully-live path keeps the pinned
+    launch/collective budgets."""
+    cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=True)
+    strat = make_strategy(cfg)
+    px = pack(_stacked(rng, _leafy(rng)), lead=1)
+    vars_ = strat.init_vars(px, None)
+    infl = strat.init_inflight(px, vars_, None)
+    base = jax.make_jaxpr(lambda a, b, c: strat.boundary_round(a, b, c, None))(px, vars_, infl)
+    explicit = jax.make_jaxpr(
+        lambda a, b, c: strat.boundary_round(a, b, c, None, membership=None)
+    )(px, vars_, infl)
+    assert str(base) == str(explicit)
+
+
+# -- harness: anchor re-sync + end-to-end -------------------------------------
+
+
+def test_resync_from_anchor(rng):
+    """A rejoining worker's plane row is replaced by the anchor; live rows
+    are untouched. Packed and per-leaf states behave identically."""
+    from repro.training import make_train_state
+    from repro.optim import sgd
+
+    params = _leafy(rng)
+    for packed in (True, False):
+        cfg = AlgoConfig(name="overlap_local_sgd", tau=2, alpha=0.6, anchor_beta=0.7, packed=packed)
+        state = make_train_state(params, M, sgd(), make_strategy(cfg), None)
+        resync = np.array([False, True, False, False])
+        out = resync_from_anchor(state, resync)
+        x_old = unpack(state.x) if packed else state.x
+        x_new = unpack(out.x) if packed else out.x
+        anchor = state.inflight
+        anchor = getattr(anchor, "avg", anchor)
+        a_tree = unpack(anchor) if packed else anchor
+        for old, new, anc in zip(jax.tree.leaves(x_old), jax.tree.leaves(x_new), jax.tree.leaves(a_tree)):
+            old, new, anc = np.asarray(old), np.asarray(new), np.asarray(anc)
+            np.testing.assert_array_equal(new[1], anc.astype(new.dtype))
+            np.testing.assert_array_equal(new[[0, 2, 3]], old[[0, 2, 3]])
+
+
+def test_faulted_training_end_to_end():
+    """Acceptance: a seeded plan (crash at 2, rejoin at 5, persistent 4x
+    straggler) trains to completion; the fault log records the exclusions
+    and the single anchor re-sync; the final state is fully live; loss
+    still improves."""
+    from repro.api import Experiment
+
+    plan = FaultPlan.parse("crash:1@2-5,slow:2x4", m=M, seed=7)
+    exp = Experiment(workers=M, strategy="overlap_local_sgd", seed=0)
+    res = exp.fit(rounds=8, faults=plan)
+    assert np.isfinite(res.losses).all() and res.losses[-1] < res.losses[0]
+    assert exp.state.membership is None
+    by_round = {rec["round"]: rec for rec in res.fault_log}
+    assert by_round[3]["excluded"] == [1, 2]
+    assert by_round[5]["resynced"] == [1]
+    assert all(2 in rec["excluded"] for rec in res.fault_log)
+
+
+def test_faulted_training_composes_with_adaptive_tau():
+    from repro.api import Experiment
+
+    plan = FaultPlan.parse("crash:1@1-3", m=M, seed=0)
+    exp = Experiment(workers=M, strategy="overlap_local_sgd", seed=0)
+    ctrl = TauController(tau=2, tau_min=1, tau_max=8)
+    res = exp.fit(rounds=4, faults=plan, adaptive_tau=ctrl)
+    decisions = {h["round"]: h for h in res.tau_schedule}
+    assert decisions[1]["decision"] == "fault_hold" and decisions[1]["fault"] == "crash"
+    assert decisions[3]["decision"] == "fault_hold" and decisions[3]["fault"] == "rejoin"
+    assert "fault" not in decisions[0]
+
+    with pytest.raises(ValueError):
+        exp.fit(rounds=1, faults=FaultPlan(m=M + 1))  # worker-count mismatch
+
+
+# -- controller + schedule ----------------------------------------------------
+
+
+def test_controller_fault_hold():
+    """A fault round holds τ regardless of drift and does not consume the
+    cooldown window."""
+    ctrl = TauController(tau=4, cooldown_rounds=2)
+    ctrl.update(drift=0.0, scale=1.0, fault="crash")  # drift would say grow
+    assert ctrl.tau == 4 and ctrl.history[-1]["decision"] == "fault_hold"
+    assert ctrl.history[-1]["fault"] == "crash"
+    ctrl.update(drift=0.0, scale=1.0)
+    assert ctrl.history[-1]["decision"] == "grow" and ctrl.tau == 8
+    ctrl.update(drift=0.0, scale=1.0, fault="deadline")  # mid-cooldown fault
+    assert ctrl.history[-1]["decision"] == "fault_hold"
+    ctrl.update(drift=0.0, scale=1.0)
+    assert ctrl.history[-1]["decision"] == "cooldown"
+    assert ctrl._cooldown == 1  # the fault round did not consume cooldown
+
+
+def test_schedule_block_records_fault_holds():
+    plan = FaultPlan.parse("crash:1@2-5", m=16, seed=0)
+    ctrl = TauController(tau=2, tau_min=1, tau_max=32)
+    block = schedule_block("overlap_local_sgd", ctrl, rounds=10, fault_plan=plan)
+    faulted = [t for t in block["trajectory"] if t["decision"] == "fault_hold"]
+    assert [t["round"] for t in faulted] == [2, 3, 4, 5]
+    assert faulted[-1]["fault"] == "rejoin"
+
+
+# -- runtime model ------------------------------------------------------------
+
+
+def test_runtime_model_noop_plan_matches_no_plan():
+    """A plan with no fault events must leave the simulated clocks exactly
+    at the historical fully-live model."""
+    cfg = RuntimeConfig(m=8, straggle_std=0.3, seed=5)
+    for algo in ("local_sgd", "overlap_local_sgd", "sync_sgd"):
+        a = simulate(algo, 4, 64, cfg)
+        b = simulate(algo, 4, 64, cfg, fault_plan=FaultPlan(m=8))  # eventless plan
+        assert a == b
+
+
+def test_runtime_model_faults_slow_the_run():
+    """Straggler/crash plans reshape the clocks: a blocked algorithm pays
+    the straggler in idle time unless the deadline policy excludes it; the
+    overlapped algorithm with an excluded straggler keeps its round time."""
+    plan_slow = FaultPlan(m=8, slowdown=((0, 4.0),), deadline_factor=100.0)  # never excluded
+    plan_cut = FaultPlan(m=8, slowdown=((0, 4.0),))  # deadline 3.0 excludes it
+    cfg = plan_slow.runtime_config()
+    base = simulate("local_sgd", 4, 64, cfg)
+    slow = simulate("local_sgd", 4, 64, cfg, fault_plan=plan_slow)
+    cut = simulate("local_sgd", 4, 64, cfg, fault_plan=plan_cut)
+    assert slow.total_time > base.total_time * 2  # the straggler holds every barrier
+    assert cut.total_time < slow.total_time  # deadline exclusion releases the barrier
+    assert cut.idle_time < slow.idle_time
+    # plan/config worker-count mismatch is an error
+    with pytest.raises(ValueError):
+        simulate("local_sgd", 4, 16, RuntimeConfig(m=4), fault_plan=plan_cut)
+
+
+def test_calibrated_config_from_dryrun_json():
+    d = dict(
+        plan=dict(workers=32, fsdp=4, tensor=2),
+        tau=4,
+        roofline=dict(compute_s=0.8, memory_s=0.4),
+        boundary_collectives={"all-reduce": dict(count=2, bytes=4e9)},
+    )
+    cfg = calibrated_config(d, link_gbps=40.0)
+    assert cfg.m == 32
+    np.testing.assert_allclose(cfg.t_step, 0.2)
+    np.testing.assert_allclose(cfg.t_comm, cfg.t_handshake + 4e9 / 5e9)
+    # plane-bytes fallback when the boundary probe was skipped
+    d2 = dict(plan=dict(workers=8), tau=1, roofline={}, plane=dict(x_buffer_bytes=1e9))
+    cfg2 = calibrated_config(d2, link_gbps=100.0)
+    assert cfg2.m == 8 and cfg2.t_step == RuntimeConfig().t_step
+    np.testing.assert_allclose(cfg2.t_comm, cfg2.t_handshake + 1e9 / 12.5e9)
+    # a fault plan's runtime_config rides on the calibrated constants
+    rt = FaultPlan(m=32, seed=9).runtime_config(base=cfg)
+    assert rt.m == 32 and rt.t_step == cfg.t_step and rt.seed == 9
+
+
+# -- serving robustness -------------------------------------------------------
+
+
+def test_engine_guards():
+    from repro.serving.engine import BatchedEngine
+
+    eng = BatchedEngine(cfg=None, params=None, slots=2, max_len=16)
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit("a", np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit("a", np.array([1, 2]), 0)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit("a", np.arange(10), 10)
+    eng.submit("a", np.array([1, 2]), 4)
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit("a", np.array([1, 2]), 4)
+    with pytest.raises(ValueError, match="slots"):
+        BatchedEngine(cfg=None, params=None, slots=0)
+
+
+def test_generate_guards():
+    from repro.serving.engine import generate
+
+    with pytest.raises(ValueError, match="empty"):
+        generate(None, None, jnp.zeros((0, 4), jnp.int32), 4)
+    with pytest.raises(ValueError, match="batch, seq"):
+        generate(None, None, jnp.zeros((4,), jnp.int32), 4)
+    with pytest.raises(ValueError, match="max_new"):
+        generate(None, None, jnp.ones((1, 4), jnp.int32), 0)
+
+
+def test_hot_swap_retries_transient_reads(tmp_path, monkeypatch):
+    """hot_swap rides through transient read failures with backoff, raises
+    after the retry budget, and never retries structural mismatches."""
+    from repro.serving import engine as eng
+
+    template = {"w": jnp.ones((2, 2), jnp.float32)}
+    calls = {"n": 0}
+
+    import repro.checkpoint as ckpt
+
+    good = {"w": jnp.full((2, 2), 3.0, jnp.float32)}
+
+    def flaky(path, tmpl):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("file mid-write")
+        return good
+
+    sleeps = []
+    monkeypatch.setattr(ckpt, "restore", flaky)
+    out = eng.hot_swap("x.npz", template, retries=3, backoff=0.01, _sleep=sleeps.append)
+    np.testing.assert_array_equal(np.asarray(out["w"]), 3.0)
+    assert calls["n"] == 3 and sleeps == [0.01, 0.02]
+
+    calls["n"] = -10  # always failing
+    with pytest.raises(OSError):
+        eng.hot_swap("x.npz", template, retries=2, backoff=0.0, _sleep=lambda s: None)
+
+    def structural(path, tmpl):
+        raise KeyError("checkpoint missing 'w'")
+
+    monkeypatch.setattr(ckpt, "restore", structural)
+    with pytest.raises(KeyError):
+        eng.hot_swap("x.npz", template, retries=5, backoff=0.0, _sleep=lambda s: None)
