@@ -291,6 +291,7 @@ class AlgoConfig:
     name: str = "overlap_local_sgd"
     # overlap_local_sgd | local_sgd | sync_sgd | easgd | cocod | powersgd
     # | delayed_avg (DaSGD) | sparse_anchor (LOSCAR)
+    # | gossip_pushsum / gossip_full / gossip_ring / gossip_exp (SGP)
     tau: int = 2  # local updates per round
     alpha: float = 0.6  # pullback strength (paper: 0.6 for tau>=2, 0.5 for tau=1)
     anchor_beta: float = 0.7  # anchor momentum (paper §4)
@@ -298,6 +299,10 @@ class AlgoConfig:
     powersgd_rank: int = 2
     delay_steps: int = 1  # delayed_avg: consume the average k steps into the next round
     sparse_k: float = 1.0  # sparse_anchor: top-k fraction of the anchor delta transmitted
+    # gossip_pushsum: mixing-matrix family over the worker axis
+    # ("full" | "ring" | "exp", see repro.core.topology). The fixed-topology
+    # registry entries (gossip_full/gossip_ring/gossip_exp) override this.
+    topology: str = "full"
     sync_router_stats: bool = True  # beyond-paper: all-reduce MoE router stats at boundaries
     # run all round-boundary math over the packed parameter plane (one flat
     # 128-lane-aligned buffer per dtype — one collective + one kernel launch

@@ -28,7 +28,7 @@ import math
 from typing import Iterable, List, Optional
 
 from repro.control.controller import TauController
-from repro.core.runtime_model import BLOCKING, OVERLAPPED, RuntimeConfig, simulate
+from repro.core.runtime_model import BLOCKING, GOSSIP, OVERLAPPED, RuntimeConfig, simulate
 
 # strategies the runtime model has no entry for, mapped onto the entry with
 # the same blocking structure (delayed_avg consumes mid-round like CoCoD;
@@ -38,7 +38,7 @@ _RUNTIME_ALGO = {"delayed_avg": "cocod", "sparse_anchor": "overlap_local_sgd"}
 
 def runtime_algo(strategy: str) -> str:
     """Map a strategy name onto the runtime model's algorithm set."""
-    if strategy in BLOCKING or strategy in OVERLAPPED:
+    if strategy in BLOCKING or strategy in OVERLAPPED or strategy in GOSSIP:
         return strategy
     return _RUNTIME_ALGO.get(strategy, "local_sgd")
 

@@ -23,6 +23,11 @@ from repro.core.strategy import (
     CoCoDStrategy,
     DelayedAveragingStrategy,
     EASGDStrategy,
+    GossipExpStrategy,
+    GossipFullStrategy,
+    GossipInflight,
+    GossipPushSumStrategy,
+    GossipRingStrategy,
     LegacyStrategy,
     LocalSGDStrategy,
     OverlapLocalSGDStrategy,
@@ -35,7 +40,7 @@ from repro.core.strategy import (
     resolve_strategy,
     sparsify_topk,
 )
-from repro.core import mixing, runtime_model
+from repro.core import mixing, runtime_model, topology
 
 # Legacy names are served lazily so that merely importing repro.core never
 # touches the deprecated module, and pulling one of them out warns at the
@@ -79,6 +84,11 @@ __all__ = [
     "DelayedAveragingStrategy",
     "EASGD",
     "EASGDStrategy",
+    "GossipExpStrategy",
+    "GossipFullStrategy",
+    "GossipInflight",
+    "GossipPushSumStrategy",
+    "GossipRingStrategy",
     "LegacyStrategy",
     "LocalSGD",
     "LocalSGDStrategy",
@@ -96,4 +106,5 @@ __all__ = [
     "resolve_strategy",
     "runtime_model",
     "sparsify_topk",
+    "topology",
 ]

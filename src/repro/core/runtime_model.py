@@ -30,6 +30,29 @@ Blocking semantics per algorithm:
     overlap_local_sgd / cocod — NON-blocking: collective launched at a
                  boundary is consumed at the next one; a worker only waits if
                  the collective is still in flight when it arrives there.
+    gossip_*   — NON-blocking like overlap, but the barrier is per-worker:
+                 worker i waits only on its *in-neighbors* for the round's
+                 mixing matrix (:mod:`repro.core.topology`), and the
+                 collective payload is priced by the topology degree —
+                 t_handshake + (t_comm − t_handshake)·degree/(m−1), so the
+                 degenerate fully-connected case prices exactly like the
+                 global model. This is what lets the error–runtime figures
+                 project to thousands-of-worker fleets, where a global
+                 barrier is the wrong cost model (a ring worker at m=4096
+                 still waits on 2 neighbors and ships 2 model copies).
+
+Shared semantics across branches:
+* a trailing ``steps % tau`` partial segment advances the clocks by its
+  compute but runs no boundary (there is no round to average);
+* an overlapped run's total includes the *final* boundary's in-flight
+  collective — the last averaged model does not exist until it completes;
+* an all-dead round (possible once crash windows are authoritative in
+  :meth:`FaultPlan.mask_at`) skips its collective entirely: clocks advance
+  by the round's compute and the round is counted in
+  ``RuntimeResult.skipped_rounds``. This mirrors the live path, where
+  :func:`repro.fault.membership.from_mask` refuses to build an all-dead
+  boundary host-side — the simulator records the hole instead of raising
+  mid-sweep.
 """
 from __future__ import annotations
 
@@ -42,6 +65,15 @@ import numpy as np
 
 BLOCKING = {"sync_sgd": 1, "powersgd": 1, "local_sgd": None, "easgd": None}
 OVERLAPPED = ("overlap_local_sgd", "cocod")
+# overlapped gossip strategies: per-worker neighbor barriers, degree-priced
+# collectives; the topology comes from the name (or an explicit override)
+GOSSIP = ("gossip_pushsum", "gossip_full", "gossip_ring", "gossip_exp")
+_GOSSIP_TOPOLOGY = {
+    "gossip_pushsum": "full",
+    "gossip_full": "full",
+    "gossip_ring": "ring",
+    "gossip_exp": "exp",
+}
 
 
 @dataclass
@@ -61,10 +93,15 @@ class RuntimeConfig:
 @dataclass
 class RuntimeResult:
     total_time: float
-    compute_time: float
+    compute_time: float  # mean per-worker compute over the run
     exposed_comm: float  # communication NOT hidden behind compute
-    idle_time: float  # straggler-induced waiting
+    idle_time: float  # straggler-induced waiting (per live worker)
     steps: int
+    # critical-path compute: the slowest worker's total compute — the floor
+    # no schedule can beat (total_time ≥ compute_critical always)
+    compute_critical: float = 0.0
+    # rounds whose collective was skipped because no worker was live
+    skipped_rounds: int = 0
 
     @property
     def comm_ratio(self) -> float:
@@ -127,14 +164,27 @@ def _fault_round(r: int, m: int, fault_plan):
     return fault_plan.mask_at(r), fault_plan.comm_jitter(r)
 
 
-def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=None) -> RuntimeResult:
+def gossip_comm_time(cfg: RuntimeConfig, degree: int) -> float:
+    """Per-round collective time for a degree-d neighbor exchange: the fixed
+    handshake plus the payload term scaled by how many model copies a worker
+    actually ships — degree/(m−1) of the fully-connected payload, so the
+    degenerate ``full`` topology prices exactly ``t_comm``."""
+    return cfg.t_handshake + (cfg.t_comm - cfg.t_handshake) * (degree / max(cfg.m - 1, 1))
+
+
+def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=None, topology=None) -> RuntimeResult:
     """``fault_plan`` (:class:`repro.fault.plan.FaultPlan`, optional) drives
     degraded rounds: its per-round compute factors scale the step times, its
     crash windows + straggler deadlines take workers out of barriers (the
     deadline policy — an excluded worker cannot hold the round), its network
     jitter scales each round's collective, and a rejoining worker resumes at
     the round clock (the anchor re-sync). Without a plan the clocks are the
-    historical fully-live model, value for value."""
+    historical fully-live model, value for value.
+
+    ``topology`` (:class:`repro.core.topology.Topology` or a name string)
+    selects the gossip barrier structure for the ``gossip_*`` algorithms;
+    by default it is derived from the algorithm name over ``cfg.m`` workers.
+    """
     rng = np.random.default_rng(cfg.seed)
     t = _step_times(cfg, rng, steps)
     m = cfg.m
@@ -145,73 +195,125 @@ def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=Non
     if algo == "sync_sgd" or algo == "powersgd":
         tau = 1
 
+    rounds = steps // tau
     if fault_plan is not None:
         if fault_plan.m != m:
             raise ValueError(f"fault plan is over m={fault_plan.m} workers, config has m={m}")
-        rounds = steps // tau
         if rounds > 0:
             factors = np.stack([fault_plan.round_compute_factors(r) for r in range(rounds)])
             t[: rounds * tau] *= np.repeat(factors, tau, axis=0)
 
-    compute_total = float(t.sum(axis=0).max())  # critical-path compute
+    compute_critical = float(t.sum(axis=0).max())  # critical-path compute
     mean_compute = float(t.sum(axis=0).mean())
+    # the trailing steps % tau partial segment: pure local compute, no
+    # boundary — every branch advances the clocks by it after its last round
+    tail = t[rounds * tau :].sum(axis=0) if steps > rounds * tau else None
 
     if algo in ("sync_sgd", "powersgd", "local_sgd", "easgd"):
         # barrier every tau steps (over LIVE workers only), then blocking
         # collective; dead/excluded workers rejoin at the round clock
-        clock = 0.0
         exposed = 0.0
         idle = 0.0
+        skipped = 0
         worker_clock = np.zeros(m)
-        for r in range(steps // tau):
-            seg = t[r * tau : (r + 1) * tau].sum(axis=0)
-            live, jitter = _fault_round(r, m, fault_plan)
-            arrive = worker_clock + seg
-            barrier = arrive[live].max()
-            idle += float((barrier - arrive[live]).sum()) / m
-            c = comm * jitter
-            clock = barrier + c
-            exposed += c
-            worker_clock = np.full(m, clock)
-        return RuntimeResult(clock, mean_compute, exposed, idle, steps)
-
-    if algo in OVERLAPPED:
-        # non-blocking: collective for boundary r completes at
-        # max_i(arrival_r) + comm; worker i blocks at boundary r+1 only if
-        # that completion is still in flight when it arrives there. Only
-        # live workers contribute to (or wait on) the collective.
-        worker_clock = np.zeros(m)
-        ready = 0.0  # completion time of the in-flight collective
-        exposed = 0.0
-        idle = 0.0
-        rounds = steps // tau
         for r in range(rounds):
             seg = t[r * tau : (r + 1) * tau].sum(axis=0)
             live, jitter = _fault_round(r, m, fault_plan)
+            arrive = worker_clock + seg
+            if not live.any():
+                # all-dead round: no barrier, no collective — the live path
+                # (Membership.from_mask) refuses such a boundary host-side;
+                # here the clocks advance by local compute and move on
+                skipped += 1
+                worker_clock = arrive
+                continue
+            barrier = arrive[live].max()
+            idle += float((barrier - arrive[live]).sum()) / max(int(live.sum()), 1)
+            c = comm * jitter
+            exposed += c
+            worker_clock = np.full(m, barrier + c)
+        if tail is not None:
+            worker_clock = worker_clock + tail
+        total = float(worker_clock.max())
+        return RuntimeResult(total, mean_compute, exposed, idle, steps, compute_critical, skipped)
+
+    if algo in OVERLAPPED or algo in GOSSIP or topology is not None:
+        # non-blocking: the collective launched at boundary r completes comm
+        # seconds after every contribution exists; a worker blocks at
+        # boundary r+1 only if the completion it must consume is still in
+        # flight when it arrives there. The global algorithms wait on (and
+        # contribute to) ALL live workers; gossip workers wait only on their
+        # live in-neighbors for the round's mixing matrix, and ship a
+        # degree-priced payload.
+        topo = None
+        if algo in GOSSIP or topology is not None:
+            from repro.core.topology import Topology, make_topology
+
+            topo = topology or _GOSSIP_TOPOLOGY.get(algo, "full")
+            if not isinstance(topo, Topology):
+                topo = make_topology(str(topo), m)
+            if topo.m != m:
+                raise ValueError(f"topology is over m={topo.m} workers, config has m={m}")
+            comm = gossip_comm_time(cfg, topo.degree)
+        worker_clock = np.zeros(m)
+        ready = np.zeros(m)  # per-worker completion time of the in-flight collective
+        exposed = 0.0
+        idle = 0.0
+        skipped = 0
+        for r in range(rounds):
+            seg = t[r * tau : (r + 1) * tau].sum(axis=0)
+            live, jitter = _fault_round(r, m, fault_plan)
+            if not live.any():
+                # all-dead round: nothing launched, nothing consumed; any
+                # in-flight collective stays in flight for the next round
+                skipped += 1
+                worker_clock = worker_clock + seg
+                continue
             arrive = worker_clock + seg
             # wait (only) for the previous round's collective
             stall = np.maximum(ready - arrive, 0.0)
             exposed += float(stall[live].max())
             idle += float(stall[live].mean())
             advanced = arrive + stall
-            # launch this round's collective once all LIVE contributions
-            # exist; excluded workers park at the round clock (re-sync)
             round_clock = float(advanced[live].max())
+            if topo is None:
+                # global collective: complete once all LIVE contributions
+                # exist; excluded workers park at the round clock (re-sync)
+                # and — like the live path's anchor re-sync — consume the
+                # same collective as everyone else on rejoin
+                ready = np.full(m, round_clock + comm * jitter)
+            else:
+                # per-worker neighbor-set barrier: worker i's mix completes
+                # once its live in-neighbors (self included) have advanced
+                nb = topo.in_mask(r) & live[None, :]
+                vals = np.where(nb, advanced[None, :], -np.inf)
+                recv = vals.max(axis=1)
+                recv = np.where(np.isfinite(recv), recv, advanced)
+                ready = np.where(live, recv + comm * jitter, ready)
             worker_clock = np.where(live, advanced, round_clock)
-            ready = round_clock + comm * jitter
-        total = float(worker_clock.max())
-        return RuntimeResult(total, mean_compute, exposed, idle, steps)
+        if tail is not None:
+            worker_clock = worker_clock + tail
+        # the final boundary's collective is still in flight at the last
+        # arrival: the run is not done until it lands (the last averaged
+        # model does not exist before then)
+        final_wait = max(0.0, float(ready.max()) - float(worker_clock.max()))
+        exposed += final_wait
+        total = float(worker_clock.max()) + final_wait
+        return RuntimeResult(total, mean_compute, exposed, idle, steps, compute_critical, skipped)
 
     raise ValueError(algo)
 
 
-def epoch_summary(algo: str, tau: int, steps_per_epoch: int, cfg: RuntimeConfig) -> Dict[str, float]:
-    r = simulate(algo, tau, steps_per_epoch, cfg)
+def epoch_summary(
+    algo: str, tau: int, steps_per_epoch: int, cfg: RuntimeConfig, fault_plan=None, topology=None
+) -> Dict[str, float]:
+    r = simulate(algo, tau, steps_per_epoch, cfg, fault_plan=fault_plan, topology=topology)
     return dict(
         algo=algo,
         tau=tau,
         epoch_time=r.total_time,
         compute=r.compute_time,
+        compute_critical=r.compute_critical,
         exposed_comm=r.exposed_comm,
         comm_ratio=r.comm_ratio,
         idle=r.idle_time,

@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import AlgoConfig
+from repro.core.topology import cached_topology, compose_membership
 from repro.kernels.anchor_mix import ops as anchor_ops
 from repro.kernels.consensus_probe import ops as probe_ops
 from repro.parallel import anchor_axes, current_mesh
@@ -964,6 +965,214 @@ class SparseAnchorStrategy(CommStrategy):
         return AlgoVars(z=a, extra=a), a
 
 
+class GossipInflight(NamedTuple):
+    """A launched gossip push: the neighbor-weighted parameter sums (worker-
+    stacked plane or pytree) plus the (m,) f32 pushed push-weights that
+    debias them at the next boundary (z_i = mix_i / w_i)."""
+
+    mix: Any
+    w: Any
+
+
+class GossipPushSumStrategy(CommStrategy):
+    """Stochastic-Gradient-Push gossip (arXiv 1811.10792) over a sparse
+    mixing topology (:mod:`repro.core.topology`).
+
+    Each worker carries a **push weight** w_i (``vars.extra``, init 1). At
+    a boundary it pushes its weighted model w_i·x_i and its weight w_i
+    through the round's column-stochastic matrix P (asymmetric sends — the
+    two-phase protocol's in-flight slot carries them for τ local steps),
+    and the *next* boundary debiases the received sums:
+
+        launch:  mix_i  = Σ_j P[i,j]·w_j·x_j      (GossipInflight.mix)
+                 w'_i   = Σ_j P[i,j]·w_j          (GossipInflight.w)
+        apply:   z_i    = mix_i / w'_i            (weight-normalized average)
+                 x_i   ← x_i + α·(z_i − x_i)      (the paper's pullback, eq. 4)
+
+    Column-stochasticity conserves total push-weight mass (Σ_i w_i is
+    invariant), so z_i is always a convex combination of neighbor models;
+    with the doubly-stochastic fully-live matrices of
+    :mod:`repro.core.topology`, w stays at its fixed point w ≡ 1.
+
+    ``membership`` composes into the matrix per the SGP recipe
+    (:func:`repro.core.topology.compose_membership`): a dead neighbor's
+    column renormalizes away, dead rows pass through (x and w both), and
+    a rejoining worker re-syncs host-side from the anchor as usual.
+
+    The degenerate ``full`` topology is special-cased onto the *exact*
+    Overlap-Local-SGD (β=0) code path — fused ``pullback_mean`` per bucket,
+    ``_worker_mean`` + ``_pullback`` per leaf — so fully-connected gossip
+    reproduces the membership-weighted masked mean bit for bit (its matrix
+    rows composed with a mask *are* ``Membership.weights``, and w ≡ 1
+    analytically).
+    """
+
+    name = "gossip_pushsum"
+    needs_anchor = False
+    # subclasses pin the topology; None defers to cfg.topology
+    topology: Optional[str] = None
+
+    def __init__(self, cfg: AlgoConfig):
+        super().__init__(cfg)
+        self.topo_name = self.topology or getattr(cfg, "topology", "full") or "full"
+        self.full = self.topo_name == "full"
+
+    # ---- state ----
+    def init_vars(self, x_stacked, axes_tree=None) -> AlgoVars:
+        m = x_stacked_leading(x_stacked)
+        # per-worker push weights + the phase counter indexing the matrix
+        # cycle (boundary hooks receive no round index; the counter rides
+        # the scan carry)
+        return AlgoVars(extra=(jnp.ones((m,), jnp.float32), jnp.zeros((), jnp.int32)))
+
+    def init_inflight(self, x_stacked, vars: AlgoVars, axes_tree=None):
+        if self.full:
+            # all workers start equal — identical to OverlapLocalSGD
+            if self.packed:
+                return _constrain_anchor_packed(_pack_anchor(x_stacked), axes_tree)
+            return _constrain_anchor(jax.tree.map(lambda t: t[0], x_stacked), axes_tree)
+        m = x_stacked_leading(x_stacked)
+        if self.packed:
+            mix = _as_plane(x_stacked)
+        else:
+            mix = jax.tree.map(jnp.copy, x_stacked)
+        # w' = 1: round 0's apply debiases by exactly 1.0 (IEEE-exact), so
+        # the first pullback is the identity on an equal start
+        return GossipInflight(mix=mix, w=jnp.ones((m,), jnp.float32))
+
+    # ---- topology plumbing ----
+    def _push_matrix(self, m: int, t, w, membership):
+        """Round-t effective push matrix P̃ · diag(w): the membership-composed
+        mixing matrix with the senders' push weights folded into the columns,
+        so ``mix = Peff @ x`` and ``w' = Peff.sum(axis=1)`` in one materialized
+        (m, m) f32 matrix."""
+        topo = cached_topology(self.topo_name, m)
+        mats = jnp.asarray(topo.mats)
+        P = mats[0] if topo.num_phases == 1 else mats[t % topo.num_phases]
+        if membership is not None:
+            P = compose_membership(P, membership.mask)
+        return P * w.astype(jnp.float32)[None, :]
+
+    @staticmethod
+    def _tick(vars: AlgoVars) -> AlgoVars:
+        w, t = vars.extra
+        return AlgoVars(z=vars.z, v=vars.v, extra=(w, t + 1))
+
+    # ---- per-leaf oracle phases ----
+    def boundary_apply(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, membership=None):
+        alpha = self.cfg.alpha
+        if self.full:
+            x_new = _pullback(x_stacked, inflight, alpha)
+            if membership is not None:
+                x_new = _live_where(membership.mask, x_new, x_stacked)
+            return x_new, vars
+        w, t = vars.extra
+        wmix = inflight.w
+        # a row with zero received push mass (a worker that was dead when
+        # this collective launched, now rejoining) takes the identity apply:
+        # nothing arrived, so there is nothing to debias (0/0 otherwise)
+        got = (wmix > 0).astype(jnp.float32)
+        wsafe = jnp.where(wmix > 0, wmix, 1.0)
+
+        def debias(ml):
+            wb = wsafe.astype(jnp.float32).reshape((-1,) + (1,) * (ml.ndim - 1))
+            return (ml.astype(jnp.float32) / wb).astype(ml.dtype)
+
+        z = jax.tree.map(debias, inflight.mix)
+        x_new = jax.vmap(lambda xi, zi: anchor_ops.pullback_tree(xi, zi, alpha))(x_stacked, z)
+        mask = got if membership is None else got * membership.mask
+        x_new = _live_where(mask, x_new, x_stacked)
+        w_new = jnp.where(mask > 0, wmix, w)
+        return x_new, AlgoVars(z=vars.z, v=vars.v, extra=(w_new, t))
+
+    def boundary_launch(self, x_stacked, vars: AlgoVars, axes_tree=None, membership=None):
+        if self.full:
+            z_new = _worker_mean(x_stacked, _mem_weights(membership))
+            return self._tick(vars), _constrain_anchor(z_new, axes_tree)
+        w, t = vars.extra
+        Peff = self._push_matrix(x_stacked_leading(x_stacked), t, w, membership)
+        mix = jax.tree.map(
+            lambda l: jnp.einsum("ij,j...->i...", Peff, l.astype(jnp.float32)).astype(l.dtype),
+            x_stacked,
+        )
+        return self._tick(vars), GossipInflight(mix=mix, w=jnp.sum(Peff, axis=1))
+
+    # ---- packed boundary ----
+    def _packed_boundary(self, x_stacked, vars: AlgoVars, inflight, axes_tree=None, probe: bool = False, membership=None):
+        alpha = self.cfg.alpha
+        px = _as_plane(x_stacked)
+        if self.full:
+            # the degenerate case rides OverlapLocalSGD's exact fused path:
+            # one pullback_mean launch per dtype bucket, masked via weights
+            outs = [
+                anchor_ops.pullback_mean(bx, bz, alpha, probe=probe, weights=_mem_weights(membership))
+                for bx, bz in zip(px.buffers, inflight.buffers)
+            ]
+            x_new = Packed(tuple(o[0] for o in outs), px.layout)
+            z_next = Packed(tuple(o[1] for o in outs), inflight.layout)
+            result = (_match_rep(x_stacked, x_new), self._tick(vars), _constrain_anchor_packed(z_next, axes_tree))
+            if probe:
+                stats = probe_ops.stats_from_partials([o[-1] for o in outs], x_stacked_leading(x_stacked))
+                return result + (stats,)
+            return result
+        # sparse topology: the mix does not read through the fused pullback,
+        # so the probe is the standalone per-bucket launch (like cocod)
+        stats = probe_ops.packed_probe(px) if probe else None
+        w, t = vars.extra
+        wmix = inflight.w
+        # zero received mass → identity apply (mirrors the per-leaf oracle:
+        # a rejoining worker's launched-while-dead row would debias 0/0)
+        got = (wmix > 0).astype(jnp.float32)
+        wb = jnp.where(wmix > 0, wmix, 1.0).astype(jnp.float32)[:, None]
+        x_new = Packed(
+            tuple(
+                anchor_ops.anchor_mix(bx, (bm.astype(jnp.float32) / wb).astype(bx.dtype), alpha)
+                for bx, bm in zip(px.buffers, inflight.mix.buffers)
+            ),
+            px.layout,
+        )
+        mask = got if membership is None else got * membership.mask
+        x_new = _packed_live_where(mask, x_new, px)
+        w_new = jnp.where(mask > 0, wmix, w)
+        m = x_stacked_leading(x_stacked)
+        Peff = self._push_matrix(m, t, w_new, membership)
+        mix = buffer_map(lambda b: (Peff @ b.astype(jnp.float32)).astype(b.dtype), x_new)
+        vars = AlgoVars(z=vars.z, v=vars.v, extra=(w_new, t + 1))
+        out = (_match_rep(x_stacked, x_new), vars, GossipInflight(mix=mix, w=jnp.sum(Peff, axis=1)))
+        return out + (stats,) if probe else out
+
+    # ---- AOT spec support ----
+    def state_axes(self, axes_tree):
+        # vars — push weights (m,) + phase counter — replicate
+        if self.full:
+            infl = PACKED_ANCHOR_AXES if self.packed else anchor_axes(axes_tree)
+            return None, infl
+        if self.packed:
+            return None, GossipInflight(mix=PACKED_STACKED_AXES, w=None)
+        return None, GossipInflight(mix=_stacked_axes(axes_tree), w=None)
+
+
+class GossipFullStrategy(GossipPushSumStrategy):
+    """Fully-connected gossip: bitwise the membership-weighted masked mean."""
+
+    name = "gossip_full"
+    topology = "full"
+
+
+class GossipRingStrategy(GossipPushSumStrategy):
+    """Static ring gossip: each worker averages with its two ring neighbors."""
+
+    name = "gossip_ring"
+    topology = "ring"
+
+
+class GossipExpStrategy(GossipPushSumStrategy):
+    """One-peer exponential (hypercube) gossip: log₂(m) cycled phases."""
+
+    name = "gossip_exp"
+    topology = "exp"
+
+
 # ---------------------------------------------------------------------------
 # legacy adapter + factory
 # ---------------------------------------------------------------------------
@@ -1034,9 +1243,18 @@ STRATEGIES = {
     "powersgd": PowerSGDStrategy,
     "delayed_avg": DelayedAveragingStrategy,
     "sparse_anchor": SparseAnchorStrategy,
+    "gossip_pushsum": GossipPushSumStrategy,
+    "gossip_full": GossipFullStrategy,
+    "gossip_ring": GossipRingStrategy,
+    "gossip_exp": GossipExpStrategy,
 }
 
-_ALIASES = {"dasgd": "delayed_avg", "loscar": "sparse_anchor", "overlap": "overlap_local_sgd"}
+_ALIASES = {
+    "dasgd": "delayed_avg",
+    "loscar": "sparse_anchor",
+    "overlap": "overlap_local_sgd",
+    "sgp": "gossip_pushsum",
+}
 
 
 def make_strategy(cfg: AlgoConfig) -> CommStrategy:

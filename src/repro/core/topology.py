@@ -1,0 +1,171 @@
+"""Sparse gossip topologies: static mixing matrices over the worker axis.
+
+The paper's boundary collective is fully-connected — every worker waits on
+the mean of *all* workers. Stochastic Gradient Push (arXiv 1811.10792,
+PAPERS.md) generalizes the same anchor-pullback structure to sparse,
+possibly asymmetric neighbor exchanges described by a **column-stochastic
+mixing matrix** P: column j says how worker j distributes its mass among
+its out-neighbors (Σ_i P[i,j] = 1), and worker i's received mix is
+
+    mix_i = Σ_j P[i,j] · x_j.
+
+This module owns the matrices; :class:`repro.core.strategy.GossipPushSumStrategy`
+owns the push-weight recursion that debiases them, and
+:mod:`repro.core.runtime_model` prices their neighbor-set barriers.
+
+Three families, all with self-loops (P[j,j] > 0, so a worker never hands
+away all of its own mass) and all **doubly stochastic when fully live** —
+push weights then stay at their fixed point w ≡ 1 and the gossip mix is a
+plain convex neighbor average:
+
+* ``full`` — P = 1/m everywhere: one phase, the degenerate case. Composed
+  with a membership mask its rows are exactly the renormalized
+  ``Membership.weights``, i.e. the existing masked worker mean.
+* ``ring`` — one static phase; each worker averages with its two ring
+  neighbors (weights 1/3). Degree 2, independent of m.
+* ``exp`` — one-peer exponential (hypercube when m is a power of two):
+  ``⌈log2 m⌉`` phases cycled round-robin; in phase l worker j keeps half
+  its mass and pushes the other half to ``(j + 2^l) mod m``. Degree 1 per
+  round; entries are exact binary fractions (1/2), so push-weight algebra
+  is exact in f32.
+
+Membership composition (:func:`compose_membership`) follows the SGP
+recipe: a dead worker's row and column are zeroed (it neither sends nor
+receives) and every live column is renormalized to sum to 1 — a live
+sender redistributes the mass it would have pushed to dead neighbors over
+its remaining live out-neighbors (always nonempty: the self-loop).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import numpy as np
+
+TOPOLOGIES = ("full", "ring", "exp")
+
+
+@dataclass(frozen=True)
+class Topology:
+    """A static, phase-cycled gossip topology over ``m`` workers.
+
+    ``mats`` is the (L, m, m) stack of column-stochastic mixing matrices;
+    round r uses phase ``r % L``. ``degree`` is the per-round number of
+    *other* in-neighbors a worker waits on (max over phases) — the runtime
+    model prices both the neighbor barrier and the collective payload from
+    it.
+    """
+
+    name: str
+    m: int
+    mats: np.ndarray = field(repr=False)  # (L, m, m) f32, column-stochastic
+
+    def __post_init__(self):
+        assert self.mats.ndim == 3 and self.mats.shape[1:] == (self.m, self.m), self.mats.shape
+        col = self.mats.sum(axis=1)
+        assert np.allclose(col, 1.0, atol=1e-6), "mixing matrices must be column-stochastic"
+
+    @property
+    def num_phases(self) -> int:
+        return int(self.mats.shape[0])
+
+    @property
+    def is_full(self) -> bool:
+        return self.name == "full"
+
+    @property
+    def degree(self) -> int:
+        """Max in-neighbors excluding self over phases (= what a worker
+        waits on per round; ``m - 1`` for the fully-connected case)."""
+        deg = 0
+        for l in range(self.num_phases):
+            mask = self.in_mask(l)
+            deg = max(deg, int((mask & ~np.eye(self.m, dtype=bool)).sum(axis=1).max()))
+        return deg
+
+    def matrix(self, r: int) -> np.ndarray:
+        """Round r's (m, m) mixing matrix (phase ``r % num_phases``)."""
+        return self.mats[r % self.num_phases]
+
+    def in_mask(self, r: int) -> np.ndarray:
+        """(m, m) bool: ``[i, j]`` — does worker i receive from j in round r
+        (self-loops included)?"""
+        return self.matrix(r) > 0
+
+
+def _full_matrix(m: int) -> np.ndarray:
+    return np.full((1, m, m), 1.0 / m, np.float32)
+
+
+def _ring_matrix(m: int) -> np.ndarray:
+    if m <= 2:
+        return _full_matrix(m)
+    P = np.zeros((m, m), np.float32)
+    for j in range(m):
+        for i in (j - 1, j, j + 1):
+            P[i % m, j] = 1.0 / 3.0
+    return P[None]
+
+
+def _exp_matrices(m: int) -> np.ndarray:
+    """One-peer exponential: phase l sends half of each worker's mass to the
+    peer ``2^l`` slots away. With m a power of two this cycles the hypercube
+    dimensions; otherwise the offsets still cover the ring in O(log m)."""
+    if m == 1:
+        return np.ones((1, 1, 1), np.float32)
+    L = max(1, int(math.ceil(math.log2(m))))
+    mats = np.zeros((L, m, m), np.float32)
+    for l in range(L):
+        off = pow(2, l) % m
+        for j in range(m):
+            mats[l, j, j] += 0.5
+            mats[l, (j + off) % m, j] += 0.5
+    return mats
+
+
+def make_topology(name: str, m: int) -> Topology:
+    """Build a named topology over ``m`` workers (``full``/``ring``/``exp``)."""
+    if m < 1:
+        raise ValueError(f"topology needs at least one worker, got m={m}")
+    if name == "full":
+        mats = _full_matrix(m)
+    elif name == "ring":
+        mats = _ring_matrix(m)
+    elif name == "exp":
+        mats = _exp_matrices(m)
+    else:
+        raise ValueError(f"unknown topology {name!r}; known: {TOPOLOGIES}")
+    return Topology(name=name, m=m, mats=mats)
+
+
+def compose_membership(P, mask):
+    """Compose a mixing matrix with a live mask (SGP recipe): dead workers
+    neither send nor receive — their rows and columns zero out — and each
+    live column renormalizes to sum to 1 over the surviving live rows, so
+    the composed matrix stays column-stochastic over the live set.
+
+    ``P`` is an (m, m) matrix (host constant or traced); ``mask`` is the
+    (m,) {0,1} membership mask (traced under jit). Called only on degraded
+    rounds — ``membership=None`` boundaries use ``P`` as-is, preserving the
+    fully-live program bit for bit.
+    """
+    import jax.numpy as jnp
+
+    live = (jnp.asarray(mask) > 0).astype(jnp.float32)
+    Pm = jnp.asarray(P, jnp.float32) * live[:, None] * live[None, :]
+    col = jnp.sum(Pm, axis=0)
+    return Pm / jnp.where(col > 0, col, 1.0)[None, :]
+
+
+_CACHE: Dict[Tuple[str, int], Topology] = {}
+
+
+def cached_topology(name: str, m: int) -> Topology:
+    """Memoized :func:`make_topology` — strategies resolve per-(name, m)
+    matrices at trace time, once."""
+    key = (name, m)
+    topo = _CACHE.get(key)
+    if topo is None:
+        topo = _CACHE[key] = make_topology(name, m)
+    return topo

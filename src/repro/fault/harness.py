@@ -29,11 +29,27 @@ from repro.parallel.packing import Packed, buffer_map
 def _anchor_of(state) -> Optional[Any]:
     """The recovery point: the unstacked model a rejoining worker resumes
     from. Preference order: the inflight collective (the freshest anchor —
-    unwrap the ``avg`` slot of avg-rebase inflights), then the strategy's
-    anchor variable z. ``None`` means the strategy carries no anchor
-    (local_sgd, sync_sgd): the caller falls back to the live-worker mean."""
+    unwrap the ``avg`` slot of avg-rebase inflights; collapse a gossip
+    inflight's per-worker mixes into the debiased mass-weighted consensus
+    Σ_i mix_i / Σ_i w_i), then the strategy's anchor variable z. ``None``
+    means the strategy carries no anchor (local_sgd, sync_sgd): the caller
+    falls back to the live-worker mean."""
     infl = state.inflight
     if infl is not None:
+        mix = getattr(infl, "mix", None)
+        w = getattr(infl, "w", None)
+        if mix is not None and w is not None:
+            # gossip push-sum: each row of mix is a push-weighted partial
+            # sum, so the row-sum over total push mass is the exact
+            # consensus model regardless of topology sparsity
+            wsum = jnp.sum(w.astype(jnp.float32))
+            if isinstance(mix, Packed):
+                return buffer_map(
+                    lambda b: (jnp.sum(b.astype(jnp.float32), axis=0) / wsum).astype(b.dtype), mix
+                )
+            return jax.tree.map(
+                lambda t: (jnp.sum(t.astype(jnp.float32), axis=0) / wsum).astype(t.dtype), mix
+            )
         return getattr(infl, "avg", infl)
     if getattr(state.vars, "z", None) is not None:
         return state.vars.z

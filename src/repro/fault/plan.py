@@ -115,11 +115,21 @@ class FaultPlan:
 
     def mask_at(self, r: int) -> np.ndarray:
         """(m,) bool liveness mask for round r (crashes ∧ deadline misses).
-        Guaranteed at least one live worker: if every worker is excluded,
-        the fastest one is kept (a boundary over zero workers is undefined)."""
+
+        Crash windows are authoritative: a crashed worker is dead, full stop.
+        If every *non-crashed* worker blew its deadline, the fastest of them
+        is kept (excluding all of them would turn a straggler blip into a
+        lost round). A round where every worker is inside a crash window
+        returns the all-False mask — that round has no boundary: the live
+        path (``Membership.from_mask``) refuses to build it host-side, and
+        the runtime model skips the collective and counts the round in
+        ``RuntimeResult.skipped_rounds``."""
         live = ~(self.crashed_at(r) | self.deadline_missed(r))
         if not live.any():
-            live[int(np.argmin(self.round_compute_factors(r)))] = True
+            not_crashed = ~self.crashed_at(r)
+            if not_crashed.any():
+                candidates = np.nonzero(not_crashed)[0]
+                live[candidates[np.argmin(self.round_compute_factors(r)[candidates])]] = True
         return live
 
     def resync_at(self, r: int) -> np.ndarray:

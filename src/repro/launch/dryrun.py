@@ -83,7 +83,7 @@ def plane_meta(state_sds) -> dict:
     )
 
 
-def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False, strategy: str = None, faults: str = None):
+def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False, strategy: str = None, faults: str = None, topology: str = None):
     """Returns (lowered, meta) for one (arch × shape × mesh).
 
     ``faults`` (a :meth:`repro.fault.plan.FaultPlan.parse` spec) lowers the
@@ -120,10 +120,12 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: in
             # native two-phase lowering: the same AlgoConfig → make_strategy
             # resolution Experiment.build() runs (w=1 degenerates to
             # local_sgd — see DESIGN.md §Arch-applicability)
-            strat = resolve_strategy(specs.train_algo_config(plan, strategy, tau))
+            strat = resolve_strategy(specs.train_algo_config(plan, strategy, tau, topology=topology))
             tau = strat.tau  # sync-style strategies pin τ = 1
             meta["strategy"] = strat.name
             meta["tau"] = tau
+            if getattr(strat, "topo_name", None) is not None:
+                meta["topology"] = strat.topo_name
             optimizer = sgd(momentum=0.9, nesterov=True, weight_decay=1e-4)
             sched = schedules.constant(0.1)
             state_sds, state_sh, axes = specs.train_state_specs(
@@ -210,9 +212,12 @@ def run_pair(
     opt: bool = False,
     strategy: str = None,
     faults: str = None,
+    topology: str = None,
 ):
     t0 = time.time()
-    lowered, meta, cfg = lower_pair(arch_name, shape_name, multi_pod, opt=opt, strategy=strategy, faults=faults)
+    lowered, meta, cfg = lower_pair(
+        arch_name, shape_name, multi_pod, opt=opt, strategy=strategy, faults=faults, topology=topology
+    )
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -371,6 +376,13 @@ def main() -> None:
         "overlap_local_sgd, degenerating to local_sgd at w=1)",
     )
     ap.add_argument(
+        "--topology",
+        type=str,
+        default=None,
+        help="gossip mixing-matrix family for --strategy gossip_pushsum (full|ring|exp); "
+        "the fixed-topology strategy names (gossip_ring, gossip_exp, ...) override it",
+    )
+    ap.add_argument(
         "--faults",
         type=str,
         default=None,
@@ -401,6 +413,7 @@ def main() -> None:
                 opt=args.opt,
                 strategy=args.strategy,
                 faults=args.faults,
+                topology=args.topology,
                 with_probes=not args.no_probes,
             )
         except Exception as e:  # noqa: BLE001

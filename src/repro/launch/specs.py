@@ -93,12 +93,20 @@ def default_train_strategy(plan: ParallelPlan) -> str:
     return "overlap_local_sgd" if plan.workers > 1 else "local_sgd"
 
 
-def train_algo_config(plan: ParallelPlan, strategy: Optional[str] = None, tau: int = 2) -> AlgoConfig:
+def train_algo_config(
+    plan: ParallelPlan, strategy: Optional[str] = None, tau: int = 2, topology: Optional[str] = None
+) -> AlgoConfig:
     """The AlgoConfig the production lowering trains with (dry-run and cost
     probes resolve it through ``repro.api.resolve_strategy``, the exact
-    chain ``Experiment`` uses)."""
+    chain ``Experiment`` uses). ``topology`` selects the gossip mixing-matrix
+    family for ``gossip_pushsum`` (fixed-topology registry names like
+    ``gossip_ring`` override it); other strategies ignore it."""
     return AlgoConfig(
-        name=strategy or default_train_strategy(plan), tau=tau, alpha=0.6, anchor_beta=0.7
+        name=strategy or default_train_strategy(plan),
+        tau=tau,
+        alpha=0.6,
+        anchor_beta=0.7,
+        topology=topology or "full",
     )
 
 

@@ -144,6 +144,9 @@ MASKED_STRATEGIES = [
     ("cocod", {}),
     ("delayed_avg", dict(delay_steps=3)),  # boundary-phase consume
     ("sparse_anchor", dict(sparse_k=0.5)),
+    ("gossip_full", {}),   # degenerate push-sum == membership-weighted mean
+    ("gossip_ring", {}),   # sparse mixing composed with the live mask
+    ("gossip_exp", {}),
 ]
 
 

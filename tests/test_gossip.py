@@ -1,0 +1,274 @@
+"""Push-sum/gossip CommStrategy family (ISSUE 8): topology matrix algebra,
+golden parity of fully-connected gossip against the existing membership-
+weighted boundary (bitwise, packed AND per-leaf), push-weight mass
+conservation under elastic membership, ring consensus on a constant-
+disagreement plane, jaxpr launch/collective budgets, and end-to-end
+Experiment smoke (including faults through the gossip anchor)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AlgoConfig
+from repro.core import make_strategy
+from repro.core.topology import TOPOLOGIES, cached_topology, compose_membership, make_topology
+from repro.fault import FaultPlan, from_mask
+from repro.parallel.packing import pack, unpack
+
+from conftest import unpack_view as _unp
+from test_strategies import _boundary_jaxpr, _count_primitives, _leafy_params, _quad_batches
+
+M = 4
+
+
+# -- topology matrices --------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", TOPOLOGIES)
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 5, 8])
+def test_topology_doubly_stochastic_fully_live(name, m):
+    """Every family is column-stochastic by contract and doubly stochastic
+    fully live (so push weights sit at their fixed point w ≡ 1), with
+    self-loops in every phase."""
+    topo = make_topology(name, m)
+    for l in range(topo.num_phases):
+        P = topo.matrix(l)
+        np.testing.assert_allclose(P.sum(axis=0), 1.0, atol=1e-6)  # column
+        np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-6)  # row
+        assert (np.diag(P) > 0).all(), (name, m, l)
+
+
+def test_topology_degrees():
+    assert make_topology("full", 8).degree == 7
+    assert make_topology("ring", 8).degree == 2
+    assert make_topology("exp", 8).degree == 1  # one peer per phase
+    assert make_topology("exp", 8).num_phases == 3  # log2(8) hypercube dims
+    # ring degenerates to full below 3 workers
+    assert make_topology("ring", 2).degree == 1
+
+
+def test_topology_errors_and_cache():
+    with pytest.raises(ValueError):
+        make_topology("torus", 4)
+    with pytest.raises(ValueError):
+        make_topology("ring", 0)
+    assert cached_topology("ring", 8) is cached_topology("ring", 8)
+
+
+def test_compose_membership_renormalizes_columns():
+    """Dead workers neither send nor receive; live columns stay stochastic
+    over the surviving rows; the full matrix composed with a mask has rows
+    that ARE the renormalized Membership weights."""
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    for name in TOPOLOGIES:
+        P = make_topology(name, 4).matrix(0)
+        Pm = np.asarray(compose_membership(P, mask))
+        assert (Pm[1] == 0).all() and (Pm[:, 1] == 0).all()
+        np.testing.assert_allclose(Pm[:, [0, 2, 3]].sum(axis=0), 1.0, atol=1e-6)
+    Pf = np.asarray(compose_membership(make_topology("full", 4).matrix(0), mask))
+    mem = from_mask(np.asarray(mask, np.float32))
+    for i in (0, 2, 3):
+        np.testing.assert_allclose(Pf[i], np.asarray(mem.weights), atol=1e-7)
+
+
+# -- golden parity: fully-connected gossip ≡ the existing boundary ------------
+
+
+def _stacked(rng, params):
+    return jax.tree.map(lambda t: jnp.asarray(rng.normal(size=(M,) + t.shape), t.dtype), params)
+
+
+@pytest.mark.parametrize("packed", [True, False], ids=["packed", "perleaf"])
+@pytest.mark.parametrize("masked", [False, True], ids=["live", "masked"])
+def test_gossip_full_boundary_bitwise_matches_overlap(rng, packed, masked):
+    """ISSUE acceptance: the degenerate fully-connected gossip boundary
+    reproduces the existing membership-weighted masked worker mean bit for
+    bit — x and the launched collective — on a mixed f32/bf16 plane."""
+    params = {
+        "w16": jnp.asarray(rng.normal(size=(17, 33)), jnp.bfloat16),
+        "w32": jnp.asarray(rng.normal(size=(9, 11)), jnp.float32),
+        "b16": jnp.asarray(rng.normal(size=(257,)), jnp.bfloat16),
+        "s": jnp.float32(rng.normal()),
+    }
+    x = _stacked(rng, params)
+    mem = from_mask(np.array([1.0, 0.0, 1.0, 1.0], np.float32)) if masked else None
+    outs = []
+    for name in ("gossip_full", "overlap_local_sgd"):
+        cfg = AlgoConfig(name=name, tau=2, alpha=0.6, anchor_beta=0.0, packed=packed)
+        strat = make_strategy(cfg)
+        xx = pack(x, lead=1) if packed else x
+        vars_ = strat.init_vars(xx, None)
+        infl = strat.init_inflight(xx, vars_, None)
+        for _ in range(3):
+            xx, vars_, infl = strat.boundary_round(xx, vars_, infl, None, membership=mem)
+        outs.append((_unp(xx), _unp(infl)))
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
+def test_gossip_full_training_bitwise_matches_overlap(opt_name):
+    """Full round programs (local steps + boundary) under {sgd, adamw}:
+    gossip_full trains bit-for-bit identically to overlap_local_sgd(β=0)."""
+    from repro.optim import adamw, schedules, sgd
+    from repro.training import make_round_step, make_train_state
+    from test_strategies import quad_loss
+
+    opt = sgd(momentum=0.9, nesterov=True) if opt_name == "sgd" else adamw(b1=0.9, b2=0.95)
+    tau = 3
+    params = {"x": jnp.asarray(np.random.default_rng(0).normal(size=6), jnp.float32)}
+    states, steps = [], []
+    for name in ("gossip_full", "overlap_local_sgd"):
+        cfg = AlgoConfig(name=name, tau=tau, alpha=0.6, anchor_beta=0.0, packed=True)
+        strat = make_strategy(cfg)
+        states.append(make_train_state(params, M, opt, strat, None))
+        steps.append(jax.jit(make_round_step(quad_loss, opt, strat, schedules.constant(0.05), None)))
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        batch = _quad_batches(rng, tau)
+        states = [step(s, batch)[0] for step, s in zip(steps, states)]
+    s_g, s_o = states
+    np.testing.assert_array_equal(np.asarray(_unp(s_g.x)["x"]), np.asarray(_unp(s_o.x)["x"]))
+    np.testing.assert_array_equal(
+        np.asarray(_unp(s_g.inflight)["x"]), np.asarray(_unp(s_o.inflight)["x"])
+    )
+
+
+# -- sparse topologies: packed ≡ per-leaf, mass conservation, consensus -------
+
+
+@pytest.mark.parametrize("name", ["gossip_ring", "gossip_exp"])
+@pytest.mark.parametrize("masked", [False, True], ids=["live", "masked"])
+def test_gossip_sparse_packed_matches_perleaf(rng, name, masked):
+    """The packed sparse-gossip boundary (per-bucket anchor_mix + one plane
+    matmul) is bitwise-identical to the per-leaf einsum oracle — x, push
+    weights, and the launched mix — masked and unmasked."""
+    x = _stacked(rng, _leafy_params(rng))
+    mem = from_mask(np.array([1.0, 0.0, 1.0, 1.0], np.float32)) if masked else None
+    outs = []
+    for packed in (True, False):
+        cfg = AlgoConfig(name=name, tau=2, alpha=0.6, packed=packed)
+        strat = make_strategy(cfg)
+        xx = pack(x, lead=1) if packed else x
+        vars_ = strat.init_vars(xx, None)
+        infl = strat.init_inflight(xx, vars_, None)
+        for _ in range(3):
+            xx, vars_, infl = strat.boundary_round(xx, vars_, infl, None, membership=mem)
+        outs.append((_unp(xx), np.asarray(vars_.extra[0]), _unp(infl.mix), np.asarray(infl.w)))
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # dead worker's row passes through the boundary untouched
+    if masked:
+        for before, after in zip(jax.tree.leaves(x), jax.tree.leaves(outs[1][0])):
+            np.testing.assert_array_equal(np.asarray(before)[1], np.asarray(after)[1])
+
+
+def test_push_weight_mass_conservation():
+    """Column-stochasticity conserves total push-weight mass. Fully live the
+    exp weights stay EXACTLY 1 (entries are binary fractions); under a fixed
+    membership the live mass stays exactly at the live count."""
+    x = {"w": jnp.asarray(np.arange(M * 8, dtype=np.float32).reshape(M, 8))}
+    for name, exact in (("gossip_exp", True), ("gossip_ring", False)):
+        strat = make_strategy(AlgoConfig(name=name, tau=1, alpha=0.6))
+        vars_ = strat.init_vars(x, None)
+        infl = strat.init_inflight(x, vars_, None)
+        xx = x
+        for _ in range(6):
+            xx, vars_, infl = strat.boundary_round(xx, vars_, infl, None)
+        np.testing.assert_array_equal(np.asarray(vars_.extra[0]), 1.0)  # fixed point
+        assert int(vars_.extra[1]) == 6  # phase counter advanced
+
+        mem = from_mask(np.array([1.0, 0.0, 1.0, 1.0], np.float32))
+        vars_ = strat.init_vars(x, None)
+        infl = strat.init_inflight(x, vars_, None)
+        xx = x
+        for _ in range(6):
+            xx, vars_, infl = strat.boundary_round(xx, vars_, infl, None, membership=mem)
+        w = np.asarray(vars_.extra[0])
+        assert w[1] == 1.0  # dead worker's weight frozen
+        live_mass = float(w[[0, 2, 3]].sum())
+        if exact:
+            assert live_mass == 3.0, w  # exact in f32: binary-fraction matrix
+        else:
+            np.testing.assert_allclose(live_mass, 3.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["gossip_ring", "gossip_exp"])
+def test_gossip_reaches_consensus_on_constant_disagreement(name):
+    """Worker i starts at the constant plane x_i ≡ i; repeated gossip with
+    α=1 must contract the disagreement to ~0 while preserving the mean
+    (doubly stochastic mixing)."""
+    m = 8
+    x = {"w": jnp.tile(jnp.arange(m, dtype=jnp.float32)[:, None], (1, 16))}
+    strat = make_strategy(AlgoConfig(name=name, tau=1, alpha=1.0))
+    vars_ = strat.init_vars(x, None)
+    infl = strat.init_inflight(x, vars_, None)
+    for _ in range(60):
+        x, vars_, infl = strat.boundary_round(x, vars_, infl, None)
+    w = np.asarray(x["w"])
+    np.testing.assert_allclose(w.mean(), 3.5, rtol=1e-5)  # mean preserved
+    assert w.std() < 1e-3, w.std()  # disagreement contracted ~to consensus
+
+
+# -- jaxpr launch/collective budgets ------------------------------------------
+
+
+def test_gossip_full_packed_budget(rng):
+    """The degenerate full topology keeps Overlap-Local-SGD's exact packed
+    budget: ONE fused pullback+mean kernel launch, ONE worker-mean reduce."""
+    params = _leafy_params(rng)
+    cfg = AlgoConfig(name="gossip_full", tau=2, alpha=0.6, packed=True)
+    n_pallas = _count_primitives(_boundary_jaxpr(cfg, params, force_pallas=True).jaxpr, ["pallas_call"])
+    assert n_pallas["pallas_call"] == 1, n_pallas
+    n_red = _count_primitives(_boundary_jaxpr(cfg, params, force_pallas=False).jaxpr, ["reduce_sum"])
+    assert n_red["reduce_sum"] == 1, n_red
+
+
+def test_gossip_sparse_packed_budget(rng):
+    """Sparse gossip on the packed plane: one anchor_mix kernel launch per
+    dtype bucket (here: one) and ONE (m, m) × plane matmul for the push —
+    the collective payload is the mix plane, independent of leaf count."""
+    params = _leafy_params(rng)  # one f32 bucket, 14 leaves
+    for name in ("gossip_ring", "gossip_exp"):
+        cfg = AlgoConfig(name=name, tau=2, alpha=0.6, packed=True)
+        jp = _boundary_jaxpr(cfg, params, force_pallas=True)
+        counts = _count_primitives(jp.jaxpr, ["pallas_call", "dot_general"])
+        assert counts["pallas_call"] == 1, (name, counts)
+        assert counts["dot_general"] == 1, (name, counts)
+
+
+# -- registry / config plumbing -----------------------------------------------
+
+
+def test_gossip_registry_and_aliases():
+    from repro.core.strategy import STRATEGIES
+
+    for name in ("gossip_pushsum", "gossip_full", "gossip_ring", "gossip_exp"):
+        assert name in STRATEGIES
+    assert make_strategy(AlgoConfig(name="sgp")).name == "gossip_pushsum"
+    # gossip_pushsum reads cfg.topology; fixed-name registry entries pin it
+    assert make_strategy(AlgoConfig(name="gossip_pushsum", topology="ring")).topo_name == "ring"
+    assert make_strategy(AlgoConfig(name="gossip_exp", topology="ring")).topo_name == "exp"
+    bad = make_strategy(AlgoConfig(name="gossip_pushsum", topology="torus"))
+    x = {"w": jnp.zeros((4, 2))}
+    with pytest.raises(ValueError, match="unknown topology"):
+        bad.boundary_launch(x, bad.init_vars(x, None))
+
+
+# -- end-to-end Experiment smoke ----------------------------------------------
+
+
+def test_gossip_experiment_converges_with_faults():
+    """A gossip_ring Experiment trains to completion under a crash/rejoin
+    plan: the harness re-syncs the rejoining worker from the gossip
+    inflight's mass-weighted consensus (Σ mix / Σ w) and the loss improves."""
+    from repro.api import Experiment
+
+    plan = FaultPlan.parse("crash:1@2-4", m=M, seed=0)
+    exp = Experiment(workers=M, strategy=AlgoConfig(name="gossip_ring", tau=2, alpha=0.6), seed=0)
+    res = exp.fit(rounds=8, faults=plan)
+    assert np.isfinite(res.losses).all() and res.losses[-1] < res.losses[0]
+    by_round = {rec["round"]: rec for rec in res.fault_log}
+    assert by_round[4]["resynced"] == [1]

@@ -1,8 +1,12 @@
-"""Runtime-model validation against the paper's measured constants (§4)."""
+"""Runtime-model validation against the paper's measured constants (§4),
+plus regression traces for the ISSUE-8 clock bugfixes (trailing partial
+segment, final in-flight collective, all-dead rounds, idle/critical-path
+accounting) and the topology-aware gossip branch."""
 import numpy as np
 import pytest
 
-from repro.core.runtime_model import RuntimeConfig, simulate
+from repro.core.runtime_model import GOSSIP, RuntimeConfig, gossip_comm_time, simulate
+from repro.fault.plan import FaultPlan
 
 # Paper constants: 16 nodes, ~24 steps/epoch (50000/(128·16)), compute 4.6 s/epoch
 STEPS = 24
@@ -56,3 +60,110 @@ def test_straggler_mitigation():
     r_overlap = simulate("overlap_local_sgd", 2, 200, cfg)
     assert r_overlap.total_time < r_local.total_time
     assert r_overlap.idle_time < r_local.idle_time
+
+
+# -- ISSUE-8 regression traces (hand-computed clocks) -------------------------
+
+
+def test_trailing_partial_segment_advances_clocks():
+    """Bugfix: steps % tau != 0 used to silently drop the tail compute in
+    BOTH branches. 10 steps at tau=4 is 2 rounds + 2 local steps of tail:
+    blocking total = 2·(4 + 0.5) + 2 = 11 (old model said 9, same as 8
+    steps); overlapped = 10 (the 2-step tail hides the final 0.5 comm)."""
+    cfg = RuntimeConfig(m=2, t_step=1.0, t_comm=0.5, t_handshake=0.0)
+    assert simulate("local_sgd", 4, 8, cfg).total_time == 9.0
+    assert simulate("local_sgd", 4, 10, cfg).total_time == 11.0
+    assert simulate("overlap_local_sgd", 4, 10, cfg).total_time == 10.0
+
+
+def test_overlap_final_inflight_collective_charged():
+    """Bugfix: the overlapped total used to end at the last worker arrival,
+    ignoring the final boundary's still-in-flight collective. Hand trace
+    (m=2, t_step=1, t_comm=10, tau=1, steps=2): round 0 arrives at 1 and
+    launches (ready 11); round 1 arrives at 2, stalls 9, launches at 11
+    (ready 21). Total = 21 (old: 11); exposed = 9 + 10 = 19."""
+    cfg = RuntimeConfig(m=2, t_step=1.0, t_comm=10.0, t_handshake=0.0)
+    r = simulate("overlap_local_sgd", 1, 2, cfg)
+    assert r.total_time == 21.0 and r.exposed_comm == 19.0
+
+
+def test_all_crashed_round_skips_collective():
+    """Bugfix: an all-crashed round used to reduce arrive[live].max() over an
+    empty array. Now the collective is skipped (no barrier, no comm), clocks
+    advance by the round's compute, and the round is counted. 4 rounds at
+    tau=1, round 1 all-dead: total = 4·1 + 3·0.5 = 5.5."""
+    plan = FaultPlan(m=2, crashes=((0, 1, 2), (1, 1, 2)))
+    assert plan.mask_at(1).sum() == 0  # crash windows are authoritative
+    cfg = RuntimeConfig(m=2, t_step=1.0, t_comm=0.5, t_handshake=0.0)
+    for algo in ("local_sgd", "overlap_local_sgd", "gossip_ring"):
+        r = simulate(algo, 1, 4, cfg, fault_plan=plan)
+        assert r.skipped_rounds == 1, (algo, r)
+    r = simulate("local_sgd", 1, 4, cfg, fault_plan=plan)
+    assert r.total_time == 5.5, r
+
+
+def test_idle_per_live_worker_and_critical_compute():
+    """Bugfix: idle used to normalize by m (dead workers diluted it) and the
+    critical-path compute was computed then discarded. m=3, worker 0 a 2x
+    straggler, worker 2 crashed: each round the one nominal live worker
+    waits 1s → idle = 0.5/round over 2 live, NOT 1/3; compute_critical is
+    the straggler's 2·2 = 4."""
+    plan = FaultPlan(m=3, crashes=((2, 0, None),), slowdown=((0, 2.0),), deadline_factor=10.0)
+    cfg = RuntimeConfig(m=3, t_step=1.0, t_comm=0.0, t_handshake=0.0)
+    r = simulate("local_sgd", 1, 2, cfg, fault_plan=plan)
+    assert r.idle_time == 1.0, r  # 0.5 per round × 2 rounds (old model: 2/3)
+    assert r.compute_critical == 4.0, r
+    assert r.total_time >= r.compute_critical
+
+
+def test_eventless_plan_still_matches_no_plan_exactly():
+    """The historical fully-live model is preserved value for value: an
+    eventless FaultPlan changes nothing, including the new result fields
+    (dataclass equality covers compute_critical / skipped_rounds)."""
+    cfg = RuntimeConfig(m=8, straggle_std=0.3, seed=5)
+    for algo in ("local_sgd", "overlap_local_sgd", "sync_sgd", "gossip_exp"):
+        a = simulate(algo, 4, 64, cfg)
+        b = simulate(algo, 4, 64, cfg, fault_plan=FaultPlan(m=8))
+        assert a == b and a.skipped_rounds == 0
+
+
+# -- gossip branch: neighbor-set barriers, degree pricing ---------------------
+
+
+def test_gossip_full_prices_like_global_overlap():
+    """The degenerate fully-connected gossip must reproduce the global
+    overlapped model exactly — degree m−1 prices to t_comm and the neighbor
+    set is everyone."""
+    cfg = RuntimeConfig(m=8, straggle_std=0.2, seed=1)
+    for steps in (64, 66):  # with and without a tail
+        assert simulate("gossip_full", 4, steps, cfg) == simulate("overlap_local_sgd", 4, steps, cfg)
+    assert gossip_comm_time(cfg, 7) == cfg.t_comm
+
+
+def test_gossip_fleet_projection():
+    """The reason the branch exists: at fleet scale (t_comm grows with m for
+    the all-to-all payload) sparse gossip keeps per-round cost flat — a ring
+    worker at m=4096 waits on 2 neighbors and ships 2 model copies."""
+    totals = {}
+    for m in (16, 256, 4096):
+        cfg = RuntimeConfig(m=m, t_comm=0.065 * m / 16, straggle_std=0.2, seed=0)
+        totals[m] = {a: simulate(a, 4, 32, cfg).total_time for a in ("gossip_full", "gossip_ring", "gossip_exp")}
+        assert totals[m]["gossip_ring"] < totals[m]["gossip_full"]
+        assert totals[m]["gossip_exp"] < totals[m]["gossip_full"]
+    # full degrades superlinearly with the fleet; ring/exp stay near-flat
+    assert totals[4096]["gossip_full"] > 10 * totals[4096]["gossip_ring"]
+    assert totals[4096]["gossip_ring"] < 1.2 * totals[16]["gossip_ring"]
+
+
+def test_gossip_respects_straggler_locality():
+    """A single straggler on a ring only stalls its out-neighbors' clocks;
+    the global barrier stalls everyone. Ring total beats full under one
+    persistent slow worker."""
+    plan = FaultPlan(m=16, slowdown=((0, 3.0),), deadline_factor=100.0)
+    cfg = plan.runtime_config(base=RuntimeConfig(m=16, t_step=0.19, t_comm=0.5, t_handshake=0.02))
+    slow_full = simulate("gossip_full", 4, 64, cfg, fault_plan=plan)
+    slow_ring = simulate("gossip_ring", 4, 64, cfg, fault_plan=plan)
+    assert slow_ring.total_time < slow_full.total_time
+    with pytest.raises(ValueError):
+        simulate("gossip_ring", 4, 16, RuntimeConfig(m=4), topology="torus")
+    assert set(GOSSIP) == {"gossip_pushsum", "gossip_full", "gossip_ring", "gossip_exp"}
