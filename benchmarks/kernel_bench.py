@@ -49,6 +49,7 @@ from repro.kernels.rmsnorm import ref as rms_ref
 from repro.kernels.rwkv6_wkv import ref as wkv_ref
 from repro.kernels.ssd_scan import ref as ssd_ref
 from repro.optim import adamw, sgd
+from repro.parallel import offload as off
 from repro.parallel.packing import ParamView, pack, unpack
 
 
@@ -338,6 +339,89 @@ def consensus_probe_rows(quick: bool = False, m: int = 4, n_layers: int = 80, wi
     return rows
 
 
+def offload_rows(quick: bool = False, m: int = 4, n_layers: int = 80, width: int = 48):
+    """Host-offload plane rows (DESIGN.md §9) at the production-depth
+    241-leaf config.
+
+    ``offload/stream_*``: the chunked D2H/H2D stream of the packed opt
+    state — ``tree_offload`` (chunk + host placement) / ``tree_restore`` —
+    plus the raw host-link copy rate (``costprobe.measure_host_bandwidth``),
+    the bandwidth the dry-run's offload schedule block is priced with. This
+    CPU container has no separate host memory space, so the stream rows
+    time the chunking sweeps themselves; the copy rows time the runtime's
+    actual copy path.
+
+    ``offload/localstep_*``: one local optimizer step with host-resident
+    state (``step_streamed``: double-buffered chunk scan — prefetch chunk
+    i+1 while applying i) vs the plane-resident fused step. The ratio is
+    the per-step cost the τ window must amortize for the offload plane to
+    be free (the dry-run's ``breakeven_tau``)."""
+    from repro.launch.costprobe import measure_host_bandwidth
+
+    if quick:
+        n_layers, width = 40, 32
+    rng = np.random.default_rng(0)
+    params = _synthetic_tree(rng, n_layers, width)
+    n_leaves = len(jax.tree.leaves(params))
+    x = jax.tree.map(lambda t: jnp.tile(t[None], (m,) + (1,) * t.ndim), params)
+    px = pack(x, lead=1)
+    # 64 KiB chunks: the synthetic bucket is ~0.8 MB, so the stream walks a
+    # real multi-chunk grid (~13 chunks) like the production plane does
+    chunk_mb = 1 / 16
+    plan = off.OffloadPlan.for_layout(px.layout, chunk_mb=chunk_mb)
+    pg = jax.tree.map(lambda b: b * 0.01, px)
+    lr = jnp.float32(0.05)
+    iters = 3 if quick else 20
+    n_chunks = int(sum(plan.num_chunks))
+
+    rows = []
+    bw = measure_host_bandwidth(nbytes=(8 << 20) if quick else (64 << 20))
+    for d, g in (("h2d", bw["h2d_gbps"]), ("d2h", bw["d2h_gbps"])):
+        rows.append(
+            (
+                f"offload/hostlink_copy_{d}",
+                bw["probe_bytes"] / (g * 1e3),
+                f"gbps={g:.2f} bytes={bw['probe_bytes']}",
+            )
+        )
+
+    opt0 = sgd(momentum=0.9, nesterov=True, weight_decay=1e-4)
+    st = opt0.init_packed(px)
+    st_host = off.tree_offload(st, plan)
+    sbytes = off.host_nbytes(st_host)
+    us_d2h = _time(jax.jit(lambda s: off.tree_offload(s, plan)), st, iters=iters)
+    us_h2d = _time(jax.jit(off.tree_restore), st_host, iters=iters)
+    for d, us in (("d2h", us_d2h), ("h2d", us_h2d)):
+        rows.append(
+            (
+                f"offload/stream_{d}_{n_leaves}leaf",
+                us,
+                f"gbps={sbytes/us/1e3:.1f} chunks={n_chunks} chunk_mb={chunk_mb} bytes={sbytes} m={m}",
+            )
+        )
+
+    for opt_name, opt in (("sgd", opt0), ("adamw", adamw(weight_decay=1e-4))):
+        st = opt.init_packed(px)
+        st_h = off.tree_offload(st, plan)
+        us_res = _time(jax.jit(lambda o, xx: opt.step_packed(o, xx, pg, lr)), st, px, iters=iters)
+        us_str = _time(jax.jit(lambda o, xx: opt.step_streamed(o, xx, pg, lr)), st_h, px, iters=iters)
+        rows.append(
+            (
+                f"offload/localstep_{opt_name}_resident_{n_leaves}leaf",
+                us_res,
+                f"leaves={n_leaves} m={m}",
+            )
+        )
+        rows.append(
+            (
+                f"offload/localstep_{opt_name}_offloaded_{n_leaves}leaf",
+                us_str,
+                f"overhead_x={us_str/us_res:.2f} baseline_us={us_res:.1f} chunks={n_chunks} m={m}",
+            )
+        )
+    return rows
+
+
 _ARCH_BOUNDARY_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -468,6 +552,7 @@ def run(quick: bool = False):
     rows.extend(local_step_rows(quick))
     rows.extend(plane_rows(quick))
     rows.extend(consensus_probe_rows(quick))
+    rows.extend(offload_rows(quick))
     rows.extend(arch_boundary_rows(quick))
     return rows
 

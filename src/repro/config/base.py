@@ -316,6 +316,19 @@ class AlgoConfig:
     # ulps (tests/test_packed_optim.py pins the tolerance). Only consulted
     # on the plane-resident local step; the per-leaf path ignores it.
     packed_clip: bool = False
+    # host-offload the opt-state and anchor/inflight buckets between
+    # boundaries (repro.parallel.offload): state lives host-resident as
+    # chunked HostPlanes and is streamed back through two device staging
+    # buffers inside the τ-step window — the same overlap that hides the
+    # boundary collective hides the host link. Requires packed=True and
+    # an offload-capable optimizer. Bitwise-identical to plane-resident
+    # (tests/test_offload.py).
+    offload: bool = False
+    # chunk size of the offload stream in MiB of *param-dtype* elements
+    # per chunk (LANE-aligned; state planes in wider dtypes move
+    # proportionally more bytes per chunk). Small values only make sense
+    # in tests, where they force multi-chunk scans on tiny planes.
+    offload_chunk_mb: float = 64.0
 
 
 @dataclass(frozen=True)

@@ -87,6 +87,11 @@ class RuntimeConfig:
     straggle_factor: float = 4.0
     powersgd_compression: float = 243.0  # rank-1 payload reduction
     powersgd_codec: float = 0.01  # encode+decode time per step (s)
+    # host-offload stream (DESIGN.md §9): bytes moved over the host link per
+    # round per worker (opt-state round trips × τ + anchor slots × 1) and the
+    # measured link bandwidth; 0 disables the term (plane-resident runs)
+    offload_bytes_per_round: float = 0.0
+    offload_gbps: float = 0.0
     seed: int = 0
 
 
@@ -102,6 +107,8 @@ class RuntimeResult:
     compute_critical: float = 0.0
     # rounds whose collective was skipped because no worker was live
     skipped_rounds: int = 0
+    # host-link transfer NOT hidden behind the τ-step window (offload stream)
+    exposed_transfer: float = 0.0
 
     @property
     def comm_ratio(self) -> float:
@@ -154,7 +161,49 @@ def calibrated_config(dryrun_json, *, link_gbps: float = 40.0, base: Optional[Ru
     t_comm = cfg.t_comm
     if coll_bytes > 0 and link_gbps > 0:
         t_comm = cfg.t_handshake + coll_bytes / (link_gbps * 1e9 / 8)
-    return replace(cfg, m=m, t_step=t_step, t_comm=t_comm)
+    # offloaded dry-runs carry their stream bytes + measured host-link
+    # bandwidth; plane-resident JSONs leave both knobs at the base config
+    off_bytes, off_gbps = cfg.offload_bytes_per_round, cfg.offload_gbps
+    ob = d.get("offload") or {}
+    if ob.get("enabled"):
+        off_bytes = float(ob.get("stream_bytes_per_round_per_device") or 0.0)
+        bw = ob.get("bandwidth") or {}
+        rates = [float(bw[k]) for k in ("d2h_gbps", "h2d_gbps") if bw.get(k)]
+        if rates:
+            off_gbps = min(rates)
+    return replace(
+        cfg, m=m, t_step=t_step, t_comm=t_comm,
+        offload_bytes_per_round=off_bytes, offload_gbps=off_gbps,
+    )
+
+
+def offload_stream_time(cfg: RuntimeConfig) -> float:
+    """Seconds the host-offload stream needs per round per worker; 0 when
+    the run is plane-resident (either knob unset)."""
+    if cfg.offload_bytes_per_round <= 0 or cfg.offload_gbps <= 0:
+        return 0.0
+    return cfg.offload_bytes_per_round / (cfg.offload_gbps * 1e9)
+
+
+def offload_schedule(bytes_per_round: float, gbps: float, tau: int, t_step: float) -> dict:
+    """The overlap contract of the offload stream against one τ-step window,
+    as a JSON-ready block (dry-run's ``offload.schedule``): exposed transfer
+    is ``max(0, stream_s − τ·t_step)`` — zero (``hidden=True``) exactly when
+    the window is long enough, and ``breakeven_tau`` is the smallest τ that
+    hides the stream at this bandwidth and step time."""
+    stream_s = bytes_per_round / (gbps * 1e9) if gbps > 0 else float("inf")
+    window_s = float(tau) * float(t_step)
+    exposed_s = max(0.0, stream_s - window_s)
+    breakeven = int(np.ceil(stream_s / t_step)) if t_step > 0 and np.isfinite(stream_s) else None
+    return dict(
+        stream_bytes_per_round=float(bytes_per_round),
+        link_gbps=float(gbps),
+        stream_s=stream_s,
+        window_s=window_s,
+        exposed_s=exposed_s,
+        hidden=bool(exposed_s == 0.0),
+        breakeven_tau=breakeven,
+    )
 
 
 def _fault_round(r: int, m: int, fault_plan):
@@ -205,6 +254,12 @@ def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=Non
 
     compute_critical = float(t.sum(axis=0).max())  # critical-path compute
     mean_compute = float(t.sum(axis=0).mean())
+    # host-offload stream: a round's window cannot close before its stream
+    # lands, so each worker's segment is max(compute, stream) — the excess is
+    # exposed transfer. The trailing partial segment (no boundary, partial
+    # stream) is left un-stretched: conservative by < one round.
+    stream_s = offload_stream_time(cfg)
+    exposed_transfer = 0.0
     # the trailing steps % tau partial segment: pure local compute, no
     # boundary — every branch advances the clocks by it after its last round
     tail = t[rounds * tau :].sum(axis=0) if steps > rounds * tau else None
@@ -218,6 +273,10 @@ def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=Non
         worker_clock = np.zeros(m)
         for r in range(rounds):
             seg = t[r * tau : (r + 1) * tau].sum(axis=0)
+            if stream_s > 0:
+                lag = np.maximum(stream_s - seg, 0.0)
+                exposed_transfer += float(lag.max())
+                seg = seg + lag
             live, jitter = _fault_round(r, m, fault_plan)
             arrive = worker_clock + seg
             if not live.any():
@@ -235,7 +294,7 @@ def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=Non
         if tail is not None:
             worker_clock = worker_clock + tail
         total = float(worker_clock.max())
-        return RuntimeResult(total, mean_compute, exposed, idle, steps, compute_critical, skipped)
+        return RuntimeResult(total, mean_compute, exposed, idle, steps, compute_critical, skipped, exposed_transfer)
 
     if algo in OVERLAPPED or algo in GOSSIP or topology is not None:
         # non-blocking: the collective launched at boundary r completes comm
@@ -262,6 +321,10 @@ def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=Non
         skipped = 0
         for r in range(rounds):
             seg = t[r * tau : (r + 1) * tau].sum(axis=0)
+            if stream_s > 0:
+                lag = np.maximum(stream_s - seg, 0.0)
+                exposed_transfer += float(lag.max())
+                seg = seg + lag
             live, jitter = _fault_round(r, m, fault_plan)
             if not live.any():
                 # all-dead round: nothing launched, nothing consumed; any
@@ -299,7 +362,7 @@ def simulate(algo: str, tau: int, steps: int, cfg: RuntimeConfig, fault_plan=Non
         final_wait = max(0.0, float(ready.max()) - float(worker_clock.max()))
         exposed += final_wait
         total = float(worker_clock.max()) + final_wait
-        return RuntimeResult(total, mean_compute, exposed, idle, steps, compute_critical, skipped)
+        return RuntimeResult(total, mean_compute, exposed, idle, steps, compute_critical, skipped, exposed_transfer)
 
     raise ValueError(algo)
 
@@ -315,6 +378,7 @@ def epoch_summary(
         compute=r.compute_time,
         compute_critical=r.compute_critical,
         exposed_comm=r.exposed_comm,
+        exposed_transfer=r.exposed_transfer,
         comm_ratio=r.comm_ratio,
         idle=r.idle_time,
     )

@@ -284,6 +284,18 @@ class CommStrategy:
     name = "base"
     needs_anchor = False
 
+    # ---- offload contract (DESIGN.md §9) ----
+    # Under AlgoConfig.offload the engine keeps vars/inflight host-resident
+    # between boundaries and restores them device-side inside the round
+    # program. vars always restore before the τ-step scan (they ride its
+    # carry); the inflight slot restores at the boundary — UNLESS the
+    # strategy consumes it mid-round (DaSGD's local_post_update), in which
+    # case this property makes the engine prefetch it before the window.
+    # Either H2D copy has no data dependency on the local steps, so the
+    # scheduler overlaps it with the window — the same mechanism that hides
+    # the boundary collective hides the host link.
+    consumes_inflight_midround = False
+
     def __init__(self, cfg: AlgoConfig):
         self.cfg = cfg
         self.tau = cfg.tau
@@ -797,6 +809,12 @@ class DelayedAveragingStrategy(_AvgRebaseStrategy):
         if not 1 <= cfg.delay_steps <= cfg.tau:
             raise ValueError(f"delay_steps must be in [1, tau={cfg.tau}], got {cfg.delay_steps}")
         self.delay = cfg.delay_steps
+
+    @property
+    def consumes_inflight_midround(self) -> bool:
+        # delay < τ: the averaged plane arrives inside the window, so the
+        # offloaded engine must prefetch it before the local scan
+        return self.delay < self.tau
 
     def local_post_update(self, x_stacked, vars, inflight, k_in_round):
         if self.delay >= self.tau:  # consumed at the boundary instead

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.fault.membership import Membership, from_mask
 from repro.fault.plan import FaultPlan
+from repro.parallel import offload as off
 from repro.parallel.packing import Packed, buffer_map
 
 
@@ -35,6 +36,11 @@ def _anchor_of(state) -> Optional[Any]:
     means the strategy carries no anchor (local_sgd, sync_sgd): the caller
     falls back to the live-worker mean."""
     infl = state.inflight
+    if infl is not None and off.is_offloaded(infl):
+        # offloaded runs keep anchor-shaped slots host-resident between
+        # rounds (DESIGN.md §9); re-sync only reads the anchor, so bring a
+        # resident view back without touching the state's own planes
+        infl = off.tree_restore(infl)
     if infl is not None:
         mix = getattr(infl, "mix", None)
         w = getattr(infl, "w", None)
@@ -51,8 +57,9 @@ def _anchor_of(state) -> Optional[Any]:
                 lambda t: (jnp.sum(t.astype(jnp.float32), axis=0) / wsum).astype(t.dtype), mix
             )
         return getattr(infl, "avg", infl)
-    if getattr(state.vars, "z", None) is not None:
-        return state.vars.z
+    z = getattr(state.vars, "z", None)
+    if z is not None:
+        return off.tree_restore(z) if off.is_offloaded(z) else z
     return None
 
 

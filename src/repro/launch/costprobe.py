@@ -225,6 +225,34 @@ def probe_embed_head_serve(cfg: ModelConfig, mesh: Mesh, rules: dict, shape: Inp
     return _cost(lowered)
 
 
+def measure_host_bandwidth(nbytes: int = 64 << 20, iters: int = 3) -> dict:
+    """Measured D2H/H2D bandwidth (GB/s) via timed committed ``device_put``
+    round trips of one offload-chunk-sized buffer — the rate the offload
+    plane's stream actually gets, not a datasheet constant. On the CPU
+    backend this times the runtime's copy path, an honest stand-in for the
+    pinned-host link real hardware streams over (DESIGN.md §9)."""
+    import time as _time
+
+    host = np.ones(max(nbytes, 1 << 20) // 4, np.float32)
+    dev = jax.device_put(host)
+    jax.block_until_ready(dev)
+    h2d, d2h = [], []
+    for _ in range(iters):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(jax.device_put(host))
+        h2d.append(_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        # np.array (not asarray): the CPU backend exposes device buffers
+        # zero-copy, which would time nothing — force the actual copy-out
+        np.array(dev)
+        d2h.append(_time.perf_counter() - t0)
+    return dict(
+        probe_bytes=int(host.nbytes),
+        h2d_gbps=host.nbytes / min(h2d) / 1e9,
+        d2h_gbps=host.nbytes / min(d2h) / 1e9,
+    )
+
+
 # ---------------------------------------------------------------------------
 # composition
 # ---------------------------------------------------------------------------
@@ -240,7 +268,7 @@ def _acc(total: dict, c: dict, mult: float, label: str):
         total["parts"][label]["collectives"] = c["collectives"]
 
 
-def composed_cost(arch: ArchConfig, shape: InputShape, mesh: Mesh, plan: ParallelPlan, rules: dict, tau: int = 2, strategy: str = None) -> dict:
+def composed_cost(arch: ArchConfig, shape: InputShape, mesh: Mesh, plan: ParallelPlan, rules: dict, tau: int = 2, strategy: str = None, offload_stream_bytes: float = None) -> dict:
     from repro.optim import sgd
     from repro.parallel import mesh_context
 
@@ -272,6 +300,20 @@ def composed_cost(arch: ArchConfig, shape: InputShape, mesh: Mesh, plan: Paralle
             _acc(total, c, tau, "optimizer")
             c = probe_boundary(cfg, plan, mesh, rules, strat)
             _acc(total, c, 1, "boundary")
+            if offload_stream_bytes:
+                # host-link bytes the offload plane streams per round (per
+                # device) at the measured bandwidth. Deliberately NOT added
+                # to total["bytes"] — those are HBM roofline bytes; the
+                # stream rides a different resource and is priced by
+                # runtime_model.offload_stream_time against the τ window.
+                bw = measure_host_bandwidth()
+                gbps = min(bw["d2h_gbps"], bw["h2d_gbps"])
+                total["parts"]["offload_stream"] = dict(
+                    mult=1,
+                    bytes=float(offload_stream_bytes),
+                    stream_s=float(offload_stream_bytes) / (gbps * 1e9),
+                    **bw,
+                )
         else:
             mode = "decode" if shape.mode == "decode" else "prefill"
             for kind, n in kind_counts.items():

@@ -51,9 +51,29 @@ from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.optim import schedules, sgd  # noqa: E402
 from repro.parallel import logical_mesh, mesh_context  # noqa: E402
+from repro.parallel import offload as off  # noqa: E402
 from repro.parallel.packing import Packed  # noqa: E402
 from repro.serving.engine import decode_step  # noqa: E402
 from repro.training.train_loop import make_round_step  # noqa: E402
+
+
+def _is_plane(t) -> bool:
+    return isinstance(t, (Packed, off.HostPlane))
+
+
+def _slot_bytes(tree) -> tuple:
+    """(device_bytes, host_bytes) of one state slot: HostPlane chunks are
+    host-resident between boundaries, everything else (Packed buffers,
+    raw arrays/scalars) is device-resident."""
+    dev = host = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=_is_plane):
+        if isinstance(leaf, off.HostPlane):
+            host += leaf.nbytes
+        elif isinstance(leaf, Packed):
+            dev += leaf.nbytes
+        else:
+            dev += int(np.prod(leaf.shape) * leaf.dtype.itemsize)
+    return int(dev), int(host)
 
 
 def plane_meta(state_sds) -> dict:
@@ -67,9 +87,17 @@ def plane_meta(state_sds) -> dict:
     opt_leaves = [s for s in jax.tree.leaves(state_sds.opt) if len(s.shape) > 0]
     inflight_bytes = sum(
         p.nbytes for p in jax.tree.leaves(
-            state_sds.inflight, is_leaf=lambda t: isinstance(t, Packed)
-        ) if isinstance(p, Packed)
+            state_sds.inflight, is_leaf=_is_plane
+        ) if _is_plane(p)
     )
+    # true residency split across the whole plane state (x + opt + vars +
+    # inflight): offloaded runs report their HostPlane bytes as host-resident
+    # (logical totals; the per-device split lives in the offload block)
+    dev = host = 0
+    for slot in (state_sds.x, state_sds.opt, state_sds.vars, state_sds.inflight):
+        d, h = _slot_bytes(slot)
+        dev += d
+        host += h
     return dict(
         plane_resident=True,
         num_leaves=x.layout.num_leaves,
@@ -80,10 +108,88 @@ def plane_meta(state_sds) -> dict:
         x_buffer_bytes=int(x.nbytes),
         opt_buffer_bytes=int(sum(np.prod(s.shape) * s.dtype.itemsize for s in opt_leaves)),
         inflight_buffer_bytes=int(inflight_bytes),
+        device_bytes=dev,
+        host_bytes=host,
     )
 
 
-def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False, strategy: str = None, faults: str = None, topology: str = None):
+def _host_bytes_per_device(slot_sds, slot_sh) -> int:
+    """Per-device host-resident bytes of one offloaded state slot, from the
+    AOT shardings (`shard_shape` of every HostPlane chunk)."""
+    if slot_sds is None:
+        return 0
+    h_sds = [t for t in jax.tree.leaves(slot_sds, is_leaf=_is_plane) if isinstance(t, off.HostPlane)]
+    h_sh = [t for t in jax.tree.leaves(slot_sh, is_leaf=_is_plane) if isinstance(t, off.HostPlane)]
+    total = 0
+    for hp, hs in zip(h_sds, h_sh):
+        for chunk, sharding in zip(hp.chunks, hs.chunks):
+            total += int(np.prod(sharding.shard_shape(chunk.shape)) * chunk.dtype.itemsize)
+    return total
+
+
+def _staging_bytes_per_device(slot_sds, slot_sh) -> int:
+    """Per-device double-buffer staging footprint: two in-flight device
+    chunks (applied + prefetched) per state plane per bucket — the bound the
+    jaxpr regression in tests/test_offload.py pins."""
+    h_sds = [t for t in jax.tree.leaves(slot_sds, is_leaf=_is_plane) if isinstance(t, off.HostPlane)]
+    h_sh = [t for t in jax.tree.leaves(slot_sh, is_leaf=_is_plane) if isinstance(t, off.HostPlane)]
+    total = 0
+    for hp, hs in zip(h_sds, h_sh):
+        for chunk, sharding in zip(hp.chunks, hs.chunks):
+            ss = sharding.shard_shape(chunk.shape)
+            total += 2 * int(np.prod(ss[1:]) * chunk.dtype.itemsize)
+    return total
+
+
+def _offload_meta(state_sds, state_sh, tau: int) -> dict:
+    """Static offload-plan block for the dry-run JSON: what lives on the
+    host between boundaries (per device), the chunk grid the stream walks,
+    and the bytes it must move per round. Bandwidth/overlap terms are
+    attached later by run_pair (measured, not static)."""
+    plan = off.plan_of(state_sds.opt)
+    if plan is None:
+        return dict(enabled=False, reason="optimizer/plane not offload-capable")
+    layout = state_sds.x.layout
+    per_slot = dict(
+        opt=_host_bytes_per_device(state_sds.opt, state_sh.opt),
+        vars=_host_bytes_per_device(state_sds.vars, state_sh.vars),
+        inflight=_host_bytes_per_device(state_sds.inflight, state_sh.inflight),
+    )
+    # opt state round-trips (H2D + D2H) once per local step inside the
+    # τ-scan; anchor-shaped slots round-trip once per round at the boundary
+    stream_pd = tau * 2 * per_slot["opt"] + 2 * (per_slot["vars"] + per_slot["inflight"])
+    return dict(
+        enabled=True,
+        memory_kind=off.host_memory_kind() or "unpinned_host",
+        buckets=[
+            dict(dtype=d, elements=int(n), chunk_elems=int(c), num_chunks=int(k))
+            for d, n, c, k in zip(
+                layout.bucket_dtypes, layout.bucket_sizes, plan.chunk_elems, plan.num_chunks
+            )
+        ],
+        host_bytes_per_device=int(sum(per_slot.values())),
+        host_bytes_per_device_by_slot=per_slot,
+        staging_bytes_per_device=_staging_bytes_per_device(state_sds.opt, state_sh.opt),
+        stream_bytes_per_round_per_device=int(stream_pd),
+    )
+
+
+def _maybe_enable_x64(cfg) -> None:
+    """>100B-param archs overflow the packed plane's int32 index range
+    (>2^31 elements in one dtype bucket); pack() then requires int64
+    indices. Flipped process-wide — the dry-run CLI owns its process."""
+    if jax.config.jax_enable_x64:
+        return
+    sds, _ = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+    per = {}
+    for s in jax.tree.leaves(sds):
+        per[str(s.dtype)] = per.get(str(s.dtype), 0) + int(np.prod(s.shape))
+    if max(per.values(), default=0) > np.iinfo(np.int32).max:
+        jax.config.update("jax_enable_x64", True)
+        print("   (jax_enable_x64: a packed bucket exceeds the int32 index range)")
+
+
+def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: int = 2, opt: bool = False, strategy: str = None, faults: str = None, topology: str = None, offload: bool = False):
     """Returns (lowered, meta) for one (arch × shape × mesh).
 
     ``faults`` (a :meth:`repro.fault.plan.FaultPlan.parse` spec) lowers the
@@ -120,7 +226,10 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: in
             # native two-phase lowering: the same AlgoConfig → make_strategy
             # resolution Experiment.build() runs (w=1 degenerates to
             # local_sgd — see DESIGN.md §Arch-applicability)
-            strat = resolve_strategy(specs.train_algo_config(plan, strategy, tau, topology=topology))
+            _maybe_enable_x64(cfg)
+            strat = resolve_strategy(
+                specs.train_algo_config(plan, strategy, tau, topology=topology, offload=offload)
+            )
             tau = strat.tau  # sync-style strategies pin τ = 1
             meta["strategy"] = strat.name
             meta["tau"] = tau
@@ -132,6 +241,8 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: in
                 cfg, plan, strat, optimizer, lmesh, rules, with_membership=faults is not None
             )
             meta["plane"] = plane_meta(state_sds)
+            if offload:
+                meta["offload"] = _offload_meta(state_sds, state_sh, tau)
             batch_sds = specs.train_batch_specs(cfg, shape, plan, tau)
             batch_sh = specs.batch_shardings(batch_sds, lmesh, rules)
 
@@ -202,6 +313,50 @@ def active_params(cfg) -> int:
     return total
 
 
+def _memory_block(mem, meta: dict, hbm_gb: float) -> dict:
+    """Per-device memory accounting against a configurable HBM budget.
+
+    ``fits_hbm`` answers the question the offload plane controls: does the
+    *device-resident steady-state* — program arguments (params/opt/anchor
+    planes, batch, membership) minus the host-offloaded bytes, plus the
+    double-buffer staging chunks — fit the budget.  All sizes from
+    ``memory_analysis`` are per device (the compiler reports one shard's
+    footprint).  Two deliberate exclusions/conventions:
+
+    * ``temp_bytes`` (activation workspace) is reported raw but NOT counted
+      against the budget: the host-backend lowering performs no remat (and
+      logs involuntary full-remat broadcasts), so its temp accounting is
+      orders of magnitude above what the rematerialized accelerator
+      program holds live — see the host-mesh remat caveat in
+      EXPERIMENTS.md.  Activation residency is governed by remat policy
+      and microbatch size, orthogonal to state residency.
+    * the budget is binary-sized: an "80GB" HBM part holds 80 GiB
+      (85.9e9 bytes), so ``--hbm-gb 80`` means ``80 * 2**30`` bytes.
+
+    ``fits_hbm_16g`` keeps the old arg+temp-vs-16e9 semantics for one
+    release for older budget-diff tooling — ``fits_hbm`` +
+    ``hbm_budget_gb`` is the keyed field."""
+    peak = mem.argument_size_in_bytes + mem.temp_size_in_bytes
+    ob = meta.get("offload", {})
+    host_pd = ob.get("host_bytes_per_device", 0)
+    staging_pd = ob.get("staging_bytes_per_device", 0)
+    resident = mem.argument_size_in_bytes - host_pd + staging_pd
+    budget = hbm_gb * 2**30
+    return dict(
+        argument_bytes=mem.argument_size_in_bytes,
+        output_bytes=mem.output_size_in_bytes,
+        temp_bytes=mem.temp_size_in_bytes,
+        alias_bytes=mem.alias_size_in_bytes,
+        peak_per_device=peak,
+        host_offloaded_bytes_per_device=int(host_pd),
+        device_resident_bytes_per_device=int(resident),
+        hbm_budget_gb=float(hbm_gb),
+        hbm_budget_bytes=int(budget),
+        fits_hbm=bool(resident <= budget),
+        fits_hbm_16g=bool(peak <= 16e9),  # deprecated: use fits_hbm + hbm_budget_gb
+    )
+
+
 def run_pair(
     arch_name: str,
     shape_name: str,
@@ -213,10 +368,13 @@ def run_pair(
     strategy: str = None,
     faults: str = None,
     topology: str = None,
+    offload: bool = False,
+    hbm_gb: float = 16.0,
 ):
     t0 = time.time()
     lowered, meta, cfg = lower_pair(
-        arch_name, shape_name, multi_pod, opt=opt, strategy=strategy, faults=faults, topology=topology
+        arch_name, shape_name, multi_pod, opt=opt, strategy=strategy, faults=faults,
+        topology=topology, offload=offload,
     )
     t_lower = time.time() - t0
     t0 = time.time()
@@ -244,13 +402,32 @@ def run_pair(
         lmesh = _lm(prod_mesh, plan)
         rules = specs.optimized_rules(shape) if opt else specs.rules_for(shape)
         t0 = time.time()
-        composed = costprobe.composed_cost(arch, shape, lmesh, plan, rules, strategy=meta.get("strategy"))
+        composed = costprobe.composed_cost(
+            arch, shape, lmesh, plan, rules, strategy=meta.get("strategy"),
+            offload_stream_bytes=meta.get("offload", {}).get("stream_bytes_per_round_per_device"),
+        )
         composed["probe_s"] = round(time.time() - t0, 1)
         roof = rl.Roofline(
             flops=composed["flops"],
             bytes_accessed=composed["bytes"],
             collective_bytes=composed["coll"],
             collectives=roof_sched.collectives,
+        )
+
+    # measured host-link bandwidth + overlap schedule for the offload plane:
+    # is the stream hidden inside the τ-step window? (DESIGN.md §9)
+    if meta.get("offload", {}).get("enabled"):
+        from repro.core.runtime_model import offload_schedule
+        from repro.launch.costprobe import measure_host_bandwidth
+
+        bw = measure_host_bandwidth()
+        t_step = max(roof.compute_s, roof.memory_s) / max(meta["tau"], 1)
+        meta["offload"]["bandwidth"] = bw
+        meta["offload"]["schedule"] = offload_schedule(
+            meta["offload"]["stream_bytes_per_round_per_device"],
+            min(bw["d2h_gbps"], bw["h2d_gbps"]),
+            meta["tau"],
+            t_step,
         )
 
     n_active = active_params(cfg)
@@ -300,14 +477,7 @@ def run_pair(
         n_active_params=n_active,
         model_flops_per_device=mflops_per_dev,
         useful_flops_ratio=(mflops_per_dev / roof.flops) if roof.flops else None,
-        memory=dict(
-            argument_bytes=mem.argument_size_in_bytes,
-            output_bytes=mem.output_size_in_bytes,
-            temp_bytes=mem.temp_size_in_bytes,
-            alias_bytes=mem.alias_size_in_bytes,
-            peak_per_device=mem.argument_size_in_bytes + mem.temp_size_in_bytes,
-            fits_hbm_16g=bool(mem.argument_size_in_bytes + mem.temp_size_in_bytes <= 16e9),
-        ),
+        memory=_memory_block(mem, meta, hbm_gb),
         roofline=roof.as_dict(),
         schedule_view=roof_sched.as_dict(),
         composed=composed,
@@ -341,6 +511,20 @@ def run_pair(
                 f"   faults: {degraded_rounds['degraded']}/{degraded_rounds['rounds']} degraded rounds, "
                 f"{n_holds} fault_hold tau decisions"
             )
+        if meta.get("offload", {}).get("enabled"):
+            ob = meta["offload"]
+            sched_blk = ob["schedule"]
+            print(
+                f"   offload: host/device {ob['host_bytes_per_device']/1e9:.2f}GB off, "
+                f"stream {sched_blk['stream_s']*1e3:.2f}ms vs window {sched_blk['window_s']*1e3:.2f}ms "
+                f"-> exposed {sched_blk['exposed_s']*1e3:.2f}ms (breakeven tau {sched_blk['breakeven_tau']})"
+            )
+            mb = result["memory"]
+            print(
+                f"   hbm: resident {mb['device_resident_bytes_per_device']/1e9:.2f}GB of "
+                f"{mb['hbm_budget_gb']:.0f}GiB budget -> fits_hbm={mb['fits_hbm']} "
+                f"(temp {mb['temp_bytes']/1e9:.0f}GB excluded: host lowering has no remat)"
+            )
         print(f"   collective schedule: {roof_sched.collectives}")
         print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s probes {composed['probe_s'] if composed else 0}s")
     if out_dir:
@@ -356,6 +540,8 @@ def run_pair(
             # the membership-carrying lowering is a different program; keep
             # the baseline JSONs (and their budget comparisons) untouched
             tag += "_faults"
+        if offload and "strategy" in meta:
+            tag += "_offload"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(result, f, indent=2, default=str)
     return result
@@ -390,6 +576,20 @@ def main() -> None:
         "'crash:1@2-5,slow:2x4'): lowers the membership-masked round program and records "
         "the degraded_rounds schedule + fault_hold tau decisions (DESIGN.md §7)",
     )
+    ap.add_argument(
+        "--offload",
+        action="store_true",
+        help="lower the host-offloaded round program (AlgoConfig.offload): opt state and "
+        "anchor-shaped slots live host-side between boundaries and stream through the "
+        "τ-step window (DESIGN.md §9); JSON gains the offload schedule block",
+    )
+    ap.add_argument(
+        "--hbm-gb",
+        type=float,
+        default=16.0,
+        help="per-device HBM budget for the memory block's fits_hbm field "
+        "(binary-sized, as HBM parts are: 80 means 80 GiB)",
+    )
     ap.add_argument("--no-probes", action="store_true", help="skip the scan-corrected component probes (faster smoke)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", type=str, default="experiments/dryrun")
@@ -415,6 +615,8 @@ def main() -> None:
                 faults=args.faults,
                 topology=args.topology,
                 with_probes=not args.no_probes,
+                offload=args.offload,
+                hbm_gb=args.hbm_gb,
             )
         except Exception as e:  # noqa: BLE001
             failures.append((a, s, repr(e)))

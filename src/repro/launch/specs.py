@@ -25,6 +25,7 @@ from repro.config.base import AlgoConfig, ArchConfig, InputShape, ModelConfig, O
 from repro.core.strategy import AlgoVars, CommStrategy, PACKED_STACKED_AXES, _stacked_axes
 from repro.models import transformer as T
 from repro.optim import optimizers as opt_mod
+from repro.parallel import offload as off
 from repro.parallel import packing as pk
 from repro.parallel import sharding as sh
 from repro.training.train_state import TrainState
@@ -94,19 +95,27 @@ def default_train_strategy(plan: ParallelPlan) -> str:
 
 
 def train_algo_config(
-    plan: ParallelPlan, strategy: Optional[str] = None, tau: int = 2, topology: Optional[str] = None
+    plan: ParallelPlan,
+    strategy: Optional[str] = None,
+    tau: int = 2,
+    topology: Optional[str] = None,
+    offload: bool = False,
+    offload_chunk_mb: Optional[float] = None,
 ) -> AlgoConfig:
     """The AlgoConfig the production lowering trains with (dry-run and cost
     probes resolve it through ``repro.api.resolve_strategy``, the exact
     chain ``Experiment`` uses). ``topology`` selects the gossip mixing-matrix
     family for ``gossip_pushsum`` (fixed-topology registry names like
-    ``gossip_ring`` override it); other strategies ignore it."""
+    ``gossip_ring`` override it); other strategies ignore it. ``offload``
+    turns on the host-offloaded state plane (DESIGN.md §9)."""
     return AlgoConfig(
         name=strategy or default_train_strategy(plan),
         tau=tau,
         alpha=0.6,
         anchor_beta=0.7,
         topology=topology or "full",
+        offload=offload,
+        offload_chunk_mb=float(offload_chunk_mb if offload_chunk_mb is not None else off.DEFAULT_CHUNK_MB),
     )
 
 
@@ -256,6 +265,36 @@ def strategy_state_specs(cfg: ModelConfig, plan: ParallelPlan, strategy: CommStr
     return (x_sds, x_sh), (vars_sds, vars_sh), (inflight_sds, inflight_sh), axes
 
 
+def _offload_state_shardings(host_sds, dev_sds, dev_sh, mesh: Mesh):
+    """Shardings for a host-offloaded state slot: chunked HostPlane leaves
+    (one extra leading chunk axis vs their device form) keep the device
+    plane's spec per chunk with the chunk axis replicated, placed in the
+    backend's host memory space when it has one (``pinned_host`` on TPU —
+    advisory on single-memory backends, where the spec alone is emitted).
+    Untouched leaves (scalars, masks) keep their device shardings."""
+    hk = off.host_memory_kind()
+    kw = {"memory_kind": hk} if hk else {}
+    h_leaves, tdef = jax.tree_util.tree_flatten(host_sds)
+    d_leaves = jax.tree_util.tree_leaves(dev_sds)
+    s_leaves = jax.tree_util.tree_leaves(dev_sh)
+    out = []
+    for h, d, s in zip(h_leaves, d_leaves, s_leaves):
+        if len(h.shape) == len(d.shape) + 1:  # chunked: (C,) + lead + (c,)
+            spec = sh.fit_spec(P(None, *tuple(s.spec)), h.shape, mesh)
+            out.append(NamedSharding(mesh, spec, **kw))
+        else:
+            out.append(s)
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def _offload_slot(slot_sds, slot_sh, plan: off.OffloadPlan, mesh: Mesh):
+    """(sds, shardings) of one state slot in its host-offloaded form."""
+    if slot_sds is None:
+        return None, None
+    host_sds = jax.eval_shape(lambda t: off.tree_offload(t, plan), slot_sds)
+    return host_sds, _offload_state_shardings(host_sds, slot_sds, slot_sh, mesh)
+
+
 def membership_specs(plan: ParallelPlan, mesh: Mesh):
     """Abstract :class:`repro.fault.membership.Membership` + shardings: two
     (m,) f32 vectors, replicated — every device needs the full mask for the
@@ -285,6 +324,20 @@ def train_state_specs(cfg: ModelConfig, plan: ParallelPlan, algo, optimizer, mes
             cfg, plan, algo, mesh, rules, packed_x=plane_resident
         )
         opt_sds, opt_sh = opt_state_specs(optimizer, strategy_packed, x_sds, x_sh, mesh, rules)
+        if (
+            plane_resident
+            and bool(getattr(algo.cfg, "offload", False))
+            and opt_mod.offload_capable(optimizer)
+        ):
+            # AlgoConfig.offload: between boundaries the opt state and
+            # anchor/inflight buckets are chunked HostPlanes — mirror
+            # make_train_state so the lowered round program's input state
+            # is the host-resident form (DESIGN.md §9)
+            chunk_mb = float(getattr(algo.cfg, "offload_chunk_mb", off.DEFAULT_CHUNK_MB))
+            oplan = off.OffloadPlan.for_layout(x_sds.layout, chunk_mb)
+            opt_sds, opt_sh = _offload_slot(opt_sds, opt_sh, oplan, mesh)
+            vars_sds, vars_sh = _offload_slot(vars_sds, vars_sh, oplan, mesh)
+            inflight_sds, inflight_sh = _offload_slot(inflight_sds, inflight_sh, oplan, mesh)
     else:
         params_sds, axes = T.init_model(cfg, jax.random.PRNGKey(0), abstract=True)
         m = plan.workers

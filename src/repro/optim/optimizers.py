@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.config.base import OptimizerConfig
 from repro.kernels.opt_step import ops as opt_ops
+from repro.parallel import offload
 from repro.parallel.packing import Packed, buffer_map, packed_like, view_leaf
 
 
@@ -65,11 +66,28 @@ class Optimizer:
     #   step_packed(state, px: Packed, pg: Packed, lr) -> (state, px_new)
     init_packed: Optional[Callable] = None
     step_packed: Optional[Callable] = None
+    # host-offload variant (None = resident only): same update as
+    # step_packed but with the state planes host-resident as HostPlanes,
+    # streamed chunk-by-chunk through offload.streamed_update:
+    #   step_streamed(state, px: Packed, pg: Packed, lr) -> (state, px_new)
+    step_streamed: Optional[Callable] = None
 
 
 def packed_capable(opt: Optimizer) -> bool:
     """Whether ``opt`` supports the packed local-step path."""
     return opt.init_packed is not None and opt.step_packed is not None
+
+
+def offload_capable(opt: Optimizer) -> bool:
+    """Whether ``opt`` supports the host-offloaded streamed local step."""
+    return packed_capable(opt) and opt.step_streamed is not None
+
+
+def offload_state(state, plan: offload.OffloadPlan):
+    """Host-offload a packed opt state: every ``Packed`` plane becomes a
+    chunked :class:`~repro.parallel.offload.HostPlane`; scalars (the Adam
+    count) stay device-resident."""
+    return offload.tree_offload(state, plan)
 
 
 def _apply_weight_decay(grads, params, wd):
@@ -104,7 +122,26 @@ def sgd(momentum: float = 0.9, nesterov: bool = True, weight_decay: float = 0.0)
         m_new = Packed(tuple(o[1] for o in outs), state.momentum.layout)
         return PackedSGDState(momentum=m_new), px_new
 
-    return Optimizer(init=init, step=step, init_packed=init_packed, step_packed=step_packed)
+    def step_streamed(state: PackedSGDState, px: Packed, pg: Packed, lr):
+        # same fused kernel as step_packed, applied per chunk: sgd_step is
+        # elementwise, so the chunked walk is bitwise-identical to the
+        # whole-bucket sweep (the zero-padded tail maps to zero and is
+        # dropped on unchunk)
+        def apply_chunk(x_c, g_c, m_c):
+            return opt_ops.sgd_step(
+                x_c, g_c, m_c, lr, momentum=momentum, nesterov=nesterov, weight_decay=weight_decay
+            )
+
+        px_new, (m_new,) = offload.streamed_update(apply_chunk, (state.momentum,), px, pg)
+        return PackedSGDState(momentum=m_new), px_new
+
+    return Optimizer(
+        init=init,
+        step=step,
+        init_packed=init_packed,
+        step_packed=step_packed,
+        step_streamed=step_streamed,
+    )
 
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
@@ -153,7 +190,30 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: fl
         nu_new = Packed(tuple(o[2] for o in outs), state.nu.layout)
         return PackedAdamState(mu=mu_new, nu=nu_new, count=count), px_new
 
-    return Optimizer(init=init, step=step, init_packed=init_packed, step_packed=step_packed)
+    def step_streamed(state: PackedAdamState, px: Packed, pg: Packed, lr):
+        count = state.count + 1
+        # bias corrections stay scalar, once per step, OUTSIDE the chunk
+        # scan — identical values to step_packed
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def apply_chunk(x_c, g_c, mu_c, nu_c):
+            return opt_ops.adamw_step(
+                x_c, g_c, mu_c, nu_c, lr, c1, c2, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay
+            )
+
+        px_new, (mu_new, nu_new) = offload.streamed_update(
+            apply_chunk, (state.mu, state.nu), px, pg
+        )
+        return PackedAdamState(mu=mu_new, nu=nu_new, count=count), px_new
+
+    return Optimizer(
+        init=init,
+        step=step,
+        init_packed=init_packed,
+        step_packed=step_packed,
+        step_streamed=step_streamed,
+    )
 
 
 def global_norm(tree) -> jnp.ndarray:

@@ -69,8 +69,10 @@ from repro.optim.optimizers import (
     Optimizer,
     clip_by_global_norm,
     clip_packed_by_global_norm,
+    offload_capable,
     packed_capable,
 )
+from repro.parallel import offload as off
 from repro.parallel.packing import Packed, ParamView, pack
 from repro.training.train_state import TrainState
 
@@ -96,6 +98,16 @@ def make_round_step(
     # straight into the packed gradient hook + fused optimizer launch
     packed_step = strategy.packed and packed_capable(optimizer)
     packed_clip = packed_step and bool(getattr(strategy.cfg, "packed_clip", False))
+    # host-offloaded state (AlgoConfig.offload): opt/anchor/inflight buckets
+    # are HostPlanes between boundaries; the opt update streams them through
+    # the double buffer each local step, anchor-shaped state round-trips
+    # whole-plane at the window edges (DESIGN.md §9)
+    offload_on = bool(getattr(strategy.cfg, "offload", False))
+    if offload_on and not packed_step:
+        raise ValueError("AlgoConfig.offload requires a packed strategy and a packed-capable optimizer")
+    if offload_on and not offload_capable(optimizer):
+        raise ValueError("AlgoConfig.offload requires an optimizer with a streamed step (step_streamed)")
+    offload_chunk_mb = float(getattr(strategy.cfg, "offload_chunk_mb", off.DEFAULT_CHUNK_MB))
     if packed_step:
         # differentiate with the STACKED plane as the primal: materialize
         # the worker-stacked view once (a single read_windows site), vmap
@@ -160,7 +172,12 @@ def make_round_step(
                     grads = jax.vmap(lambda g: clip_by_global_norm(g, grad_clip)[0])(grads)
             if packed_step:
                 pg, vars = strategy.transform_grads_packed(grads, vars)
-                opt, x = optimizer.step_packed(opt, x, pg, lr)
+                if offload_on:
+                    # streamed update: the host-resident state buckets walk
+                    # through the two device staging chunks per bucket
+                    opt, x = optimizer.step_streamed(opt, x, pg, lr)
+                else:
+                    opt, x = optimizer.step_packed(opt, x, pg, lr)
                 x = strategy.local_post_update_packed(x, vars, inflight, k_in_round)
             else:
                 grads, vars = strategy.transform_grads(grads, vars)
@@ -175,11 +192,31 @@ def make_round_step(
             # migration path for states built (or restored) per-leaf: the
             # first round adopts the plane; from then on x stays resident
             x0 = pack(x0, lead=1)
+        opt0, vars0 = state.opt, state.vars
+        plan = None
+        if offload_on:
+            plan = off.plan_of(opt0)
+            if plan is None:
+                # adoption: a resident state entering the offloaded engine
+                plan = off.OffloadPlan.for_layout(x0.layout, offload_chunk_mb)
+                opt0 = off.tree_offload(opt0, plan)
+            # prefetch (H2D) of the anchor-shaped state: vars ride the scan
+            # carry, so they restore up front; the inflight slot restores up
+            # front only for mid-round consumers (DaSGD) — otherwise right
+            # at the boundary, so its device live range starts at the copy.
+            # Either way the copy has no data dependency on the local scan
+            # and the latency-hiding scheduler overlaps it with the τ steps,
+            # exactly like the collective it rides next to.
+            vars0 = off.tree_restore(vars0)
+            if strategy.consumes_inflight_midround:
+                inflight = off.tree_restore(inflight)
         (x, opt, vars, step), metrics = jax.lax.scan(
             local_step,
-            (x0, state.opt, state.vars, state.step),
+            (x0, opt0, vars0, state.step),
             (round_batch, jnp.arange(tau)),
         )
+        if offload_on:
+            inflight = off.tree_restore(inflight)  # no-op when already device-resident
         # apply + launch in one hook: per-leaf strategies run the two phases
         # back to back; packed strategies fuse them over the flat parameter
         # plane (one collective + one kernel launch per boundary) and return
@@ -196,6 +233,12 @@ def make_round_step(
             metrics = dict(metrics, consensus_drift=stats.drift, consensus_scale=stats.scale)
         else:
             x, vars, inflight = strategy.boundary_round(x, vars, inflight, axes_tree, membership=membership)
+        if offload_on:
+            # D2H: the boundary's outputs go back host-resident until the
+            # next window needs them (opt state already streamed back
+            # chunk-by-chunk inside the scan)
+            vars = off.tree_offload(vars, plan)
+            inflight = off.tree_offload(inflight, plan)
         new_state = TrainState(x=x, opt=opt, vars=vars, step=step, inflight=inflight, membership=membership)
         return new_state, metrics
 
@@ -215,7 +258,9 @@ def make_train_fn(
 ):
     """jit'd multi-round step: (state, batches[(R, τ, m, b, ...)]) -> (state, metrics)."""
     round_step = make_round_step(loss_fn, optimizer, strategy, schedule, axes_tree, grad_clip, microbatch)
-    packed_step = as_strategy(strategy).packed and packed_capable(optimizer)
+    strategy_obj = as_strategy(strategy)
+    packed_step = strategy_obj.packed and packed_capable(optimizer)
+    offload_on = packed_step and bool(getattr(strategy_obj.cfg, "offload", False))
 
     def many(state, batches):
         if packed_step and not isinstance(state.x, Packed):
@@ -223,6 +268,17 @@ def make_train_fn(
             # own coercion changes the TrainState structure, which a
             # multi-round lax.scan carry cannot absorb mid-body
             state = state._replace(x=pack(state.x, lead=1))
+        if offload_on and not off.is_offloaded(state.opt):
+            # same structural constraint for a resident state entering the
+            # offloaded engine: adopt the host form before the rounds scan
+            plan = off.OffloadPlan.for_layout(
+                state.x.layout, float(getattr(strategy_obj.cfg, "offload_chunk_mb", off.DEFAULT_CHUNK_MB))
+            )
+            state = state._replace(
+                opt=off.tree_offload(state.opt, plan),
+                vars=off.tree_offload(state.vars, plan),
+                inflight=off.tree_offload(state.inflight, plan),
+            )
         if rounds_per_call == 1:
             rb = jax.tree.map(lambda t: t[0], batches)
             return round_step(state, rb)

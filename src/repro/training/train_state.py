@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.strategy import AlgoVars, CommStrategy, as_strategy
-from repro.optim.optimizers import Optimizer, packed_capable
+from repro.optim.optimizers import Optimizer, offload_capable, packed_capable
+from repro.parallel import offload as off
 from repro.parallel.packing import Packed, pack, unpack
 
 
@@ -69,6 +70,20 @@ def make_train_state(
         opt = jax.vmap(optimizer.init)(x)
     vars = strategy.init_vars(x, axes_tree)
     inflight = strategy.init_inflight(x, vars, axes_tree)
+    if (
+        bool(getattr(strategy.cfg, "offload", False))
+        and isinstance(x, Packed)
+        and offload_capable(optimizer)
+    ):
+        # AlgoConfig.offload: opt state and anchor-shaped slots start (and
+        # stay, between boundaries) host-resident as chunked HostPlanes —
+        # the engine streams them through the window (DESIGN.md §9)
+        plan = off.OffloadPlan.for_layout(
+            x.layout, float(getattr(strategy.cfg, "offload_chunk_mb", off.DEFAULT_CHUNK_MB))
+        )
+        opt = off.tree_offload(opt, plan)
+        vars = off.tree_offload(vars, plan)
+        inflight = off.tree_offload(inflight, plan)
     return TrainState(x=x, opt=opt, vars=vars, step=jnp.zeros((), jnp.int32), inflight=inflight)
 
 

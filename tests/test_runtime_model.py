@@ -167,3 +167,37 @@ def test_gossip_respects_straggler_locality():
     with pytest.raises(ValueError):
         simulate("gossip_ring", 4, 16, RuntimeConfig(m=4), topology="torus")
     assert set(GOSSIP) == {"gossip_pushsum", "gossip_full", "gossip_ring", "gossip_exp"}
+
+
+def test_offload_schedule_breakeven():
+    """DESIGN.md §9: the offload analogue of the paper's overlap condition —
+    exposed transfer is max(0, stream_s − τ·t_step), zero exactly at
+    breakeven_tau."""
+    from repro.core.runtime_model import offload_schedule
+
+    t_step, gbps = 0.5, 10.0
+    nbytes = 25e9  # stream_s = 2.5 s -> breakeven at τ = 5
+    s = offload_schedule(nbytes, gbps, tau=2, t_step=t_step)
+    assert s["stream_s"] == pytest.approx(2.5) and s["breakeven_tau"] == 5
+    assert s["exposed_s"] == pytest.approx(1.5) and not s["hidden"]
+    s = offload_schedule(nbytes, gbps, tau=5, t_step=t_step)
+    assert s["exposed_s"] == 0.0 and s["hidden"]
+    assert offload_schedule(nbytes, 0.0, 2, t_step)["stream_s"] == float("inf")
+
+
+def test_offload_exposed_transfer_hidden_at_breakeven():
+    """simulate() prices the host stream against each round's compute segment:
+    exposed_transfer > 0 below breakeven τ, exactly 0 at/above it, and the
+    plane-resident run (offload_bytes=0) never pays the term."""
+    base = dict(m=16, t_step=0.19, t_comm=0.0625)
+    cfg = RuntimeConfig(**base, offload_bytes_per_round=7.6e9, offload_gbps=10.0)
+    # stream_s = 0.76 s vs window τ·0.19 -> breakeven τ = 4
+    r2 = simulate("overlap_local_sgd", 2, 64, cfg)
+    assert r2.exposed_transfer > 0
+    r4 = simulate("overlap_local_sgd", 4, 64, cfg)
+    assert r4.exposed_transfer == 0.0
+    assert r4.total_time < r2.total_time + r2.exposed_transfer + 1e-9
+    resident = simulate("overlap_local_sgd", 2, 64, RuntimeConfig(**base))
+    assert resident.exposed_transfer == 0.0
+    # the exposed stream stretches the round segments: total reflects the lag
+    assert r2.total_time > resident.total_time
