@@ -17,6 +17,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # clobber the committed full-mode perf trajectory
 BENCH_JSON = os.path.join(_ROOT, "BENCH_kernels.json")
 BENCH_JSON_QUICK = os.path.join(_ROOT, "BENCH_kernels_quick.json")
+SERVING_JSON = os.path.join(_ROOT, "BENCH_serving.json")
+SERVING_JSON_QUICK = os.path.join(_ROOT, "BENCH_serving_quick.json")
 
 
 def _derived_fields(derived: str) -> dict:
@@ -47,9 +49,9 @@ def write_kernel_json(rows, path: str = None) -> str:
 
 
 def main() -> None:
-    from benchmarks import fig1_error_runtime, fig4_comm_ratio, kernel_bench, roofline_table, table1_iid, table2_noniid, theorem1_rate
+    from benchmarks import fig1_error_runtime, fig4_comm_ratio, kernel_bench, roofline_table, serving_bench, table1_iid, table2_noniid, theorem1_rate
 
-    mods = [kernel_bench, theorem1_rate, fig4_comm_ratio, roofline_table, table1_iid, table2_noniid, fig1_error_runtime]
+    mods = [kernel_bench, serving_bench, theorem1_rate, fig4_comm_ratio, roofline_table, table1_iid, table2_noniid, fig1_error_runtime]
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None, help="run a single benchmark module by name")
     args = ap.parse_args()
@@ -75,6 +77,13 @@ def main() -> None:
                     emit(kernel_bench.csv_row(*r))
                 json_path = write_kernel_json(rows)
                 emit(f"bench/kernel_bench/json,{0:.0f},{json_path}")
+            elif mod is serving_bench:
+                rows = serving_bench.run()
+                for r in rows:
+                    emit(serving_bench.csv_row(*r))
+                quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+                json_path = write_kernel_json(rows, SERVING_JSON_QUICK if quick else SERVING_JSON)
+                emit(f"bench/serving_bench/json,{0:.0f},{json_path}")
             else:
                 mod.main(emit)
             emit(f"bench/{name}/elapsed,{(time.time()-t)*1e6:.0f},ok")

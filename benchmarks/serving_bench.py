@@ -1,0 +1,97 @@
+"""Serving throughput: paged continuous batching vs dense solo decoding.
+
+A seeded synthetic many-user trace (ragged prompt lengths and budgets, all
+requests queued up front) is served two ways over identical params:
+
+* ``serving/paged/<arch>`` — the paged ``BatchedEngine`` (page-pool KV,
+  chunked prefill, joint decode across slots, evict/requeue under pressure);
+* ``serving/dense_solo/<arch>`` — the exactness baseline the engine is
+  pinned against: per-request ``generate`` over a dense cache, one request
+  at a time.
+
+Derived fields: ``tok_s`` (generated tokens per wall-second), ``requests``,
+``speedup`` (paged row only). Persisted to BENCH_serving.json by
+benchmarks/run.py (quick mode → BENCH_serving_quick.json), the measured
+tokens/s row EXPERIMENTS.md §Serving tracks. Numbers are host-CPU: they
+order the engines and size the batching win, they are not accelerator
+throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+ARCHS = ["qwen2-7b"] if QUICK else ["qwen2-7b", "h2o-danube-1.8b", "deepseek-v3-671b"]
+N_REQ = 6 if QUICK else 24
+SLOTS = 4
+MAX_LEN = 64
+
+
+def _trace(vocab: int, n: int):
+    rng = np.random.default_rng(1234)
+    return [
+        (
+            f"r{i}",
+            rng.integers(1, vocab, (int(rng.integers(4, 48)),)).astype(np.int32),
+            int(rng.integers(4, 24)),
+        )
+        for i in range(n)
+    ]
+
+
+def run():
+    from repro.config import get_arch
+    from repro.models import transformer as T
+    from repro.serving import BatchedEngine, generate
+
+    rows = []
+    for arch in ARCHS:
+        cfg = dataclasses.replace(get_arch(arch).model.reduced(), dtype="float32")
+        params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
+        trace = _trace(cfg.vocab_size, N_REQ)
+
+        eng = BatchedEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN, page_size=16, chunk=16)
+        for rid, prompt, mn in trace:
+            eng.submit(rid, prompt, mn)
+        eng.step()  # exclude the two trace compilations (chunk + joint decode)
+        t0 = time.time()
+        res = eng.run()
+        dt_paged = time.time() - t0
+        toks = sum(len(v) for v in res.values())
+
+        generate(cfg, params, jnp.asarray(trace[0][1])[None], 2)  # compile
+        t0 = time.time()
+        solo_toks = 0
+        for rid, prompt, mn in trace:
+            solo_toks += generate(cfg, params, jnp.asarray(prompt)[None], mn).shape[1]
+        dt_solo = time.time() - t0
+
+        tok_s_paged = toks / dt_paged
+        tok_s_solo = solo_toks / dt_solo
+        rows.append(
+            (
+                f"serving/paged/{arch}",
+                dt_paged * 1e6,
+                f"tok_s={tok_s_paged:.1f} requests={len(res)} speedup={tok_s_paged / tok_s_solo:.2f}",
+            )
+        )
+        rows.append(
+            (f"serving/dense_solo/{arch}", dt_solo * 1e6, f"tok_s={tok_s_solo:.1f} requests={len(trace)}")
+        )
+    return rows
+
+
+def csv_row(name, us, derived):
+    return f"{name},{us:.0f},{derived}"
+
+
+def main(emit) -> None:
+    for r in run():
+        emit(csv_row(*r))

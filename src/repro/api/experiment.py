@@ -381,6 +381,35 @@ class Experiment:
             self.build()
         return jax.tree.map(lambda t: t.astype(jnp.float32), consensus_params(self.state))
 
+    def consensus_plane(self):
+        """The consensus model as a packed plane (lead ()): the worker mean
+        of each plane bucket, cast back to the bucket dtype. Plane-resident
+        experiments only — this is what the plane-resident serving engine
+        consumes, and what ``swap_plane`` retargets a live engine at."""
+        from repro.parallel.packing import Packed
+
+        if self.state is None:
+            self.build()
+        x = self.state.x
+        if not isinstance(x, Packed):
+            raise ValueError("consensus_plane() requires a plane-resident (packed) experiment; use consensus()")
+        bufs = tuple(jnp.mean(b.astype(jnp.float32), axis=0).astype(b.dtype) for b in x.buffers)
+        return Packed(bufs, x.layout)
+
+    def anchor_plane(self):
+        """The live anchor plane z (the strategy's slow consensus weights),
+        shared by reference — zero-copy, so serving it reflects exactly the
+        buffers the trainer averages into. Anchor-based packed strategies
+        only."""
+        from repro.parallel.packing import Packed
+
+        if self.state is None:
+            self.build()
+        z = getattr(self.state.vars, "z", None) if self.state.vars is not None else None
+        if not isinstance(z, Packed):
+            raise ValueError("anchor_plane() requires a packed anchor strategy (state.vars.z is the plane)")
+        return z
+
     def evaluate(self, eval_batches: int = 8) -> dict:
         """Evaluate the consensus model: classification → held-out accuracy;
         LM → mean loss on fresh held-out token batches."""
@@ -405,14 +434,21 @@ class Experiment:
 
     # -- serving ------------------------------------------------------------
 
-    def serve(self, slots: int = 4, max_len: int = 256):
-        """Batched generation engine over the fitted consensus params
-        (LM experiments only)."""
+    def serve(self, slots: int = 4, max_len: int = 256, **engine_kw):
+        """Batched generation engine over the fitted consensus params (LM
+        experiments only). Plane-resident experiments are served through the
+        plane directly (no unpack copy) — DESIGN.md §10 — so a later
+        ``engine.swap_plane(exp.anchor_plane())`` hot-swaps a freshly
+        averaged anchor into the running engine between decode steps."""
+        from repro.parallel.packing import Packed
         from repro.serving import BatchedEngine
 
         self.build()
         if self.model_cfg is None:
             raise ValueError("serve() requires an LM experiment (arch=...), not a classification task")
         cfg = self.model_cfg
-        p = jax.tree.map(lambda t: t.astype(cfg.param_dtype), self.consensus())
-        return BatchedEngine(cfg, p, slots=slots, max_len=max_len)
+        if isinstance(self.state.x, Packed):
+            p = self.consensus_plane()
+        else:
+            p = jax.tree.map(lambda t: t.astype(cfg.param_dtype), self.consensus())
+        return BatchedEngine(cfg, p, slots=slots, max_len=max_len, **engine_kw)

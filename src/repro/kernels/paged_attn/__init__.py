@@ -1,0 +1,15 @@
+from repro.kernels.paged_attn.ops import (  # noqa: F401
+    append_targets,
+    paged_append,
+    paged_attend_gqa,
+    paged_attend_mla,
+    paged_gather,
+)
+
+__all__ = [
+    "append_targets",
+    "paged_append",
+    "paged_attend_gqa",
+    "paged_attend_mla",
+    "paged_gather",
+]

@@ -53,7 +53,8 @@ from repro.optim import schedules, sgd  # noqa: E402
 from repro.parallel import logical_mesh, mesh_context  # noqa: E402
 from repro.parallel import offload as off  # noqa: E402
 from repro.parallel.packing import Packed  # noqa: E402
-from repro.serving.engine import decode_step  # noqa: E402
+from repro.serving.engine import decode_step, paged_step  # noqa: E402
+from repro.serving.paged_cache import paged_supported  # noqa: E402
 from repro.training.train_loop import make_round_step  # noqa: E402
 
 
@@ -271,17 +272,37 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool = False, tau: in
             meta["mode"] = "prefill"
         else:  # decode
             params_sds, params_sh, _ = specs.serve_param_specs(cfg, lmesh, rules)
-            cache_sds, cache_sh = specs.decode_cache_specs(cfg, shape, lmesh, rules)
             tok_sds, tok_sh = specs.decode_token_specs(cfg, shape, lmesh, rules)
-            pos_sds = jax.ShapeDtypeStruct((), np.int32)
+            # paged decode for attention-family text archs — except long_500k,
+            # whose rules shard the cache sequence axis: a page-table gather
+            # over a sequence-sharded pool would all-gather the pool, so the
+            # long-context shape keeps the dense sequence-sharded cache
+            use_paged = paged_supported(cfg) and shape.name != "long_500k"
+            if use_paged:
+                pools_sds, pools_sh, pt_sds, len_sds, rep, info = specs.paged_decode_specs(
+                    cfg, shape, lmesh, rules
+                )
 
-            def serve_fn(p, toks, caches, pos):
-                return decode_step(cfg, p, toks, caches, pos)
+                def paged_fn(p, toks, pools, pt, lens):
+                    return paged_step(cfg, p, toks, pools, pt, lens)
 
-            lowered = jax.jit(
-                serve_fn,
-                in_shardings=(params_sh, tok_sh, cache_sh, None),
-            ).lower(params_sds, tok_sds, cache_sds, pos_sds)
+                lowered = jax.jit(
+                    paged_fn,
+                    in_shardings=(params_sh, tok_sh, pools_sh, rep, rep),
+                ).lower(params_sds, tok_sds, pools_sds, pt_sds, len_sds)
+                meta["serving"] = dict(engine="paged", **info)
+            else:
+                cache_sds, cache_sh = specs.decode_cache_specs(cfg, shape, lmesh, rules)
+                pos_sds = jax.ShapeDtypeStruct((), np.int32)
+
+                def serve_fn(p, toks, caches, pos):
+                    return decode_step(cfg, p, toks, caches, pos)
+
+                lowered = jax.jit(
+                    serve_fn,
+                    in_shardings=(params_sh, tok_sh, cache_sh, None),
+                ).lower(params_sds, tok_sds, cache_sds, pos_sds)
+                meta["serving"] = dict(engine="dense")
             meta["tokens_per_program"] = shape.global_batch
             meta["mode"] = "decode"
     return lowered, meta, cfg

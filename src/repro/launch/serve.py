@@ -21,6 +21,7 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -30,7 +31,9 @@ def main() -> None:
         print("note: serving launcher demo covers text archs; "
               "VLM/audio serving paths are exercised in tests/test_serving.py")
     params, _ = T.init_model(cfg, jax.random.PRNGKey(0))
-    eng = BatchedEngine(cfg, params, slots=args.slots)
+    eng = BatchedEngine(cfg, params, slots=args.slots, page_size=args.page_size)
+    kind = f"paged (page_size={eng.page_size}, pool={eng.num_pages} pages)" if eng.paged else "dense fallback"
+    print(f"engine: {kind}")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(f"req-{i}", rng.integers(0, cfg.vocab_size, (4 + i % 5,)).astype(np.int32), args.max_new)

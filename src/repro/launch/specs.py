@@ -431,6 +431,12 @@ def cache_tree_shardings(caches, mesh: Mesh, rules: dict):
         if name in ("ckv", "krope"):  # (n?, B, L, r)
             lead = (None,) * (nd - 3)
             return P(*lead, b_ax, s_ax, None)
+        if name in ("pool_k", "pool_v"):  # (n?, P, page, kvh, hd) — shared pool:
+            lead = (None,) * (nd - 4)  # pages data-sharded, heads tensor-sharded
+            return P(*lead, b_ax, None, t_ax, None)
+        if name in ("pool_ckv", "pool_krope"):  # (n?, P, page, r)
+            lead = (None,) * (nd - 3)
+            return P(*lead, b_ax, None, None)
         if name == "ssd_state":  # (n?, B, H, P, N)
             lead = (None,) * (nd - 4)
             return P(*lead, b_ax, t_ax, None, None)
@@ -453,6 +459,32 @@ def cache_tree_shardings(caches, mesh: Mesh, rules: dict):
         shardings.append(NamedSharding(mesh, spec))
     _, tdef = jax.tree_util.tree_flatten(caches)
     return caches, jax.tree_util.tree_unflatten(tdef, shardings)
+
+
+def paged_decode_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, rules: dict, page_size: int = 128):
+    """Abstract paged pools + page-table/length operands for the paged decode
+    lowering (DESIGN.md §10). Pool sized for full residency of every slot
+    (one trash page extra); pages spread over the data axes, heads over
+    tensor. Page tables and lengths are tiny int32 host-produced operands —
+    replicated."""
+    from repro.serving.paged_cache import init_paged_pools, pages_for
+
+    maxp = pages_for(shape.seq_len, page_size)
+    num_pages = shape.global_batch * maxp + 1
+    pools_sds = jax.eval_shape(
+        lambda: init_paged_pools(cfg, num_pages, page_size, cfg.param_dtype)
+    )
+    pools_sds, pools_sh = cache_tree_shardings(pools_sds, mesh, rules)
+    pt_sds = _sds((shape.global_batch, maxp), jnp.int32)
+    len_sds = _sds((shape.global_batch,), jnp.int32)
+    rep = NamedSharding(mesh, P())
+    info = dict(
+        page_size=page_size,
+        num_pages=num_pages,
+        max_pages_per_slot=maxp,
+        pool_bytes=int(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(pools_sds))),
+    )
+    return pools_sds, pools_sh, pt_sds, len_sds, rep, info
 
 
 def decode_token_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, rules: dict):

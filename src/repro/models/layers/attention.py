@@ -21,6 +21,7 @@ from repro.config.base import AttentionConfig
 from repro.kernels import flags as kflags
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.paged_attn import ops as pa_ops
 from repro.models.layers import rope as rope_mod
 from repro.models.layers.norms import init_rmsnorm, rmsnorm
 from repro.parallel import constrain
@@ -93,6 +94,7 @@ def gqa_apply(
     cache: Optional[dict] = None,
     eps: float = 1e-5,
     qk_norm_params=None,
+    paged=None,  # serving.paged_cache.PagedState — paged-pool decode
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     q, k, v = _project_qkv(params, cfg, x)
     if qk_norm_params is not None:
@@ -112,10 +114,18 @@ def gqa_apply(
         new_cache = _init_cache_from_prefill(k, v, window)
     elif mode == "decode":
         assert cache is not None
-        k_all, v_all, positions, pos = _cache_append(cache, k, v, window)
-        out = _decode_attend(q, k_all, v_all, positions=positions, pos=pos, window=window)
-        new_cache = dict(cache)
-        new_cache.update(k=k_all, v=v_all, positions=positions, pos=pos + 1)
+        if paged is not None and "pool_k" in cache:
+            pool_k = pa_ops.paged_append(cache["pool_k"], k, paged.page_tables, paged.lengths)
+            pool_v = pa_ops.paged_append(cache["pool_v"], v, paged.page_tables, paged.lengths)
+            out = pa_ops.paged_attend_gqa(
+                q, pool_k, pool_v, paged.page_tables, paged.lengths, window=window
+            )
+            new_cache = dict(pool_k=pool_k, pool_v=pool_v)
+        else:
+            k_all, v_all, positions, pos = _cache_append(cache, k, v, window)
+            out = _decode_attend(q, k_all, v_all, positions=positions, pos=pos, window=window)
+            new_cache = dict(cache)
+            new_cache.update(k=k_all, v=v_all, positions=positions, pos=pos + 1)
     else:
         raise ValueError(mode)
 
@@ -263,6 +273,7 @@ def mla_apply(
     mode: str = "train",
     cache: Optional[dict] = None,
     eps: float = 1e-5,
+    paged=None,  # serving.paged_cache.PagedState — paged-pool decode
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     b_, s, _ = x.shape
     h = cfg.num_heads
@@ -297,6 +308,20 @@ def mla_apply(
         new_cache = None
         if mode == "prefill":
             new_cache = dict(ckv=ckv, krope=k_rope[:, :, 0, :], pos=jnp.asarray(s, jnp.int32), kind="mla")
+    elif paged is not None and cache is not None and "pool_ckv" in cache:
+        # paged absorbed decode: latents scatter into the shared page pool
+        pool_ckv = pa_ops.paged_append(cache["pool_ckv"], ckv, paged.page_tables, paged.lengths)
+        pool_kr = pa_ops.paged_append(
+            cache["pool_krope"], k_rope[:, :, 0, :], paged.page_tables, paged.lengths
+        )
+        wuk = params["wuk"].reshape(cfg.kv_lora_rank, h, dn)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wuk)
+        o_lat = pa_ops.paged_attend_mla(
+            q_lat, q_rope, pool_ckv, pool_kr, paged.page_tables, paged.lengths, scale=scale
+        )
+        wuv = params["wuv"].reshape(cfg.kv_lora_rank, h, dv)
+        out = jnp.einsum("bshr,rhk->bshk", o_lat, wuv.astype(jnp.float32))
+        new_cache = dict(pool_ckv=pool_ckv, pool_krope=pool_kr)
     else:  # decode — absorbed formulation: score via the latent cache directly
         assert cache is not None
         pos = cache["pos"]

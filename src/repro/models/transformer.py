@@ -171,18 +171,20 @@ def init_model(cfg: ModelConfig, key, abstract: bool = False) -> Tuple[dict, dic
 # ---------------------------------------------------------------------------
 
 
-def _apply_block(cfg: ModelConfig, kind: str, prm, x, cos, sin, *, mode: str, cache, eps):
+def _apply_block(cfg: ModelConfig, kind: str, prm, x, cos, sin, *, mode: str, cache, eps, paged=None):
     stats = None
     if kind in ("attn", "moe", "shared_attn"):
         a = cfg.attention
         if cfg.use_parallel_block:  # command-r: x + attn(ln(x)) + ffn(ln(x))
             h = layernorm(prm["ln1"], x, eps)
             if a.kind == "mla":
-                y_attn, new_cache = attn_mod.mla_apply(prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps)
+                y_attn, new_cache = attn_mod.mla_apply(
+                    prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps, paged=paged
+                )
             else:
                 y_attn, new_cache = attn_mod.gqa_apply(
                     prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps,
-                    qk_norm_params=prm.get("qknorm"),
+                    qk_norm_params=prm.get("qknorm"), paged=paged,
                 )
             if kind == "moe":
                 y_ffn, stats = moe_mod.moe_apply(prm["ffn"], cfg.moe, h, cfg.act, capacity_factor=0.0 if mode == "train" else 4.0)
@@ -194,11 +196,13 @@ def _apply_block(cfg: ModelConfig, kind: str, prm, x, cos, sin, *, mode: str, ca
         else:
             h = rmsnorm(prm["ln1"], x, eps)
             if a.kind == "mla":
-                y, new_cache = attn_mod.mla_apply(prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps)
+                y, new_cache = attn_mod.mla_apply(
+                    prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps, paged=paged
+                )
             else:
                 y, new_cache = attn_mod.gqa_apply(
                     prm["attn"], a, h, cos, sin, mode=mode, cache=cache, eps=eps,
-                    qk_norm_params=prm.get("qknorm"),
+                    qk_norm_params=prm.get("qknorm"), paged=paged,
                 )
             x = x + y
             h2 = rmsnorm(prm["ln2"], x, eps)
@@ -323,9 +327,12 @@ def apply_model(
     caches: Optional[dict] = None,
     remat: bool = False,
     decode_pos=None,
+    paged=None,  # serving.paged_cache.PagedState — paged-pool decode (DESIGN.md §10)
 ) -> Tuple[jnp.ndarray, dict]:
     """Returns (logits, aux) where aux has 'caches', 'moe_aux', 'loss_mask',
-    'hidden' (pre-head activations, for MTP)."""
+    'hidden' (pre-head activations, for MTP). With ``paged`` set (decode
+    only), per-row token positions come from ``inputs['positions']`` and the
+    attention caches are page pools shared across rows."""
     x, loss_mask = _embed(cfg, params, inputs)
     b_, s = x.shape[0], x.shape[1]
     offset = decode_pos if mode == "decode" else 0
@@ -340,7 +347,7 @@ def apply_model(
         if kind == "shared_attn":
             prm = params["shared_block"]
             cache = caches.get(seg_key) if caches else None
-            x, nc, stats = _apply_block(cfg, kind, prm, x, cos, sin, mode=mode, cache=cache, eps=eps)
+            x, nc, stats = _apply_block(cfg, kind, prm, x, cos, sin, mode=mode, cache=cache, eps=eps, paged=paged)
             if nc is not None:
                 nc.pop("kind", None)
                 new_caches[seg_key] = nc
@@ -352,7 +359,9 @@ def apply_model(
         def body(carry, layer_in, _kind=kind):
             xx, aux = carry
             prm_i, cache_i = layer_in
-            xx, nc, stats = _apply_block(cfg, _kind, prm_i, xx, cos, sin, mode=mode, cache=cache_i, eps=eps)
+            xx, nc, stats = _apply_block(
+                cfg, _kind, prm_i, xx, cos, sin, mode=mode, cache=cache_i, eps=eps, paged=paged
+            )
             if stats is not None:
                 aux = aux + stats["aux_loss"]
             if nc is not None:

@@ -1,3 +1,34 @@
-from repro.serving.engine import BatchedEngine, decode_step, generate, prefill
+from repro.serving.engine import (
+    BatchedEngine,
+    decode_step,
+    generate,
+    hot_swap,
+    paged_step,
+    prefill,
+)
+from repro.serving.paged_cache import (
+    PageAllocator,
+    PagedState,
+    init_paged_pools,
+    paged_supported,
+    pages_for,
+    pool_bytes,
+)
+from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["BatchedEngine", "decode_step", "generate", "prefill"]
+__all__ = [
+    "BatchedEngine",
+    "PageAllocator",
+    "PagedState",
+    "Request",
+    "Scheduler",
+    "decode_step",
+    "generate",
+    "hot_swap",
+    "init_paged_pools",
+    "paged_step",
+    "paged_supported",
+    "pages_for",
+    "pool_bytes",
+    "prefill",
+]
